@@ -1,0 +1,42 @@
+"""Fig. 16 — effect of the task-categorized parallelism allocator: per-GPU
+goodput of the EPARA plan vs a no-parallelism deployment (mp=bs=mt=mf=dp=1)
+for each of the four categories.  Paper reports 5.9-12.4x (<=1 GPU freq),
+1.3-2.5x (>1 GPU freq), 2.3-9.1x (<=1 GPU lat), 2.9-4.5x (>1 GPU lat)."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.allocator import ParallelPlan, allocate, plan_goodput
+from repro.core.categories import EDGE_P100
+from repro.simulator.workload import table1_services
+
+from .common import timed
+
+REPRESENTATIVE = {
+    "freq_le1gpu": "mobilenetv2-vid",
+    "freq_gt1gpu": "llama3-70b-hci",
+    "lat_le1gpu": "resnet50-pic",
+    "lat_gt1gpu": "qwen2.5-32b-chat",
+}
+
+
+def run() -> list:
+    rows = []
+    services = table1_services()
+    for label, svc_name in REPRESENTATIVE.items():
+        svc = services[svc_name]
+        (plan, us) = timed(allocate, svc, EDGE_P100)
+        # non-parallelism deployment: the minimum MP that merely FITS the
+        # model (no batching / MT / MF / DP) — Fig. 16's comparison point
+        from repro.core import costmodel as cm
+        naive = dataclasses.replace(plan,
+                                    mp=cm.min_mp_for_vram(svc, EDGE_P100),
+                                    bs=1, mt=1, mf=1, dp=1)
+        g_plan = plan_goodput(svc, EDGE_P100, plan) / max(1, plan.gpus)
+        g_naive = plan_goodput(svc, EDGE_P100, naive) / max(1, naive.gpus)
+        rows.append((f"allocator_effect/{label}", us,
+                     f"{g_plan / max(1e-9, g_naive):.2f}x_per_gpu"))
+        rows.append((f"allocator_effect/{label}/plan", us,
+                     f"mp{plan.mp}.bs{plan.bs}.mt{plan.mt}"
+                     f".mf{plan.mf}.dp{plan.dp}"))
+    return rows

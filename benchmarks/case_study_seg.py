@@ -1,0 +1,40 @@
+"""Fig. 20 / §5.3.4 case study 2 — segmentation models across the four
+categories (Table 2): Unet/DeepLabV3+/SCTNet (<=1 GPU), MaskFormer/OMG-Seg
+(>1 GPU), picture (latency) and 60fps-1080p video (frequency)."""
+from __future__ import annotations
+
+from repro.core.allocator import allocate, plan_goodput
+from repro.core.categories import EDGE_P100, Sensitivity, ServiceSpec
+
+from .common import timed
+
+SEG = {
+    # name: (gflops/frame at 1080p, params M, video?)
+    "unet": (120.0, 31.0, False),
+    "deeplabv3p": (380.0, 62.7, False),
+    "sctnet": (180.0, 17.4, False),
+    "maskformer": (700.0, 10_500.0, False),
+    "omgseg": (1400.0, 19_000.0, False),
+    "unet-vid": (120.0, 31.0, True),
+    "deeplabv3p-vid": (380.0, 62.7, True),
+    "sctnet-vid": (180.0, 17.4, True),
+}
+
+
+def run() -> list:
+    rows = []
+    for name, (gf, pm, vid) in SEG.items():
+        svc = ServiceSpec(
+            name=name, flops_per_request=gf * 1e9,
+            weights_bytes=pm * 2e6, vram_bytes=pm * 2e6 * 2.5 + 2e9,
+            sensitivity=Sensitivity.FREQUENCY if vid
+            else Sensitivity.LATENCY,
+            slo_latency_s=0.2 if vid else 0.8,
+            slo_fps=60.0 if vid else 0.0)
+        plan, us = timed(allocate, svc, EDGE_P100)
+        fps = plan_goodput(svc, EDGE_P100, plan)
+        tag = "fps" if vid else "req_s"
+        rows.append((f"case_seg/{name}", us,
+                     f"mp{plan.mp}.bs{plan.bs}.mf{plan.mf}.dp{plan.dp}"
+                     f"={fps:.0f}{tag}"))
+    return rows

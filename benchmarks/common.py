@@ -1,0 +1,49 @@
+"""Shared benchmark scaffolding: scenario builders + the CSV row format
+(``name,us_per_call,derived``) used by every module."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+from repro.core.categories import EDGE_P100, ServerSpec
+from repro.simulator.engine import SimConfig, Simulation, run_comparison
+from repro.simulator.workload import (WorkloadConfig, generate_requests,
+                                      table1_services)
+
+Row = Tuple[str, float, str]
+
+
+def testbed_scenario(*, servers=6, load=30.0, horizon=40.0, seed=1,
+                     freq_share=0.5, skew=0.7):
+    """The paper's testbed shape: six P100 servers, Table-1 services,
+    Azure-like bursty arrivals at ~saturating load.  ``skew`` routes that
+    fraction of arrivals to the first third of servers — the paper's
+    'abrupt or uneven requests in edge' (this is precisely where
+    state-aware offloading beats blind round-robin)."""
+    import numpy as np
+    services = table1_services()
+    srv = [ServerSpec(sid=i, num_gpus=1, gpu=EDGE_P100)
+           for i in range(servers)]
+    wl = WorkloadConfig(horizon_s=horizon, load_scale=load, seed=seed,
+                        freq_share=freq_share)
+    events = generate_requests(services, servers, wl)
+    if skew:
+        rng = np.random.default_rng(seed + 99)
+        hot = max(1, servers // 3)
+        skewed = []
+        for t, sid, r in events:
+            if rng.random() < skew:
+                sid = int(rng.integers(0, hot))
+            skewed.append((t, sid, r))
+        events = skewed
+    return services, srv, events, SimConfig(horizon_s=horizon)
+
+
+def timed(fn: Callable, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def fmt_rows(rows: List[Row]) -> str:
+    return "\n".join(f"{n},{us:.1f},{d}" for n, us, d in rows)

@@ -1,0 +1,38 @@
+"""Fig. 14 — large-scale goodput vs number of servers (8-GPU servers);
+paper claims 1.5-2.0x (latency), 2.8-3.1x (frequency), 1.6-2.4x (mixed)."""
+from __future__ import annotations
+
+from repro.core.categories import EDGE_P100, ServerSpec
+from repro.simulator.engine import SimConfig, run_comparison
+from repro.simulator.workload import (WorkloadConfig, generate_requests,
+                                      table1_services)
+
+from .common import Row, timed
+
+BASELINES = ["EPARA", "InterEdge", "AlpaServe", "Galaxy", "SERV-P",
+             "USHER", "DeTransformer"]
+
+
+def run() -> list:
+    rows = []
+    services = table1_services()
+    for n in (4, 8, 16):
+        servers = [ServerSpec(sid=i, num_gpus=8, gpu=EDGE_P100)
+                   for i in range(n)]
+        # per-server demand constant as the cluster scales (Fig. 14's
+        # setup); event counts stay linear in n so the Python event loop
+        # remains tractable
+        wl = WorkloadConfig(horizon_s=20.0, load_scale=40.0, seed=2)
+        events = generate_requests(services, n, wl)
+        res, us = timed(run_comparison, servers, services, events,
+                        BASELINES, SimConfig(horizon_s=20.0))
+        ep = res["EPARA"].goodput
+        worst = min(res[b].goodput for b in BASELINES[1:])
+        best = max(res[b].goodput for b in BASELINES[1:])
+        rows.append((f"goodput_scale/n{n}/vs_worst",
+                     us / max(1, len(events)),
+                     f"{ep / max(1e-9, worst):.2f}x"))
+        rows.append((f"goodput_scale/n{n}/vs_best",
+                     us / max(1, len(events)),
+                     f"{ep / max(1e-9, best):.2f}x"))
+    return rows

@@ -1,0 +1,29 @@
+"""Fig. 10/11 — testbed goodput: EPARA vs InterEdge / AlpaServe / Galaxy /
+SERV-P on mixed and frequency-heavy workloads.  Paper claims up to 2.1x /
+2.2x / 2.5x / 3.2x (mixed) and 1.9x / 2.2x / 2.6x / 3.9x (frequency)."""
+from __future__ import annotations
+
+from .common import Row, testbed_scenario, timed
+from repro.simulator.engine import run_comparison
+
+BASELINES = ["EPARA", "InterEdge", "AlpaServe", "Galaxy", "SERV-P"]
+
+
+def run() -> list:
+    rows: list = []
+    for label, freq_share in (("mixed", 0.5), ("frequency", 0.85)):
+        services, servers, events, cfg = testbed_scenario(
+            load=45.0, freq_share=freq_share)
+        res, us = timed(run_comparison, servers, services, events,
+                        BASELINES, cfg)
+        ep = res["EPARA"].goodput
+        per_req = us / max(1, sum(r.handled for r in res.values()))
+        for name in BASELINES[1:]:
+            ratio = ep / max(1e-9, res[name].goodput)
+            rows.append((f"goodput_testbed/{label}/EPARA_vs_{name}",
+                         per_req, f"{ratio:.2f}x"))
+        rows.append((f"goodput_testbed/{label}/EPARA_abs",
+                     per_req, f"{ep:.0f}req_s"))
+        rows.append((f"goodput_testbed/{label}/fulfillment",
+                     per_req, f"{res['EPARA'].fulfillment:.3f}"))
+    return rows

@@ -1,0 +1,47 @@
+"""Fig. 15 — GPUs needed to satisfy a fixed workload within SLOs; the paper
+reports EPARA needs 1.5-2.6x fewer.  We sweep GPU counts and report the
+smallest count at which each scheduler reaches >=95% fulfillment."""
+from __future__ import annotations
+
+from repro.core.categories import EDGE_P100, ServerSpec
+from repro.simulator.engine import SimConfig, run_comparison
+from repro.simulator.workload import (WorkloadConfig, generate_requests,
+                                      table1_services)
+
+from .common import timed
+
+TARGET = 0.93
+BASELINES = ["EPARA", "InterEdge", "Galaxy", "SERV-P"]
+
+
+def _min_gpus(name, services, events, n_servers, cfg):
+    from repro.simulator.baselines import make_scheduler
+    from repro.simulator.engine import Simulation
+    for gpus in (1, 2, 3, 4, 6, 8, 12, 16):
+        servers = [ServerSpec(sid=i, num_gpus=gpus, gpu=EDGE_P100)
+                   for i in range(n_servers)]
+        sched = make_scheduler(name, services, EDGE_P100)
+        r = Simulation(servers, services, sched, events, cfg).run()
+        if r.fulfillment >= TARGET:
+            return gpus * n_servers
+    return 16 * n_servers
+
+
+def run() -> list:
+    rows = []
+    services = table1_services()
+    n = 4
+    wl = WorkloadConfig(horizon_s=25.0, load_scale=25.0, seed=5)
+    events = generate_requests(services, n, wl)
+    cfg = SimConfig(horizon_s=25.0)
+    needs = {}
+    import time
+    t0 = time.perf_counter()
+    for name in BASELINES:
+        needs[name] = _min_gpus(name, services, events, n, cfg)
+    us = (time.perf_counter() - t0) * 1e6 / len(BASELINES)
+    for name in BASELINES[1:]:
+        rows.append((f"gpus_needed/{name}_over_EPARA", us,
+                     f"{needs[name] / needs['EPARA']:.2f}x"))
+    rows.append(("gpus_needed/EPARA_abs", us, f"{needs['EPARA']}gpus"))
+    return rows

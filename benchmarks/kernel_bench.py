@@ -1,0 +1,67 @@
+"""Kernel micro-benchmarks: wall time of the memory-bounded jnp oracles
+(XLA-compiled; the TPU path is the Pallas kernel, validated in interpret
+mode by tests) plus derived FLOP/s, at serving-representative shapes."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+
+def _bench(fn, *args, reps=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run() -> list:
+    rows = []
+    key = jax.random.PRNGKey(0)
+    # flash attention prefill (B=1, L=2048, GQA 8/2)
+    B, L, Hq, Hkv, D = 1, 2048, 8, 2, 64
+    q = jax.random.normal(key, (B, L, Hq, D), jnp.bfloat16)
+    k = jax.random.normal(key, (B, L, Hkv, D), jnp.bfloat16)
+    v = jax.random.normal(key, (B, L, Hkv, D), jnp.bfloat16)
+    f = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v))
+    us = _bench(f, q, k, v)
+    flops = 4 * B * Hq * L * L * D / 2      # causal half
+    rows.append(("kernel/flash_prefill_2k", us,
+                 f"{flops / (us * 1e-6) / 1e9:.1f}GFLOPs"))
+    # decode vs 32k cache
+    S = 32768
+    qd = jax.random.normal(key, (4, Hq, D), jnp.bfloat16)
+    kc = jax.random.normal(key, (4, S, Hkv, D), jnp.bfloat16)
+    vc = jax.random.normal(key, (4, S, Hkv, D), jnp.bfloat16)
+    fd = jax.jit(lambda q, k, v: ref.decode_attention_ref(q, k, v, S))
+    us = _bench(fd, qd, kc, vc)
+    bytes_ = 2 * 4 * S * Hkv * D * 2
+    rows.append(("kernel/decode_32k", us,
+                 f"{bytes_ / (us * 1e-6) / 1e9:.1f}GB_s"))
+    # SSD chunked scan (mamba2-ish slice)
+    Bb, Lx, H, P, N = 2, 2048, 8, 64, 64
+    x = jax.random.normal(key, (Bb, Lx, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(key, (Bb, Lx, H)))
+    A = -jnp.exp(jax.random.normal(key, (H,)))
+    Bm = jax.random.normal(key, (Bb, Lx, 1, N))
+    C = jax.random.normal(key, (Bb, Lx, 1, N))
+    fs = jax.jit(lambda *a: ref.ssd_chunked_ref(*a, chunk=128)[0])
+    us = _bench(fs, x, dt, A, Bm, C)
+    rows.append(("kernel/ssd_2k", us,
+                 f"{Bb * Lx * H / (us * 1e-6) / 1e6:.2f}Mtok_heads_s"))
+    # grouped expert GEMM
+    E, Cc, K, Nn = 8, 512, 1024, 1024
+    lhs = jax.random.normal(key, (E, Cc, K), jnp.bfloat16)
+    rhs = jax.random.normal(key, (E, K, Nn), jnp.bfloat16)
+    fg = jax.jit(ref.grouped_matmul_ref)
+    us = _bench(fg, lhs, rhs)
+    flops = 2 * E * Cc * K * Nn
+    rows.append(("kernel/moe_gemm", us,
+                 f"{flops / (us * 1e-6) / 1e9:.1f}GFLOPs"))
+    return rows

@@ -1,0 +1,40 @@
+"""Deliverable (g): the roofline table — reads results/dryrun JSONs (written
+by ``python -m repro.launch.dryrun --all --both-meshes``) and reports the
+three terms + dominant bottleneck per (arch x shape x mesh).  If the sweep
+has not been run, emits a pointer row instead of failing."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+OUT_DIR = os.environ.get("REPRO_DRYRUN_DIR", "results/dryrun")
+
+
+def load_records():
+    recs = []
+    for f in sorted(glob.glob(os.path.join(OUT_DIR, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def run() -> list:
+    rows = []
+    recs = load_records()
+    if not recs:
+        return [("roofline/missing", 0.0,
+                 "run:python -m repro.launch.dryrun --all --both-meshes")]
+    fits = sum(1 for r in recs if r.get("fits_hbm"))
+    rows.append(("roofline/combos_compiled", 0.0, f"{len(recs)}"))
+    rows.append(("roofline/fit_16gb", 0.0, f"{fits}_of_{len(recs)}"))
+    for r in recs:
+        if r["mesh"] != "pod256":
+            continue   # the roofline table is single-pod (brief)
+        name = f"roofline/{r['arch']}/{r['shape']}"
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        rows.append((name, r["compile_s"] * 1e6,
+                     f"dom={r['dominant']};c={r['compute_s']:.3g}s"
+                     f";m={r['memory_s']:.3g}s;x={r['collective_s']:.3g}s"
+                     f";useful={r['useful_flops_ratio']:.2f}"))
+    return rows

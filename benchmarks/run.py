@@ -1,0 +1,55 @@
+"""Benchmark driver: one module per paper table/figure (DESIGN.md §7).
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run goodput_testbed dp_scaling
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+MODULES = [
+    "goodput_testbed",    # Fig. 10/11
+    "goodput_scale",      # Fig. 14
+    "gpus_needed",        # Fig. 15
+    "allocator_effect",   # Fig. 16
+    "handler_effect",     # Fig. 17a
+    "placement_effect",   # Fig. 17b
+    "latency_scaling",    # Fig. 17c + 3e
+    "sync_overhead",      # Fig. 17d/e + 19a
+    "extreme_cases",      # Fig. 18
+    "dp_scaling",         # Fig. 1 / 3a
+    "case_study_llm",     # Fig. 8  (§4.3)
+    "case_study_seg",     # Fig. 20 (§5.3.4)
+    "kernel_bench",       # repo-specific
+    "roofline_table",     # deliverable (g)
+]
+
+
+def main() -> None:
+    wanted = sys.argv[1:] or MODULES
+    failures = []
+    print("name,us_per_call,derived")
+    for modname in wanted:
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{modname}", fromlist=["run"])
+            rows = mod.run()
+            for name, us, derived in rows:
+                print(f"{name},{us:.1f},{derived}")
+        except Exception:  # noqa: BLE001 — report, keep the suite going
+            traceback.print_exc()
+            failures.append(modname)
+        finally:
+            dt = time.time() - t0
+            print(f"# {modname} done in {dt:.1f}s", file=sys.stderr)
+    if failures:
+        print(f"# FAILED: {failures}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,147 @@
+"""EPARA task categories and allocation operators (§3.1, Fig. 5).
+
+A *task* = (request, service).  Tasks are categorized on two axes:
+
+* sensitivity — ``latency`` (non-continuous requests; latency is the sole
+  SLO) vs ``frequency`` (continuous/periodic requests; frame-rate is the
+  binding SLO, latency a baseline expectation);
+* resource — ``<=1 GPU`` vs ``>1 GPU`` (whether the model needs multi-GPU
+  collaboration, from VRAM fit and/or latency).
+
+Five allocation operators: BS, MT, MP (service-level), MF, DP
+(request-level).  ``OPERATORS_BY_CATEGORY`` reproduces Fig. 5's mapping.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import FrozenSet, Optional, Tuple
+
+
+class Sensitivity(str, enum.Enum):
+    LATENCY = "latency"
+    FREQUENCY = "frequency"
+
+
+class Operator(str, enum.Enum):
+    BS = "batching"          # service-level: same-service batch
+    MT = "multi_task"        # service-level: co-locate services on one GPU
+    MP = "model_parallelism"  # service-level: TP/PP across GPUs
+    MF = "multi_frame"       # request-level: frames of homogeneous tasks
+    DP = "data_parallelism"  # request-level: round-robin replica groups
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskCategory:
+    sensitivity: Sensitivity
+    multi_gpu: bool
+
+    @property
+    def key(self) -> Tuple[str, bool]:
+        return (self.sensitivity.value, self.multi_gpu)
+
+    def __str__(self) -> str:
+        g = ">1gpu" if self.multi_gpu else "<=1gpu"
+        return f"{self.sensitivity.value}/{g}"
+
+
+CAT_LAT_SINGLE = TaskCategory(Sensitivity.LATENCY, False)
+CAT_LAT_MULTI = TaskCategory(Sensitivity.LATENCY, True)
+CAT_FREQ_SINGLE = TaskCategory(Sensitivity.FREQUENCY, False)
+CAT_FREQ_MULTI = TaskCategory(Sensitivity.FREQUENCY, True)
+
+ALL_CATEGORIES = (CAT_LAT_SINGLE, CAT_LAT_MULTI, CAT_FREQ_SINGLE,
+                  CAT_FREQ_MULTI)
+
+# Fig. 5: which operators apply to which category.
+OPERATORS_BY_CATEGORY = {
+    CAT_LAT_SINGLE.key: frozenset({Operator.BS, Operator.MT}),
+    CAT_LAT_MULTI.key: frozenset({Operator.BS, Operator.MT, Operator.MP}),
+    CAT_FREQ_SINGLE.key: frozenset({Operator.BS, Operator.MT, Operator.MF}),
+    CAT_FREQ_MULTI.key: frozenset({Operator.BS, Operator.MT, Operator.MP,
+                                   Operator.MF, Operator.DP}),
+}
+
+
+def operators_for(category: TaskCategory) -> FrozenSet[Operator]:
+    return OPERATORS_BY_CATEGORY[category.key]
+
+
+# ---------------------------------------------------------------------------
+# services & requests (shared by live engine + simulator)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ServiceSpec:
+    """A deployable AI service (one model + SLO contract)."""
+    name: str
+    flops_per_request: float          # fwd FLOPs for one request/frame
+    weights_bytes: float              # model weights (placement/load cost)
+    vram_bytes: float                 # weights + activations + cache budget
+    sensitivity: Sensitivity = Sensitivity.LATENCY
+    slo_latency_s: float = 0.5        # latency SLO (both kinds)
+    slo_fps: float = 0.0              # frequency SLO (frequency kind only)
+    request_bytes: float = 32_768.0   # network payload per request
+    arch: Optional[str] = None        # assigned-architecture id, if any
+    stateful: bool = False            # SSM/hybrid decode: sticky DP routing
+    priority: bool = False            # S1 priority placement list member
+
+    @property
+    def is_frequency(self) -> bool:
+        return self.sensitivity == Sensitivity.FREQUENCY
+
+
+@dataclasses.dataclass
+class Request:
+    """One user request; frequency tasks carry ``frames``/``duration_s``."""
+    rid: int
+    service: str
+    arrival_s: float
+    frames: int = 1                  # 1 for latency tasks
+    duration_s: float = 0.0          # stream duration for frequency tasks
+    deadline_s: float = 0.0          # arrival + SLO (latency tasks)
+    path: Tuple[int, ...] = ()       # servers traversed (loop prevention)
+    offload_count: int = 0
+    session: int = 0                 # sticky-routing key for stateful archs
+
+    def on_path(self, server_id: int) -> bool:
+        return server_id in self.path
+
+
+@dataclasses.dataclass(frozen=True)
+class GPUSpec:
+    name: str = "tpu-v5e-slice"
+    tflops: float = 197.0            # bf16 peak per chip (target hw)
+    vram_gb: float = 16.0            # HBM per chip
+    mem_bw_gbs: float = 819.0
+
+    @property
+    def vram_bytes(self) -> float:
+        return self.vram_gb * 1e9
+
+    @property
+    def flops(self) -> float:
+        return self.tflops * 1e12
+
+
+# The paper's testbed GPU (Tesla P100 16GB): simulator benchmarks use this
+# so goodput ratios are comparable to the paper's; the TPU spec above is
+# the dry-run/roofline target hardware.
+EDGE_P100 = GPUSpec(name="tesla-p100", tflops=19.0, vram_gb=16.0,
+                    mem_bw_gbs=732.0)
+EDGE_JETSON = GPUSpec(name="jetson-like", tflops=1.3, vram_gb=4.0,
+                      mem_bw_gbs=60.0)
+
+
+@dataclasses.dataclass
+class ServerSpec:
+    """An edge server = a co-located group of GPUs (TPU chips)."""
+    sid: int
+    num_gpus: int = 4
+    gpu: GPUSpec = dataclasses.field(default_factory=GPUSpec)
+    intra_bw_gbs: float = 50.0       # ICI within the server
+    inter_bw_gbs: float = 1.25       # WAN/DCN to peer servers (10 Gb/s)
+
+    @property
+    def total_vram(self) -> float:
+        return self.num_gpus * self.gpu.vram_bytes

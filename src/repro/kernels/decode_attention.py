@@ -1,0 +1,128 @@
+"""Pallas TPU flash-decode kernel: one new token vs a long KV cache.
+
+The decode hot loop is memory-bound (stream the whole cache once per token),
+so the kernel's job is to keep the cache stream dense: grid = (batch*q_heads,
+kv_blocks), kv sequential with (m, l, acc) carried in VMEM scratch — the
+same online-softmax recurrence as prefill but with a single query row
+broadcast across the sublane dimension.
+
+Valid-length masking comes from a per-batch ``cache_len`` operand (int32,
+one scalar per bh row) so ragged caches batch together; sliding windows
+mask to the trailing ``window`` positions.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ref import NEG_INF
+
+DEFAULT_KV_BLOCK = 512
+_SUB = 8  # sublane rows the single query is broadcast over
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                   acc_ref, *, scale: float, window: Optional[int],
+                   k_block: int, nk: int):
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    cache_len = len_ref[0, 0]
+    k_lo = ki * k_block
+    visible = k_lo < cache_len
+    if window is not None:
+        visible = jnp.logical_and(visible, k_lo + k_block > cache_len - window)
+
+    @pl.when(visible)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)            # (_SUB, D) rows equal
+        k = k_ref[0].astype(jnp.float32)            # (k_block, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (_SUB, k_block), 1)
+        ok = kpos < cache_len
+        if window is not None:
+            ok = jnp.logical_and(ok, kpos >= cache_len - window)
+        s = jnp.where(ok, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, :1]) * ok.astype(jnp.float32)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        m_ref[...] = m_new
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha[:, :1] + pv
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_ref[...][:, :1]
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l, 1e-37)).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q, k_cache, v_cache, cache_len, *, window=None,
+                            softmax_scale=None, k_block=DEFAULT_KV_BLOCK,
+                            interpret=False):
+    """q: (B, Hq, D); caches: (B, S, Hkv, D); cache_len: scalar or (B,) int.
+
+    Returns (B, Hq, D).
+    """
+    B, Hq, D = q.shape
+    _, S, Hkv, _ = k_cache.shape
+    group = Hq // Hkv
+    scale = softmax_scale if softmax_scale is not None else D ** -0.5
+    cache_len = jnp.asarray(cache_len, jnp.int32)
+    if cache_len.ndim == 0:
+        cache_len = jnp.full((B,), cache_len, jnp.int32)
+
+    k_block = min(k_block, max(8, S))
+    S_p = -(-S // k_block) * k_block
+    kt = jnp.pad(k_cache, ((0, 0), (0, S_p - S), (0, 0), (0, 0)))
+    vt = jnp.pad(v_cache, ((0, 0), (0, S_p - S), (0, 0), (0, 0)))
+    kt = kt.transpose(0, 2, 1, 3).reshape(B * Hkv, S_p, D)
+    vt = vt.transpose(0, 2, 1, 3).reshape(B * Hkv, S_p, D)
+    # broadcast the single query over _SUB sublane rows
+    qt = jnp.broadcast_to(q.reshape(B * Hq, 1, D), (B * Hq, _SUB, D))
+    lens = jnp.repeat(cache_len, Hq).reshape(B * Hq, 1)
+
+    nk = S_p // k_block
+    grid = (B * Hq, nk)
+    kernel = functools.partial(_decode_kernel, scale=scale, window=window,
+                               k_block=k_block, nk=nk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda bh, ki: (bh, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, _SUB, D), lambda bh, ki: (bh, 0, 0)),
+            pl.BlockSpec((1, k_block, D),
+                         lambda bh, ki, group=group: (bh // group, ki, 0)),
+            pl.BlockSpec((1, k_block, D),
+                         lambda bh, ki, group=group: (bh // group, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, _SUB, D), lambda bh, ki: (bh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, _SUB, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((_SUB, 128), jnp.float32),
+            pltpu.VMEM((_SUB, 128), jnp.float32),
+            pltpu.VMEM((_SUB, D), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(lens, qt, kt, vt)
+
+    return out[:, 0].reshape(B, Hq, D)

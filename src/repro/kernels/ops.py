@@ -1,0 +1,125 @@
+"""Jit-friendly wrappers over the Pallas kernels and their jnp oracles.
+
+Every op takes ``impl``:
+  * ``"ref"``               — memory-bounded pure-jnp path (XLA). Default on
+                              CPU and for the compiled multi-pod dry-run.
+  * ``"pallas"``            — the TPU kernel (deployment target).
+  * ``"pallas_interpret"``  — the TPU kernel body interpreted on CPU; used
+                              by tests to validate kernels vs the oracles.
+
+``default_impl()`` reads REPRO_KERNEL_IMPL, falling back to "ref" so the
+whole framework runs anywhere; on a TPU runtime set REPRO_KERNEL_IMPL=pallas.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax.numpy as jnp
+
+from . import ref
+from .decode_attention import decode_attention_pallas
+from .flash_attention import flash_attention_pallas
+from .moe_gemm import grouped_matmul_pallas
+from .ssd_scan import ssd_scan_pallas
+
+VALID_IMPLS = ("ref", "pallas", "pallas_interpret")
+
+
+def default_impl() -> str:
+    impl = os.environ.get("REPRO_KERNEL_IMPL", "ref")
+    if impl not in VALID_IMPLS:
+        raise ValueError(f"REPRO_KERNEL_IMPL={impl!r}; want one of {VALID_IMPLS}")
+    return impl
+
+
+import functools
+
+import jax
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _flash_cv(opts, q, k, v):
+    out, _ = _flash_fwd(opts, q, k, v)
+    return out
+
+
+def _flash_fwd(opts, q, k, v):
+    (causal, window, prefix_len, q_offset, kv_len, scale, impl) = opts
+    if impl == "ref":
+        out, lse = ref.flash_attention_fwd_ref(
+            q, k, v, causal=causal, window=window, prefix_len=prefix_len,
+            q_offset=q_offset, kv_len=kv_len, softmax_scale=scale)
+    else:
+        out, lse = flash_attention_pallas(
+            q, k, v, causal=causal, window=window, prefix_len=prefix_len,
+            q_offset=q_offset, kv_len=kv_len, softmax_scale=scale,
+            return_lse=True, interpret=(impl == "pallas_interpret"))
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(opts, res, dout):
+    (causal, window, prefix_len, q_offset, kv_len, scale, impl) = opts
+    q, k, v, out, lse = res
+    kwargs = dict(causal=causal, window=window, prefix_len=prefix_len,
+                  q_offset=q_offset, kv_len=kv_len, softmax_scale=scale)
+    if impl == "ref":
+        return ref.flash_attention_bwd_ref(q, k, v, out, lse, dout,
+                                           **kwargs)
+    from .flash_attention_bwd import flash_attention_bwd_pallas
+    return flash_attention_bwd_pallas(
+        q, k, v, out, lse, dout,
+        interpret=(impl == "pallas_interpret"), **kwargs)
+
+
+_flash_cv.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q, k, v, *, causal=True, window: Optional[int] = None,
+                    prefix_len: int = 0, q_offset: int = 0,
+                    kv_len: Optional[int] = None, softmax_scale=None,
+                    impl: Optional[str] = None):
+    """Flash attention with a recomputing (flash) backward — the O(S^2)
+    attention matrix is never materialized in either pass, so training at
+    32k context stays within HBM (EXPERIMENTS.md §Dry-run)."""
+    impl = impl or default_impl()
+    opts = (causal, window, prefix_len, q_offset, kv_len, softmax_scale,
+            impl)
+    return _flash_cv(opts, q, k, v)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *,
+                     window: Optional[int] = None, softmax_scale=None,
+                     impl: Optional[str] = None):
+    impl = impl or default_impl()
+    if impl == "ref":
+        return ref.decode_attention_ref(
+            q, k_cache, v_cache, cache_len, window=window,
+            softmax_scale=softmax_scale)
+    return decode_attention_pallas(
+        q, k_cache, v_cache, cache_len, window=window,
+        softmax_scale=softmax_scale, interpret=(impl == "pallas_interpret"))
+
+
+def ssd_scan(x, dt, A, B, C, D=None, *, chunk: int = 128,
+             initial_state=None, impl: Optional[str] = None):
+    impl = impl or default_impl()
+    if impl == "ref":
+        return ref.ssd_chunked_ref(x, dt, A, B, C, D, chunk=chunk,
+                                   initial_state=initial_state)
+    return ssd_scan_pallas(x, dt, A, B, C, D, chunk=chunk,
+                           initial_state=initial_state,
+                           interpret=(impl == "pallas_interpret"))
+
+
+def ssd_decode_step(state, x_t, dt_t, A, B_t, C_t, D=None):
+    # elementwise-dominated; the jnp path is already optimal on TPU.
+    return ref.ssd_decode_step_ref(state, x_t, dt_t, A, B_t, C_t, D)
+
+
+def grouped_matmul(lhs, rhs, *, impl: Optional[str] = None):
+    impl = impl or default_impl()
+    if impl == "ref":
+        return ref.grouped_matmul_ref(lhs, rhs)
+    return grouped_matmul_pallas(lhs, rhs,
+                                 interpret=(impl == "pallas_interpret"))

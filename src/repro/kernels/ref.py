@@ -1,0 +1,482 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Two tiers per op:
+
+* ``*_exact`` — smallest possible, fully-materialized math. Only used by
+  tests as the ground truth.
+* ``*_ref``   — memory-bounded (blocked / scanned) jnp implementation with
+  identical semantics.  This is what the model zoo runs through XLA on the
+  dry-run path (full attention at 32k+ cannot materialize (L, L) scores),
+  and what the Pallas kernels are validated against bit-for-bit modulo
+  dtype.
+
+Shapes follow the convention:
+  q        : (B, Lq, Hq, D)
+  k, v     : (B, Lk, Hkv, D)       Hq % Hkv == 0 (GQA)
+  output   : (B, Lq, Hq, D)
+Masking semantics (shared by exact/ref/pallas):
+  A key at absolute position kp is visible to a query at absolute position
+  qp iff
+      (kp < prefix_len)                                  # bidirectional prefix
+   or (not causal) and (kp < kv_len)                     # full attention
+   or (causal and kp <= qp and (window is None or kp > qp - window))
+  and always kp < kv_len (the valid-cache mask for decode).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def _visibility(qpos, kpos, *, causal: bool, window: Optional[int],
+                prefix_len: int, kv_len) -> jnp.ndarray:
+    """Boolean (Lq, Lk) visibility mask per the module docstring."""
+    qpos = qpos[:, None]
+    kpos = kpos[None, :]
+    valid = kpos < kv_len
+    if causal:
+        ok = kpos <= qpos
+        if window is not None:
+            ok = ok & (kpos > qpos - window)
+    else:
+        ok = jnp.ones_like(valid)
+    if prefix_len:
+        ok = ok | (kpos < prefix_len)
+    return ok & valid
+
+
+def mha_exact(q, k, v, *, causal=True, window=None, prefix_len=0,
+              q_offset=0, kv_len=None, softmax_scale=None):
+    """Fully materialized attention. Test oracle only (small shapes)."""
+    B, Lq, Hq, D = q.shape
+    _, Lk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = softmax_scale if softmax_scale is not None else D ** -0.5
+    kv_len = Lk if kv_len is None else kv_len
+    qg = q.reshape(B, Lq, Hkv, G, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("blhgd,bshd->bhgls", qg, kf) * scale
+    qpos = q_offset + jnp.arange(Lq)
+    kpos = jnp.arange(Lk)
+    mask = _visibility(qpos, kpos, causal=causal, window=window,
+                       prefix_len=prefix_len, kv_len=kv_len)
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgls,bshd->blhgd", p, vf)
+    # fully-masked rows are defined as 0 (matches the flash recurrence,
+    # where l stays 0); softmax alone would emit a uniform average
+    any_visible = mask.any(axis=-1)[None, :, None, None, None]
+    out = jnp.where(any_visible, out, 0.0)
+    return out.reshape(B, Lq, Hq, D).astype(q.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, prefix_len=0,
+                        q_offset=0, kv_len=None, softmax_scale=None,
+                        q_chunk=512, k_chunk=512):
+    """Blocked online-softmax attention, O(chunk^2) transient memory.
+
+    Numerically the standard two-pass-free flash recurrence:
+      m' = max(m, rowmax(s));  l' = l * e^{m-m'} + rowsum(e^{s-m'})
+      acc' = acc * e^{m-m'} + e^{s-m'} @ V
+    """
+    B, Lq, Hq, D = q.shape
+    _, Lk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = softmax_scale if softmax_scale is not None else D ** -0.5
+    kv_len = Lk if kv_len is None else kv_len
+
+    q_chunk = min(q_chunk, Lq)
+    k_chunk = min(k_chunk, Lk)
+    # pad to multiples
+    Lq_p = -(-Lq // q_chunk) * q_chunk
+    Lk_p = -(-Lk // k_chunk) * k_chunk
+    qp = jnp.pad(q, ((0, 0), (0, Lq_p - Lq), (0, 0), (0, 0)))
+    kp_ = jnp.pad(k, ((0, 0), (0, Lk_p - Lk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, Lk_p - Lk), (0, 0), (0, 0)))
+
+    nq, nk = Lq_p // q_chunk, Lk_p // k_chunk
+    # keep blocks in the input dtype: upcasting (B, L, d)-sized tensors to
+    # f32 before the blocked reshapes doubles every activation reshard
+    # collective on the production mesh (EXPERIMENTS.md SPerf); einsums
+    # below accumulate in f32 via preferred_element_type instead
+    qb = qp.reshape(B, nq, q_chunk, Hkv, G, D)
+    kb = kp_.reshape(B, nk, k_chunk, Hkv, D)
+    vb = vp.reshape(B, nk, k_chunk, Hkv, D)
+
+    def per_batch(qb_b, kb_b, vb_b):
+        def q_scan(_, inputs):
+            qi, q_tile = inputs
+            return None, q_block_fn(qi, q_tile, kb_b, vb_b)
+
+        _, outs = jax.lax.scan(q_scan, None, (jnp.arange(nq), qb_b))
+        return outs  # (nq, Hkv, G, q_chunk, D)
+
+    def q_block_fn(qi, q_tile, kb_b, vb_b):
+        qpos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, inputs):
+            m, l, acc = carry
+            ki, k_tile, v_tile = inputs
+            kpos = ki * k_chunk + jnp.arange(k_chunk)
+            s = jnp.einsum("lhgd,shd->hgls", q_tile, k_tile,
+                           preferred_element_type=jnp.float32) * scale
+            mask = _visibility(qpos, kpos, causal=causal, window=window,
+                               prefix_len=prefix_len, kv_len=kv_len)
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            # mask p explicitly: a fully-masked block has m == NEG_INF and
+            # exp(s - m) == 1 for every (masked!) entry otherwise
+            p = jnp.exp(s - m_new[..., None]) * mask[None, None]
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "hgls,shd->hgld", p.astype(v_tile.dtype), v_tile,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((Hkv, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((Hkv, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((Hkv, G, q_chunk, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), kb_b, vb_b))
+        return acc / jnp.maximum(l, 1e-37)[..., None]
+
+    outs = jax.vmap(per_batch)(qb, kb, vb)  # (B, nq, Hkv, G, q_chunk, D)
+    out = outs.transpose(0, 1, 4, 2, 3, 5).reshape(B, Lq_p, Hq, D)
+    return out[:, :Lq].astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, cache_len, *, window=None,
+                         softmax_scale=None):
+    """Single-token decode attention against a (B, S, Hkv, D) cache.
+
+    ``cache_len`` is the number of valid entries (scalar or (B,) int array);
+    the new token attends to positions [0, cache_len) (optionally only the
+    last ``window`` of them).  q: (B, Hq, D) -> out (B, Hq, D).
+    """
+    B, Hq, D = q.shape
+    _, S, Hkv, _ = k_cache.shape
+    G = Hq // Hkv
+    scale = softmax_scale if softmax_scale is not None else D ** -0.5
+    cache_len = jnp.asarray(cache_len)
+    if cache_len.ndim == 0:
+        cache_len = jnp.full((B,), cache_len)
+    qg = q.reshape(B, Hkv, G, D).astype(jnp.float32)
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, kf) * scale
+    kpos = jnp.arange(S)[None]          # (1, S)
+    valid = kpos < cache_len[:, None]
+    if window is not None:
+        valid = valid & (kpos >= cache_len[:, None] - window)
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, vf)
+    out = jnp.where(valid.any(-1)[:, None, None, None], out, 0.0)
+    return out.reshape(B, Hq, D).astype(q.dtype)
+
+
+def flash_attention_fwd_ref(q, k, v, *, causal=True, window=None,
+                            prefix_len=0, q_offset=0, kv_len=None,
+                            softmax_scale=None, q_chunk=512, k_chunk=512):
+    """Like ``flash_attention_ref`` but also returns the log-sum-exp
+    (B, Lq, Hq) needed by the recomputing backward."""
+    B, Lq, Hq, D = q.shape
+    _, Lk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = softmax_scale if softmax_scale is not None else D ** -0.5
+    kv_len = Lk if kv_len is None else kv_len
+    q_chunk = min(q_chunk, Lq)
+    k_chunk = min(k_chunk, Lk)
+    Lq_p = -(-Lq // q_chunk) * q_chunk
+    Lk_p = -(-Lk // k_chunk) * k_chunk
+    qp = jnp.pad(q, ((0, 0), (0, Lq_p - Lq), (0, 0), (0, 0)))
+    kp_ = jnp.pad(k, ((0, 0), (0, Lk_p - Lk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, Lk_p - Lk), (0, 0), (0, 0)))
+    nq, nk = Lq_p // q_chunk, Lk_p // k_chunk
+    # keep blocks in the input dtype: upcasting (B, L, d)-sized tensors to
+    # f32 before the blocked reshapes doubles every activation reshard
+    # collective on the production mesh (EXPERIMENTS.md SPerf); einsums
+    # below accumulate in f32 via preferred_element_type instead
+    qb = qp.reshape(B, nq, q_chunk, Hkv, G, D)
+    kb = kp_.reshape(B, nk, k_chunk, Hkv, D)
+    vb = vp.reshape(B, nk, k_chunk, Hkv, D)
+
+    def q_block_fn(qi, q_tile, kb_b, vb_b):
+        qpos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, inputs):
+            m, l, acc = carry
+            ki, k_tile, v_tile = inputs
+            kpos = ki * k_chunk + jnp.arange(k_chunk)
+            s = jnp.einsum("lhgd,shd->hgls", q_tile, k_tile,
+                           preferred_element_type=jnp.float32) * scale
+            mask = _visibility(qpos, kpos, causal=causal, window=window,
+                               prefix_len=prefix_len, kv_len=kv_len)
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            # mask p explicitly: a fully-masked block has m == NEG_INF and
+            # exp(s - m) == 1 for every (masked!) entry otherwise
+            p = jnp.exp(s - m_new[..., None]) * mask[None, None]
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "hgls,shd->hgld", p.astype(v_tile.dtype), v_tile,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((Hkv, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((Hkv, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((Hkv, G, q_chunk, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), kb_b, vb_b))
+        out = acc / jnp.maximum(l, 1e-37)[..., None]
+        lse = jnp.where(l > 0, m + jnp.log(jnp.maximum(l, 1e-37)), -NEG_INF)
+        return out, lse
+
+    def per_batch(qb_b, kb_b, vb_b):
+        def q_scan(_, inputs):
+            qi, q_tile = inputs
+            return None, q_block_fn(qi, q_tile, kb_b, vb_b)
+
+        _, (outs, lses) = jax.lax.scan(q_scan, None, (jnp.arange(nq), qb_b))
+        return outs, lses
+
+    outs, lses = jax.vmap(per_batch)(qb, kb, vb)
+    out = outs.transpose(0, 1, 4, 2, 3, 5).reshape(B, Lq_p, Hq, D)
+    lse = lses.transpose(0, 1, 4, 2, 3).reshape(B, Lq_p, Hq)
+    return out[:, :Lq].astype(q.dtype), lse[:, :Lq]
+
+
+def flash_attention_bwd_ref(q, k, v, out, lse, dout, *, causal=True,
+                            window=None, prefix_len=0, q_offset=0,
+                            kv_len=None, softmax_scale=None, q_chunk=512,
+                            k_chunk=512):
+    """Recomputing flash backward: O(chunk^2) transients, never the full
+    attention matrix.  Standard dS = P * (dP - delta) algebra."""
+    B, Lq, Hq, D = q.shape
+    _, Lk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = softmax_scale if softmax_scale is not None else D ** -0.5
+    kv_len = Lk if kv_len is None else kv_len
+    q_chunk = min(q_chunk, Lq)
+    k_chunk = min(k_chunk, Lk)
+    Lq_p = -(-Lq // q_chunk) * q_chunk
+    Lk_p = -(-Lk // k_chunk) * k_chunk
+
+    def padq(a, fill=0.0):
+        return jnp.pad(a, ((0, 0), (0, Lq_p - Lq)) +
+                       ((0, 0),) * (a.ndim - 2), constant_values=fill)
+
+    def padk(a):
+        return jnp.pad(a, ((0, 0), (0, Lk_p - Lk)) +
+                       ((0, 0),) * (a.ndim - 2))
+
+    nq, nk = Lq_p // q_chunk, Lk_p // k_chunk
+    delta = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32),
+                    axis=-1)                              # (B, Lq, Hq)
+    qb = padq(q).reshape(B, nq, q_chunk, Hkv, G, D)
+    dob = padq(dout).reshape(B, nq, q_chunk, Hkv, G, D)
+    # padded lse must kill p: use -NEG_INF (large positive)
+    lseb = padq(lse, fill=-NEG_INF).reshape(B, nq, q_chunk, Hkv, G)
+    deltab = padq(delta).reshape(B, nq, q_chunk, Hkv, G)
+    kb = padk(k).reshape(B, nk, k_chunk, Hkv, D)
+    vb = padk(v).reshape(B, nk, k_chunk, Hkv, D)
+
+    def block_grads(qi, ki, q_tile, do_tile, lse_tile, dlt_tile, k_tile,
+                    v_tile):
+        qpos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+        kpos = ki * k_chunk + jnp.arange(k_chunk)
+        f32 = jnp.float32
+        s = jnp.einsum("lhgd,shd->hgls", q_tile, k_tile,
+                       preferred_element_type=f32) * scale
+        mask = _visibility(qpos, kpos, causal=causal, window=window,
+                           prefix_len=prefix_len, kv_len=kv_len)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        p = jnp.exp(s - lse_tile.transpose(1, 2, 0)[..., None])  # (h,g,l,s)
+        dp = jnp.einsum("lhgd,shd->hgls", do_tile, v_tile,
+                        preferred_element_type=f32)
+        ds = p * (dp - dlt_tile.transpose(1, 2, 0)[..., None]) * scale
+        dsl = ds.astype(k_tile.dtype)
+        dq_b = jnp.einsum("hgls,shd->lhgd", dsl, k_tile,
+                          preferred_element_type=f32)
+        dk_b = jnp.einsum("hgls,lhgd->shd", dsl, q_tile,
+                          preferred_element_type=f32)
+        dv_b = jnp.einsum("hgls,lhgd->shd", p.astype(do_tile.dtype),
+                          do_tile, preferred_element_type=f32)
+        return dq_b, dk_b, dv_b
+
+    def per_batch(qb_b, dob_b, lseb_b, dltb_b, kb_b, vb_b):
+        def q_scan(carry, qin):
+            dk_acc, dv_acc = carry
+            qi, q_tile, do_tile, lse_tile, dlt_tile = qin
+
+            def k_scan(kcarry, kin):
+                dq_acc = kcarry
+                ki, k_tile, v_tile = kin
+                dq_b, dk_b, dv_b = block_grads(
+                    qi, ki, q_tile, do_tile, lse_tile, dlt_tile, k_tile,
+                    v_tile)
+                return dq_acc + dq_b, (dk_b, dv_b)
+
+            dq0 = jnp.zeros((q_chunk, Hkv, G, D), jnp.float32)
+            dq_tile, (dk_parts, dv_parts) = jax.lax.scan(
+                k_scan, dq0, (jnp.arange(nk), kb_b, vb_b))
+            dk_acc = dk_acc + dk_parts.reshape(Lk_p, Hkv, D)
+            dv_acc = dv_acc + dv_parts.reshape(Lk_p, Hkv, D)
+            return (dk_acc, dv_acc), dq_tile
+
+        dk0 = jnp.zeros((Lk_p, Hkv, D), jnp.float32)
+        dv0 = jnp.zeros((Lk_p, Hkv, D), jnp.float32)
+        (dk_acc, dv_acc), dq_tiles = jax.lax.scan(
+            q_scan, (dk0, dv0),
+            (jnp.arange(nq), qb_b, dob_b, lseb_b, dltb_b))
+        return dq_tiles, dk_acc, dv_acc
+
+    dq, dk, dv = jax.vmap(per_batch)(qb, dob, lseb, deltab, kb, vb)
+    dq = dq.reshape(B, Lq_p, Hq, D)[:, :Lq].astype(q.dtype)
+    dk = dk.reshape(B, Lk_p, Hkv, D)[:, :Lk].astype(k.dtype)
+    dv = dv.reshape(B, Lk_p, Hkv, D)[:, :Lk].astype(v.dtype)
+    return dq, dk, dv
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD (state-space duality), chunked
+# ---------------------------------------------------------------------------
+
+def ssd_exact(x, dt, A, B, C, D=None, *, initial_state=None):
+    """Naive sequential recurrence. Test oracle only.
+
+    x : (Bb, L, H, P)   dt : (Bb, L, H)   A : (H,) (negative)
+    B, C : (Bb, L, G, N)  heads grouped H//G per group.
+    Returns y (Bb, L, H, P) and final state (Bb, H, P, N).
+    """
+    Bb, L, H, P = x.shape
+    _, _, G, N = B.shape
+    rep = H // G
+    Bh = jnp.repeat(B, rep, axis=2)  # (Bb, L, H, N)
+    Ch = jnp.repeat(C, rep, axis=2)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    dA = jnp.exp(dtf * A[None, None, :])  # (Bb, L, H)
+
+    h0 = (jnp.zeros((Bb, H, P, N), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(h, t):
+        xt, dtt, dAt = xf[:, t], dtf[:, t], dA[:, t]
+        Bt, Ct = Bh[:, t].astype(jnp.float32), Ch[:, t].astype(jnp.float32)
+        h = h * dAt[..., None, None] + jnp.einsum(
+            "bhp,bhn,bh->bhpn", xt, Bt, dtt)
+        y = jnp.einsum("bhpn,bhn->bhp", h, Ct)
+        return h, y
+
+    h, ys = jax.lax.scan(step, h0, jnp.arange(L))
+    y = ys.transpose(1, 0, 2, 3)  # (Bb, L, H, P)
+    if D is not None:
+        y = y + xf * D[None, None, :, None]
+    return y.astype(x.dtype), h
+
+
+def ssd_chunked_ref(x, dt, A, B, C, D=None, *, chunk=128, initial_state=None):
+    """Chunked SSD: intra-chunk quadratic part + inter-chunk state recurrence.
+
+    Memory-bounded in L (transients are (chunk, chunk)); this is the jnp
+    twin of the Pallas ``ssd_scan`` kernel and the model-zoo prefill path.
+    """
+    Bb, L, H, P = x.shape
+    _, _, G, N = B.shape
+    rep = H // G
+    Q = min(chunk, L)
+    Lp = -(-L // Q) * Q
+    pad = Lp - L
+
+    def padt(a):
+        return jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+
+    xf = padt(x).astype(jnp.float32)
+    dtf = padt(dt).astype(jnp.float32)
+    # padded steps must be identity: dt=0 => dA=1? exp(0*A)=1 keeps state, and
+    # contributes 0 input. dt=0 gives exactly that.
+    Bh = jnp.repeat(padt(B), rep, axis=2).astype(jnp.float32)
+    Ch = jnp.repeat(padt(C), rep, axis=2).astype(jnp.float32)
+    nC = Lp // Q
+    xc = xf.reshape(Bb, nC, Q, H, P)
+    dtc = dtf.reshape(Bb, nC, Q, H)
+    Bc = Bh.reshape(Bb, nC, Q, H, N)
+    Cc = Ch.reshape(Bb, nC, Q, H, N)
+
+    logdA = dtc * A[None, None, None, :]           # (Bb, nC, Q, H), <= 0
+    cum = jnp.cumsum(logdA, axis=2)                # inclusive cumsum
+
+    h0 = (jnp.zeros((Bb, H, P, N), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def chunk_step(h, c):
+        xq, dtq, Bq, Cq = xc[:, c], dtc[:, c], Bc[:, c], Cc[:, c]
+        cq = cum[:, c]                              # (Bb, Q, H)
+        # intra-chunk: M[t,s] = exp(cum_t - cum_s) * (C_t . B_s) * dt_s, s<=t
+        decay = jnp.exp(cq[:, :, None] - cq[:, None])        # (Bb, t, s, H)
+        tri = jnp.tril(jnp.ones((Q, Q), bool))
+        decay = jnp.where(tri[None, :, :, None], decay, 0.0)
+        cb = jnp.einsum("bthn,bshn->btsh", Cq, Bq)
+        M = decay * cb * dtq[:, None]                         # (Bb, t, s, H)
+        y_intra = jnp.einsum("btsh,bshp->bthp", M, xq)
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.einsum("bthn,bhpn,bth->bthp", Cq, h, jnp.exp(cq))
+        # chunk state: S = sum_s exp(cum_last - cum_s) dt_s x_s B_s^T
+        last = cq[:, -1][:, None]                             # (Bb, 1, H)
+        w = jnp.exp(last - cq) * dtq                          # (Bb, Q, H)
+        S = jnp.einsum("bshp,bshn,bsh->bhpn", xq, Bq, w)
+        h_new = h * jnp.exp(last[:, 0])[..., None, None] + S
+        return h_new, y_intra + y_inter
+
+    h, ys = jax.lax.scan(chunk_step, h0, jnp.arange(nC))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bb, Lp, H, P)[:, :L]
+    if D is not None:
+        y = y + x.astype(jnp.float32) * D[None, None, :, None]
+    return y.astype(x.dtype), h
+
+
+def ssd_decode_step_ref(state, x_t, dt_t, A, B_t, C_t, D=None):
+    """One recurrent SSD step.
+
+    state : (Bb, H, P, N);  x_t : (Bb, H, P);  dt_t : (Bb, H);
+    B_t, C_t : (Bb, G, N).  Returns (y_t (Bb, H, P), new_state).
+    """
+    Bb, H, P, N = state.shape
+    G = B_t.shape[1]
+    rep = H // G
+    Bh = jnp.repeat(B_t, rep, axis=1).astype(jnp.float32)   # (Bb, H, N)
+    Ch = jnp.repeat(C_t, rep, axis=1).astype(jnp.float32)
+    xf = x_t.astype(jnp.float32)
+    dtf = dt_t.astype(jnp.float32)
+    dA = jnp.exp(dtf * A[None, :])
+    state = state.astype(jnp.float32)
+    new_state = state * dA[..., None, None] + jnp.einsum(
+        "bhp,bhn,bh->bhpn", xf, Bh, dtf)
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch)
+    if D is not None:
+        y = y + xf * D[None, :, None]
+    return y.astype(x_t.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# grouped (per-expert) matmul
+# ---------------------------------------------------------------------------
+
+def grouped_matmul_ref(lhs, rhs):
+    """(E, C, K) @ (E, K, N) -> (E, C, N), fp32 accumulate."""
+    out = jnp.einsum("eck,ekn->ecn", lhs.astype(jnp.float32),
+                     rhs.astype(jnp.float32))
+    return out.astype(lhs.dtype)

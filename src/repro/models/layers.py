@@ -1,0 +1,275 @@
+"""Shared neural-net layers for the model zoo.
+
+Pure-functional: params are nested dicts of jnp arrays; every forward takes
+(params, cfg, ...).  Attention flows through ``repro.kernels.ops`` so the
+same model code runs the jnp reference (XLA / dry-run) or the Pallas TPU
+kernels.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from .config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# initializers / primitives
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def rms_norm(x, w, eps: float):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, w, b, eps: float):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def init_norm(key, cfg: ModelConfig, dim: Optional[int] = None):
+    d = dim or cfg.d_model
+    if cfg.norm == "layernorm":
+        return {"w": jnp.ones((d,), cfg.weight_dtype),
+                "b": jnp.zeros((d,), cfg.weight_dtype)}
+    return {"w": jnp.ones((d,), cfg.weight_dtype)}
+
+
+def apply_norm(p, cfg: ModelConfig, x):
+    if cfg.norm == "layernorm":
+        return layer_norm(x, p["w"], p["b"], cfg.rms_eps)
+    return rms_norm(x, p["w"], cfg.rms_eps)
+
+
+def linear(x, w, b=None):
+    y = jnp.einsum("...i,io->...o", x, w)
+    if b is not None:
+        y = y + b
+    return y
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta: float):
+    """x: (..., L, H, D) rotated by ``positions`` (broadcastable to (..., L))."""
+    D = x.shape[-1]
+    half = D // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., L, half)
+    sin = jnp.sin(ang)[..., None, :]
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(length: int, d: int):
+    """Whisper-style sinusoidal positional embedding table (length, d)."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / (half - 1))
+    ang = jnp.arange(length)[:, None] * freqs[None]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, *, d_in: Optional[int] = None,
+                   cross: bool = False):
+    d = d_in or cfg.d_model
+    hd, nq, nkv = cfg.head_dim, cfg.num_heads, cfg.num_kv_heads
+    dt = cfg.weight_dtype
+    ks = jax.random.split(key, 4)
+    if cfg.fused_projections and not cross:
+        p = {
+            "wqkv": dense_init(ks[0], (d, (nq + 2 * nkv) * hd), dt),
+            "wo": dense_init(ks[3], (nq * hd, cfg.d_model), dt),
+        }
+        if cfg.qkv_bias:
+            p["bqkv"] = jnp.zeros(((nq + 2 * nkv) * hd,), dt)
+        return p
+    p = {
+        "wq": dense_init(ks[0], (d, nq * hd), dt),
+        "wk": dense_init(ks[1], (cfg.d_model if cross else d, nkv * hd), dt),
+        "wv": dense_init(ks[2], (cfg.d_model if cross else d, nkv * hd), dt),
+        "wo": dense_init(ks[3], (nq * hd, cfg.d_model), dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((nq * hd,), dt)
+        p["bk"] = jnp.zeros((nkv * hd,), dt)
+        p["bv"] = jnp.zeros((nkv * hd,), dt)
+    return p
+
+
+def _split_qkv_flat(cfg: ModelConfig, qkv):
+    hd, nq, nkv = cfg.head_dim, cfg.num_heads, cfg.num_kv_heads
+    q = qkv[..., :nq * hd]
+    k = qkv[..., nq * hd:(nq + nkv) * hd]
+    v = qkv[..., (nq + nkv) * hd:]
+    return q, k, v
+
+
+def _project_qkv(p, cfg: ModelConfig, x, kv_x=None):
+    B = x.shape[0]
+    Lq = x.shape[1]
+    kv_x = x if kv_x is None else kv_x
+    Lk = kv_x.shape[1]
+    if "wqkv" in p:
+        q, k, v = _split_qkv_flat(cfg, linear(x, p["wqkv"], p.get("bqkv")))
+    else:
+        q = linear(x, p["wq"], p.get("bq"))
+        k = linear(kv_x, p["wk"], p.get("bk"))
+        v = linear(kv_x, p["wv"], p.get("bv"))
+    q = q.reshape(B, Lq, cfg.num_heads, cfg.head_dim)
+    k = k.reshape(B, Lk, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(B, Lk, cfg.num_kv_heads, cfg.head_dim)
+    return q, k, v
+
+
+def attention(p, cfg: ModelConfig, x, *, positions=None, causal=True,
+              window=None, prefix_len=0, kv_x=None, use_rope=True,
+              impl=None):
+    """Full (prefill/train) attention.  Returns (out, (k, v)) so callers can
+    seed a KV cache; ``kv_x`` switches to cross-attention (no mask/rope on kv
+    unless self)."""
+    B, Lq, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x, kv_x)
+    if use_rope:
+        if positions is None:
+            positions = jnp.arange(Lq)[None]
+        q = rope(q, positions, cfg.rope_theta)
+        if kv_x is None:
+            k = rope(k, positions, cfg.rope_theta)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              prefix_len=prefix_len, impl=impl)
+    out = out.reshape(B, Lq, cfg.num_heads * cfg.head_dim)
+    return linear(out, p["wo"]), (k, v)
+
+
+def attention_decode(p, cfg: ModelConfig, x_t, k_cache, v_cache, cache_len, *,
+                     position=None, window=None, use_rope=True, impl=None):
+    """One-token decode: x_t (B, d) vs caches (B, S, Hkv, hd).
+
+    ``cache_len`` counts valid entries *including* the token being written
+    at ring slot ``(cache_len-1) % S``.  Returns (out (B, d), k_t, v_t) —
+    cache insertion is the caller's (serving.kvcache) job, so this function
+    stays functional.
+    """
+    B = x_t.shape[0]
+    if "wqkv" in p:
+        q, k_t, v_t = _split_qkv_flat(
+            cfg, linear(x_t, p["wqkv"], p.get("bqkv")))
+    else:
+        q = linear(x_t, p["wq"], p.get("bq"))
+        k_t = linear(x_t, p["wk"], p.get("bk"))
+        v_t = linear(x_t, p["wv"], p.get("bv"))
+    q = q.reshape(B, cfg.num_heads, cfg.head_dim)
+    k_t = k_t.reshape(B, cfg.num_kv_heads, cfg.head_dim)
+    v_t = v_t.reshape(B, cfg.num_kv_heads, cfg.head_dim)
+    if use_rope:
+        pos = (cache_len - 1) if position is None else position
+        pos = jnp.asarray(pos)
+        if pos.ndim == 0:
+            pos = jnp.full((B,), pos)
+        q = rope(q[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+        k_t = rope(k_t[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+    S = k_cache.shape[1]
+    slot = (jnp.asarray(cache_len) - 1) % S
+    if slot.ndim == 0:
+        slot = jnp.full((B,), slot)
+
+    def _insert(cache, s, t):
+        return jax.lax.dynamic_update_slice(cache, t[None], (s, 0, 0))
+
+    k_cache = jax.vmap(_insert)(k_cache, slot, k_t.astype(k_cache.dtype))
+    v_cache = jax.vmap(_insert)(v_cache, slot, v_t.astype(v_cache.dtype))
+    eff_len = jnp.minimum(jnp.asarray(cache_len), S)
+    out = ops.decode_attention(q, k_cache, v_cache, eff_len,
+                               window=window, impl=impl)
+    out = out.reshape(B, cfg.num_heads * cfg.head_dim)
+    return linear(out, p["wo"]), k_cache, v_cache
+
+
+def cross_attention_decode(p, cfg: ModelConfig, x_t, memory, impl=None):
+    """Decode-time cross attention against a fixed encoder memory."""
+    B = x_t.shape[0]
+    out, _ = attention(p, cfg, x_t[:, None], kv_x=memory, causal=False,
+                       use_rope=False, impl=impl)
+    return out[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, *, d_in: Optional[int] = None,
+             d_ff: Optional[int] = None):
+    d = d_in or cfg.d_model
+    f = d_ff or cfg.d_ff
+    dt = cfg.weight_dtype
+    ks = jax.random.split(key, 3)
+    if cfg.activation in ("swiglu", "geglu"):
+        if cfg.fused_projections:
+            return {"w_gateup": dense_init(ks[0], (d, 2 * f), dt),
+                    "w_down": dense_init(ks[2], (f, cfg.d_model), dt)}
+        return {"w_gate": dense_init(ks[0], (d, f), dt),
+                "w_up": dense_init(ks[1], (d, f), dt),
+                "w_down": dense_init(ks[2], (f, cfg.d_model), dt)}
+    return {"w_up": dense_init(ks[0], (d, f), dt),
+            "w_down": dense_init(ks[1], (f, cfg.d_model), dt)}
+
+
+def mlp(p, cfg: ModelConfig, x):
+    if "w_gateup" in p:
+        gu = linear(x, p["w_gateup"])
+        f = gu.shape[-1] // 2
+        act = jax.nn.silu if cfg.activation == "swiglu" else jax.nn.gelu
+        h = act(gu[..., :f]) * gu[..., f:]
+    elif cfg.activation == "swiglu":
+        h = jax.nn.silu(linear(x, p["w_gate"])) * linear(x, p["w_up"])
+    elif cfg.activation == "geglu":
+        h = jax.nn.gelu(linear(x, p["w_gate"])) * linear(x, p["w_up"])
+    else:  # gelu_mlp
+        h = jax.nn.gelu(linear(x, p["w_up"]))
+    return linear(h, p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 2)
+    p = {"embedding": dense_init(ks[0], (cfg.vocab_size, cfg.d_model),
+                                 cfg.weight_dtype, scale=1.0)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(ks[1], (cfg.d_model, cfg.vocab_size),
+                                  cfg.weight_dtype)
+    return p
+
+
+def embed(p, cfg: ModelConfig, tokens):
+    return jnp.take(p["embedding"], tokens, axis=0)
+
+
+def unembed(p, cfg: ModelConfig, h):
+    if cfg.tie_embeddings:
+        return jnp.einsum("...d,vd->...v", h, p["embedding"])
+    return jnp.einsum("...d,dv->...v", h, p["unembed"])

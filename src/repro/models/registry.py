@@ -1,0 +1,81 @@
+"""Model family registry: maps ``ModelConfig.family`` to the functional
+model API, and arch ids to configs (populated by ``repro.configs``)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax.numpy as jnp
+
+from . import encdec, hybrid, moe, ssm, transformer, vlm
+from .config import ModelConfig, ShapeSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    init: Callable
+    forward_hidden: Callable
+    logits_fn: Callable
+    init_cache: Callable
+    prefill: Callable
+    decode_step: Callable
+
+
+_FAMILIES: Dict[str, ModelApi] = {
+    "dense": ModelApi(transformer.init, transformer.forward_hidden,
+                      transformer.logits_fn, transformer.init_cache,
+                      transformer.prefill, transformer.decode_step),
+    "moe": ModelApi(moe.init, moe.forward_hidden, moe.logits_fn,
+                    moe.init_cache, moe.prefill, moe.decode_step),
+    "ssm": ModelApi(ssm.init, ssm.forward_hidden, ssm.logits_fn,
+                    ssm.init_cache, ssm.prefill, ssm.decode_step),
+    "hybrid": ModelApi(hybrid.init, hybrid.forward_hidden, hybrid.logits_fn,
+                       hybrid.init_cache, hybrid.prefill, hybrid.decode_step),
+    "audio": ModelApi(encdec.init, encdec.forward_hidden, encdec.logits_fn,
+                      encdec.init_cache, encdec.prefill, encdec.decode_step),
+    "vlm": ModelApi(vlm.init, vlm.forward_hidden, vlm.logits_fn,
+                    vlm.init_cache, vlm.prefill, vlm.decode_step),
+}
+
+
+def family_api(family: str) -> ModelApi:
+    return _FAMILIES[family]
+
+
+def model_api(cfg: ModelConfig) -> ModelApi:
+    return family_api(cfg.family)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec,
+                *, batch_override: Optional[int] = None,
+                seq_override: Optional[int] = None) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of (cfg, shape) —
+    weak-type-correct, shardable, no device allocation.  Used by the
+    dry-run; smoke tests materialize real arrays of the same shapes."""
+    import jax
+
+    B = batch_override or shape.global_batch
+    L = seq_override or shape.seq_len
+    tok = jnp.int32
+    specs: Dict[str, Any] = {}
+    if shape.kind == "train":
+        specs["tokens"] = jax.ShapeDtypeStruct((B, L), tok)
+        specs["labels"] = jax.ShapeDtypeStruct((B, L), tok)
+    elif shape.kind == "prefill":
+        specs["tokens"] = jax.ShapeDtypeStruct((B, L), tok)
+    else:  # decode: one new token + a cache of length L (built separately)
+        specs["token"] = jax.ShapeDtypeStruct((B,), tok)
+    if cfg.family == "audio":
+        if shape.kind == "decode":
+            pass  # encoder memory lives in the cache (cross_k/v)
+        else:
+            specs["embeddings"] = jax.ShapeDtypeStruct(
+                (B, cfg.encoder_len, cfg.d_model), cfg.compute_dtype)
+    if cfg.family == "vlm" and shape.kind != "decode":
+        specs["embeddings"] = jax.ShapeDtypeStruct(
+            (B, cfg.prefix_len, cfg.d_model), cfg.compute_dtype)
+        # text tokens shrink so prefix + text == the assigned seq_len
+        specs["tokens"] = jax.ShapeDtypeStruct((B, L - cfg.prefix_len), tok)
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((B, L - cfg.prefix_len), tok)
+    return specs

@@ -1,0 +1,216 @@
+"""Mamba-2 (SSD — state-space duality) model, attention-free (mamba2-2.7b).
+
+Block = in_proj -> causal depthwise conv (silu) -> SSD chunked scan (the
+Pallas ``ssd_scan`` kernel on TPU) -> gated RMSNorm -> out_proj.  Decode is
+O(1) per token: a (k-1)-deep conv state plus the (H, P, N) SSD state —
+this is what makes long_500k natively sub-quadratic for this family.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from . import layers, transformer
+from .config import ModelConfig
+from .sharding import constrain_activation
+
+
+# ---------------------------------------------------------------------------
+# mamba2 block
+# ---------------------------------------------------------------------------
+
+def conv_channels(cfg: ModelConfig) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+
+
+def init_mamba_block(key, cfg: ModelConfig):
+    d, di = cfg.d_model, cfg.d_inner
+    H, G, N = cfg.ssm_nheads, cfg.ssm_ngroups, cfg.ssm_state
+    k = cfg.ssm_conv_kernel
+    ch = conv_channels(cfg)
+    dt_ = cfg.weight_dtype
+    ks = jax.random.split(key, 5)
+    d_proj = 2 * di + 2 * G * N + H
+    return {
+        "ln": layers.init_norm(ks[0], cfg),
+        "in_proj": layers.dense_init(ks[1], (d, d_proj), dt_),
+        "conv_w": layers.dense_init(ks[2], (k, ch), dt_, scale=k ** -0.5),
+        "conv_b": jnp.zeros((ch,), dt_),
+        "A_log": jnp.zeros((H,), jnp.float32),      # A = -exp(A_log) = -1
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "gate_ln": {"w": jnp.ones((di,), dt_)},
+        "out_proj": layers.dense_init(ks[3], (di, d), dt_),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt):
+    di, G, N, H = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di:di + di + 2 * G * N]
+    dt = zxbcdt[..., di + di + 2 * G * N:]
+    assert dt.shape[-1] == H
+    return z, xBC, dt
+
+
+def _causal_conv(p, u):
+    """u: (B, L, ch) depthwise causal conv, kernel (k, ch)."""
+    k = p["conv_w"].shape[0]
+    pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    L = u.shape[1]
+    y = sum(pad[:, i:i + L] * p["conv_w"][i][None, None] for i in range(k))
+    return jax.nn.silu((y + p["conv_b"][None, None]).astype(jnp.float32)
+                       ).astype(u.dtype)
+
+
+def _conv_step(p, conv_state, u_t):
+    """conv_state: (B, k-1, ch); u_t: (B, ch) -> (y_t, new_state)."""
+    k = p["conv_w"].shape[0]
+    window = jnp.concatenate([conv_state, u_t[:, None]], axis=1)  # (B, k, ch)
+    y = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                   p["conv_w"].astype(jnp.float32))
+    y = jax.nn.silu(y + p["conv_b"].astype(jnp.float32)).astype(u_t.dtype)
+    return y, window[:, 1:]
+
+
+def mamba_block(p, cfg: ModelConfig, x, *, initial_state=None,
+                return_state=False, impl=None):
+    """x: (B, L, d) -> (B, L, d) [+ (conv_tail, ssd_state)]."""
+    x = constrain_activation(x)
+    B, L, d = x.shape
+    di, G, N, H, P = (cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state,
+                      cfg.ssm_nheads, cfg.ssm_headdim)
+    xn = layers.apply_norm(p["ln"], cfg, x)
+    zxbcdt = layers.linear(xn, p["in_proj"])
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    xBC_conv = _causal_conv(p, xBC)
+    xs = xBC_conv[..., :di].reshape(B, L, H, P)
+    Bm = xBC_conv[..., di:di + G * N].reshape(B, L, G, N)
+    Cm = xBC_conv[..., di + G * N:].reshape(B, L, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None])
+    A = -jnp.exp(p["A_log"])
+    y, state = ops.ssd_scan(xs, dt, A, Bm, Cm, p["D"], chunk=cfg.ssm_chunk,
+                            initial_state=initial_state, impl=impl)
+    y = y.reshape(B, L, di)
+    y = layers.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                        p["gate_ln"]["w"], cfg.rms_eps)
+    out = layers.linear(y, p["out_proj"])
+    if return_state:
+        k = cfg.ssm_conv_kernel
+        tail = xBC[:, -(k - 1):] if L >= k - 1 else jnp.pad(
+            xBC, ((0, 0), (k - 1 - L, 0), (0, 0)))
+        return x + out, (tail, state)
+    return x + out
+
+
+def mamba_block_decode(p, cfg: ModelConfig, x_t, conv_state, ssd_state, *,
+                       impl=None):
+    """x_t: (B, d); conv_state: (B, k-1, ch); ssd_state: (B, H, P, N)."""
+    x_t = constrain_activation(x_t)
+    B, d = x_t.shape
+    di, G, N, H, P = (cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state,
+                      cfg.ssm_nheads, cfg.ssm_headdim)
+    xn = layers.apply_norm(p["ln"], cfg, x_t[:, None])[:, 0]
+    zxbcdt = layers.linear(xn, p["in_proj"])
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    xBC_conv, conv_state = _conv_step(p, conv_state, xBC)
+    xs = xBC_conv[..., :di].reshape(B, H, P)
+    Bm = xBC_conv[..., di:di + G * N].reshape(B, G, N)
+    Cm = xBC_conv[..., di + G * N:].reshape(B, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None])
+    A = -jnp.exp(p["A_log"])
+    y, ssd_state = ops.ssd_decode_step(ssd_state, xs, dt, A, Bm, Cm, p["D"])
+    y = y.reshape(B, di)
+    y = layers.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                        p["gate_ln"]["w"], cfg.rms_eps)
+    return x_t + layers.linear(y, p["out_proj"]), conv_state, ssd_state
+
+
+# ---------------------------------------------------------------------------
+# model API
+# ---------------------------------------------------------------------------
+
+def init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 3)
+    return {
+        "embed": layers.init_embedding(ks[0], cfg),
+        "blocks": transformer.stack_layer_params(
+            ks[1], cfg.num_layers, lambda k: init_mamba_block(k, cfg)),
+        "ln_f": layers.init_norm(ks[2], cfg),
+    }
+
+
+def forward_hidden(params, cfg: ModelConfig, batch: Dict[str, Any], *,
+                   train: bool = False, impl=None):
+    tokens = batch["tokens"]
+    h = layers.embed(params["embed"], cfg, tokens).astype(cfg.compute_dtype)
+
+    def body(carry, lp):
+        return mamba_block(lp, cfg, carry, impl=impl), None
+
+    scan_body = jax.checkpoint(body) if train else body
+    h, _ = jax.lax.scan(scan_body, h, params["blocks"])
+    h = layers.apply_norm(params["ln_f"], cfg, h)
+    return h, jnp.zeros((), jnp.float32)
+
+
+def logits_fn(params, cfg: ModelConfig, hidden):
+    return layers.unembed(params["embed"], cfg, hidden)
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int, dtype=None):
+    dtype = dtype or cfg.compute_dtype
+    k, ch = cfg.ssm_conv_kernel, conv_channels(cfg)
+    H, P, N = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state
+    Lyr = cfg.num_layers
+    return {
+        "conv": jnp.zeros((Lyr, batch_size, k - 1, ch), dtype),
+        "ssd": jnp.zeros((Lyr, batch_size, H, P, N), jnp.float32),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params, cfg: ModelConfig, batch: Dict[str, Any], *,
+            cache_size: Optional[int] = None, impl=None):
+    tokens = batch["tokens"]
+    B, L = tokens.shape
+    h = layers.embed(params["embed"], cfg, tokens).astype(cfg.compute_dtype)
+
+    def body(carry, lp):
+        out, (tail, state) = mamba_block(lp, cfg, carry, return_state=True,
+                                         impl=impl)
+        return out, (tail, state)
+
+    h, (conv, ssd) = jax.lax.scan(body, h, params["blocks"])
+    h = layers.apply_norm(params["ln_f"], cfg, h[:, -1:])
+    logits = logits_fn(params, cfg, h[:, 0])
+    cache = {"conv": conv, "ssd": ssd, "len": jnp.asarray(L, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(params, cfg: ModelConfig, token, cache, impl=None):
+    """Carry-DUS cache update (see transformer.decode_step): one in-place
+    state buffer instead of scan xs+ys double-buffering."""
+    x = layers.embed(params["embed"], cfg, token).astype(cfg.compute_dtype)
+
+    def body(carry, xs):
+        x, conv_all, ssd_all = carry
+        lp, i = xs
+        conv = jax.lax.dynamic_index_in_dim(conv_all, i, 0, keepdims=False)
+        ssd = jax.lax.dynamic_index_in_dim(ssd_all, i, 0, keepdims=False)
+        out, conv, ssd = mamba_block_decode(lp, cfg, x, conv, ssd,
+                                            impl=impl)
+        conv_all = jax.lax.dynamic_update_index_in_dim(conv_all, conv, i, 0)
+        ssd_all = jax.lax.dynamic_update_index_in_dim(
+            ssd_all, ssd.astype(ssd_all.dtype), i, 0)
+        return (out, conv_all, ssd_all), None
+
+    (x, conv, ssd), _ = jax.lax.scan(
+        body, (x, cache["conv"], cache["ssd"]),
+        (params["blocks"], jnp.arange(cfg.num_layers)))
+    h = layers.apply_norm(params["ln_f"], cfg, x[:, None])[:, 0]
+    logits = logits_fn(params, cfg, h)
+    return logits, {"conv": conv, "ssd": ssd, "len": cache["len"] + 1}

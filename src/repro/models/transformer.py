@@ -1,0 +1,192 @@
+"""Dense decoder-only transformer (llama/mistral/qwen/minicpm families).
+
+Layer-stacked parameters + ``jax.lax.scan`` over layers keep the HLO size
+O(1) in depth (88-layer configs would otherwise blow up lowering time for
+the 40-combo dry-run).  Supports GQA/MQA/MHA, optional sliding window
+(native for mixtral-style cfgs, or the explicit long-context variant), and
+prefix-LM masking (used by the VLM wrapper).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .config import ModelConfig
+from .sharding import constrain_activation
+
+
+def stack_layer_params(key, n: int, init_fn):
+    keys = jax.random.split(key, n)
+    ps = [init_fn(k) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *ps)
+
+
+def init_block(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    return {
+        "ln1": layers.init_norm(ks[0], cfg),
+        "attn": layers.init_attention(ks[1], cfg),
+        "ln2": layers.init_norm(ks[2], cfg),
+        "mlp": layers.init_mlp(ks[3], cfg),
+    }
+
+
+def block_forward(p, cfg: ModelConfig, x, *, positions, window, prefix_len,
+                  impl=None):
+    x = constrain_activation(x)
+    h, _ = layers.attention(p["attn"], cfg, layers.apply_norm(p["ln1"], cfg, x),
+                            positions=positions, causal=True, window=window,
+                            prefix_len=prefix_len, impl=impl)
+    x = x + h
+    x = x + layers.mlp(p["mlp"], cfg, layers.apply_norm(p["ln2"], cfg, x))
+    return x
+
+
+def block_prefill(p, cfg: ModelConfig, x, *, positions, window, prefix_len,
+                  cache_size, impl=None):
+    x = constrain_activation(x)
+    xn = layers.apply_norm(p["ln1"], cfg, x)
+    h, (k, v) = layers.attention(p["attn"], cfg, xn, positions=positions,
+                                 causal=True, window=window,
+                                 prefix_len=prefix_len, impl=impl)
+    x = x + h
+    x = x + layers.mlp(p["mlp"], cfg, layers.apply_norm(p["ln2"], cfg, x))
+    L = k.shape[1]
+    if cache_size > L:
+        pad = ((0, 0), (0, cache_size - L), (0, 0), (0, 0))
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+    elif cache_size < L:  # ring cache (SWA): keep the trailing window,
+        # laid out so position p sits at ring slot p % cache_size (decode
+        # writes token at slot (len-1) % S, so layouts must agree).
+        k, v = k[:, L - cache_size:], v[:, L - cache_size:]
+        shift = L % cache_size
+        k = jnp.roll(k, shift, axis=1)
+        v = jnp.roll(v, shift, axis=1)
+    return x, (k, v)
+
+
+def block_decode(p, cfg: ModelConfig, x_t, k_cache, v_cache, cache_len, *,
+                 window, impl=None):
+    x_t = constrain_activation(x_t)
+    S = k_cache.shape[1]
+    eff_window = None if (window is None or S <= window) else window
+    xn = layers.apply_norm(p["ln1"], cfg, x_t[:, None])[:, 0]
+    h, k_cache, v_cache = layers.attention_decode(
+        p["attn"], cfg, xn, k_cache, v_cache, cache_len,
+        window=eff_window, impl=impl)
+    x_t = x_t + h
+    xn = layers.apply_norm(p["ln2"], cfg, x_t[:, None])[:, 0]
+    x_t = x_t + layers.mlp(p["mlp"], cfg, xn)
+    return x_t, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# model API
+# ---------------------------------------------------------------------------
+
+def init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 3)
+    return {
+        "embed": layers.init_embedding(ks[0], cfg),
+        "blocks": stack_layer_params(ks[1], cfg.num_layers,
+                                     lambda k: init_block(k, cfg)),
+        "ln_f": layers.init_norm(ks[2], cfg),
+    }
+
+
+def _window(cfg: ModelConfig) -> Optional[int]:
+    return cfg.sliding_window
+
+
+def forward_hidden(params, cfg: ModelConfig, batch: Dict[str, Any], *,
+                   train: bool = False, impl=None):
+    tokens = batch["tokens"]
+    B, L = tokens.shape
+    h = layers.embed(params["embed"], cfg, tokens).astype(cfg.compute_dtype)
+    positions = jnp.arange(L)[None]
+    window = _window(cfg)
+
+    def body(carry, lp):
+        out = block_forward(lp, cfg, carry, positions=positions,
+                            window=window, prefix_len=0, impl=impl)
+        return out, None
+
+    scan_body = jax.checkpoint(body) if train else body
+    h, _ = jax.lax.scan(scan_body, h, params["blocks"])
+    h = layers.apply_norm(params["ln_f"], cfg, h)
+    return h, jnp.zeros((), jnp.float32)  # (hidden, aux_loss)
+
+
+def logits_fn(params, cfg: ModelConfig, hidden):
+    return layers.unembed(params["embed"], cfg, hidden)
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int,
+               dtype=None) -> Dict[str, Any]:
+    dtype = dtype or cfg.compute_dtype
+    window = _window(cfg)
+    S = min(max_len, window) if window is not None else max_len
+    shape = (cfg.num_layers, batch_size, S, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "len": jnp.zeros((), jnp.int32)}
+
+
+def prefill(params, cfg: ModelConfig, batch: Dict[str, Any], *,
+            cache_size: Optional[int] = None, impl=None):
+    tokens = batch["tokens"]
+    B, L = tokens.shape
+    window = _window(cfg)
+    cache_size = cache_size or L
+    if window is not None:
+        cache_size = min(cache_size, window)
+    else:
+        cache_size = max(cache_size, L)  # full attention never trims
+    h = layers.embed(params["embed"], cfg, tokens).astype(cfg.compute_dtype)
+    positions = jnp.arange(L)[None]
+
+    def body(carry, lp):
+        out, kv = block_prefill(lp, cfg, carry, positions=positions,
+                                window=window, prefix_len=0,
+                                cache_size=cache_size, impl=impl)
+        return out, kv
+
+    h, (k, v) = jax.lax.scan(body, h, params["blocks"])
+    h = layers.apply_norm(params["ln_f"], cfg, h[:, -1:])
+    logits = logits_fn(params, cfg, h[:, 0])
+    cache = {"k": k, "v": v, "len": jnp.asarray(L, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(params, cfg: ModelConfig, token, cache, impl=None):
+    """token: (B,) int32.  One new token; cache['len'] counts tokens already
+    in the cache (the new token is written at ring slot len % S).
+
+    The full stacked cache rides in the scan CARRY and is updated with
+    dynamic_update_index — XLA performs carry DUS in place, so a donated
+    cache costs ONE buffer instead of the scan xs+ys double buffer (which
+    blew the 16 GB/chip budget at decode_32k — EXPERIMENTS.md §Dry-run)."""
+    B = token.shape[0]
+    window = _window(cfg)
+    new_len = cache["len"] + 1
+    x = layers.embed(params["embed"], cfg, token).astype(cfg.compute_dtype)
+
+    def body(carry, xs):
+        x, k_all, v_all = carry
+        lp, i = xs
+        kc = jax.lax.dynamic_index_in_dim(k_all, i, 0, keepdims=False)
+        vc = jax.lax.dynamic_index_in_dim(v_all, i, 0, keepdims=False)
+        out, kc, vc = block_decode(lp, cfg, x, kc, vc, new_len,
+                                   window=window, impl=impl)
+        k_all = jax.lax.dynamic_update_index_in_dim(k_all, kc, i, 0)
+        v_all = jax.lax.dynamic_update_index_in_dim(v_all, vc, i, 0)
+        return (out, k_all, v_all), None
+
+    (x, k, v), _ = jax.lax.scan(
+        body, (x, cache["k"], cache["v"]),
+        (params["blocks"], jnp.arange(cfg.num_layers)))
+    h = layers.apply_norm(params["ln_f"], cfg, x[:, None])[:, 0]
+    logits = logits_fn(params, cfg, h)
+    return logits, {"k": k, "v": v, "len": new_len}

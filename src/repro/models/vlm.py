@@ -1,0 +1,83 @@
+"""PaliGemma-3B LANGUAGE BACKBONE (gemma-2b decoder + image-prefix).
+
+The SigLIP vision tower + projector are a STUB per the assignment
+carve-out: ``input_specs`` feeds precomputed patch embeddings
+(B, prefix_len, d_model).  This module implements the gemma-style decoder
+(MQA kv=1, head_dim 256, geglu, tied embeddings) with PaliGemma's
+prefix-LM masking: bidirectional attention over the image prefix, causal
+over text.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import layers, transformer
+from .config import ModelConfig
+
+
+init = transformer.init          # same param structure as a dense decoder
+init_block = transformer.init_block
+logits_fn = transformer.logits_fn
+init_cache = transformer.init_cache
+
+
+def _concat_inputs(params, cfg: ModelConfig, batch):
+    img = batch["embeddings"].astype(cfg.compute_dtype)  # (B, P, d)
+    tok = layers.embed(params["embed"], cfg,
+                       batch["tokens"]).astype(cfg.compute_dtype)
+    return jnp.concatenate([img, tok], axis=1)
+
+
+def forward_hidden(params, cfg: ModelConfig, batch: Dict[str, Any], *,
+                   train: bool = False, impl=None):
+    """Returns hidden states for the FULL (prefix + text) sequence; the
+    training loss masks the prefix region."""
+    h = _concat_inputs(params, cfg, batch)
+    B, L, _ = h.shape
+    positions = jnp.arange(L)[None]
+    prefix = cfg.prefix_len
+
+    def body(carry, lp):
+        out = transformer.block_forward(lp, cfg, carry, positions=positions,
+                                        window=cfg.sliding_window,
+                                        prefix_len=prefix, impl=impl)
+        return out, None
+
+    scan_body = jax.checkpoint(body) if train else body
+    h, _ = jax.lax.scan(scan_body, h, params["blocks"])
+    h = layers.apply_norm(params["ln_f"], cfg, h)
+    return h, jnp.zeros((), jnp.float32)
+
+
+def prefill(params, cfg: ModelConfig, batch: Dict[str, Any], *,
+            cache_size: Optional[int] = None, impl=None):
+    h = _concat_inputs(params, cfg, batch)
+    B, L, _ = h.shape            # L includes the image prefix
+    window = cfg.sliding_window
+    # callers budget cache_size in TEXT tokens; the image prefix rides along
+    cache_size = (cache_size + cfg.prefix_len) if cache_size else L
+    if window is not None:
+        cache_size = min(cache_size, window)
+    else:
+        cache_size = max(cache_size, L)  # full attention never trims
+    positions = jnp.arange(L)[None]
+
+    def body(carry, lp):
+        out, kv = transformer.block_prefill(
+            lp, cfg, carry, positions=positions, window=window,
+            prefix_len=cfg.prefix_len, cache_size=cache_size, impl=impl)
+        return out, kv
+
+    h, (k, v) = jax.lax.scan(body, h, params["blocks"])
+    h = layers.apply_norm(params["ln_f"], cfg, h[:, -1:])
+    logits = logits_fn(params, cfg, h[:, 0])
+    return logits, {"k": k, "v": v, "len": jnp.asarray(L, jnp.int32)}
+
+
+# decode: after prefill every cached position is attendable by new tokens
+# (prefix bidirectionality only affects prefix-internal rows, which are
+# already baked into the cache), so dense decode semantics apply directly.
+decode_step = transformer.decode_step

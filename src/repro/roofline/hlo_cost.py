@@ -1,0 +1,260 @@
+"""Trip-count-aware cost analysis of optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop body ONCE — our
+models scan over layers/microbatches/loss-chunks, so its flops are low by
+~2 orders of magnitude (verified: a 10-step scanned matmul reports 1/10th
+of the unrolled flops).  This module re-derives per-device costs by parsing
+the optimized HLO and multiplying each while body by its
+``known_trip_count`` backend annotation:
+
+  flops  — 2*M*N*K for every ``dot`` (contraction sizes from operand
+           shapes), recursively through fusions/calls/whiles;
+  bytes  — operand + result bytes of every top-level instruction (fusion
+           internals excluded: they live in registers/VMEM), i.e. traffic
+           at fusion boundaries, matching XLA's own "bytes accessed" model;
+  collectives — per-device wire bytes with ring-algorithm factors.
+
+This is the per-DEVICE cost of the SPMD-partitioned module (the HLO we
+parse is the per-device program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "s4": 1, "u4": 1,
+}
+
+_NO_TRAFFIC_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "iota", "after-all", "opt-barrier",
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s+->.*\{\s*$")
+_INSTR = re.compile(
+    r"^\s+(?:ROOT\s+)?%?([\w\.\-]+)\s+=\s+"
+    r"((?:\([^()]*\))|(?:[\w\[\],]+(?:\{[\d,]*\})?))\s+"
+    r"([\w\-]+)\((.*)$")
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_TRIP = re.compile(r'known_trip_count[\\"]*:\s*\{[\\"]*n[\\"]*:[\\"]*(\d+)')
+_GROUPS = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_OPERAND = re.compile(r"%([\w\.\-]+)")
+_CALLEE_ATTRS = ("body", "condition", "calls", "to_apply")
+
+
+def _shape_dims(text: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dtype, dims in _SHAPE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        out.append((dtype, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _shape_dims(text):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_wire_bytes: float = 0.0
+    coll_result_bytes: float = 0.0
+    coll_counts: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Cost", times: float = 1.0) -> None:
+        self.flops += other.flops * times
+        self.bytes += other.bytes * times
+        self.coll_wire_bytes += other.coll_wire_bytes * times
+        self.coll_result_bytes += other.coll_result_bytes * times
+        for k, v in other.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0.0) + v * times
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    shape: str
+    opcode: str
+    rest: str                     # operand list + attrs (rest of line)
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.computations: Dict[str, List[_Instr]] = {}
+        self.entry: Optional[str] = None
+        self._parse(hlo_text)
+        self._memo: Dict[str, Cost] = {}
+
+    # -- parsing ------------------------------------------------------------
+    def _parse(self, text: str) -> None:
+        cur: Optional[str] = None
+        for raw in text.splitlines():
+            if cur is None:
+                m = _COMP_HDR.match(raw)
+                if m:
+                    cur = m.group(2)
+                    self.computations[cur] = []
+                    if m.group(1):
+                        self.entry = cur
+                continue
+            if raw.startswith("}"):
+                cur = None
+                continue
+            m = _INSTR.match(raw)
+            if m:
+                self.computations[cur].append(
+                    _Instr(name=m.group(1), shape=m.group(2),
+                           opcode=m.group(3), rest=m.group(4)))
+
+    # -- helpers --------------------------------------------------------------
+    def _symbols(self, comp: str) -> Dict[str, str]:
+        return {i.name: i.shape for i in self.computations.get(comp, ())}
+
+    @staticmethod
+    def _operands(instr: _Instr) -> List[str]:
+        # operand refs appear before the first "), " attr separator
+        depth, end = 0, len(instr.rest)
+        for idx, ch in enumerate(instr.rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                if depth == 0:
+                    end = idx
+                    break
+                depth -= 1
+        return _OPERAND.findall(instr.rest[:end])
+
+    def _callees(self, instr: _Instr) -> List[str]:
+        out = []
+        for attr in _CALLEE_ATTRS:
+            for m in re.finditer(rf"{attr}=%?([\w\.\-]+)", instr.rest):
+                out.append(m.group(1))
+        return out
+
+    # -- per-instruction costs ---------------------------------------------
+    def _dot_flops(self, instr: _Instr, symbols: Dict[str, str]) -> float:
+        result_elems = 0
+        for _, dims in _shape_dims(instr.shape):
+            n = 1
+            for d in dims:
+                n *= d
+            result_elems += n
+        ops = self._operands(instr)
+        k = 1
+        if ops:
+            lhs_shape = symbols.get(ops[0], "")
+            dims_m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}",
+                               instr.rest)
+            sd = _shape_dims(lhs_shape)
+            if dims_m and sd:
+                lhs_dims = sd[0][1]
+                for ci in (int(x) for x in dims_m.group(1).split(",") if x):
+                    if ci < len(lhs_dims):
+                        k *= lhs_dims[ci]
+        return 2.0 * result_elems * k
+
+    @staticmethod
+    def _group_size(instr: _Instr) -> int:
+        m = _GROUPS.search(instr.rest)
+        if m:
+            return int(m.group(2))
+        m = _GROUPS_LIST.search(instr.rest)
+        if m:
+            return len([x for x in m.group(1).split(",") if x.strip()])
+        return 2
+
+    @staticmethod
+    def _wire_factor(op: str, n: int) -> float:
+        if n <= 1:
+            return 0.0
+        if op == "all-reduce":
+            return 2.0 * (n - 1) / n
+        if op == "all-gather":
+            return (n - 1) / n
+        if op == "reduce-scatter":
+            return float(n - 1)          # input = n x result
+        if op == "all-to-all":
+            return (n - 1) / n
+        return 1.0                       # collective-permute
+
+    # -- computation cost (memoized, trip-count aware) ----------------------
+    def computation_cost(self, name: str) -> Cost:
+        if name in self._memo:
+            return self._memo[name]
+        self._memo[name] = Cost()        # cycle guard
+        total = Cost()
+        symbols = self._symbols(name)
+        for instr in self.computations.get(name, ()):
+            op = instr.opcode
+            base = op.replace("-start", "")
+            if op in _NO_TRAFFIC_OPS or op.endswith("-done"):
+                continue
+            # traffic at fusion boundaries
+            rb = _shape_bytes(instr.shape)
+            ob = sum(_shape_bytes(symbols.get(o, "")) for o in
+                     self._operands(instr))
+            total.bytes += rb + ob
+            if op == "dot":
+                total.flops += self._dot_flops(instr, symbols)
+            elif base in COLLECTIVE_OPS:
+                n = self._group_size(instr)
+                total.coll_result_bytes += rb
+                total.coll_wire_bytes += rb * self._wire_factor(base, n)
+                total.coll_counts[base] = total.coll_counts.get(base, 0) + 1
+            elif op == "while":
+                callees = {a: m for a in ("body", "condition")
+                           for m in re.findall(rf"{a}=%?([\w\.\-]+)",
+                                               instr.rest)}
+                trip = 1
+                tm = _TRIP.search(instr.rest)
+                if tm:
+                    trip = int(tm.group(1))
+                for comp in self._callees(instr):
+                    total.add(self.computation_cost(comp), times=trip)
+            elif op == "fusion":
+                # internals live in registers: count only embedded dots
+                for comp in self._callees(instr):
+                    sub = self.computation_cost(comp)
+                    total.flops += sub.flops
+            elif op in ("call", "conditional", "custom-call", "map",
+                        "reduce", "reduce-window", "sort", "scatter",
+                        "select-and-scatter", "async-start"):
+                heavy = ("call", "conditional", "async-start", "map")
+                if op in heavy:
+                    for comp in self._callees(instr):
+                        total.add(self.computation_cost(comp))
+                else:
+                    # reducers/comparators: flops negligible, traffic already
+                    # counted via operands/result above
+                    pass
+        self._memo[name] = total
+        return total
+
+    def entry_cost(self) -> Cost:
+        if self.entry is None:
+            # fall back: the computation with the most instructions
+            self.entry = max(self.computations,
+                             key=lambda c: len(self.computations[c]))
+        return self.computation_cost(self.entry)
+
+
+def analyze_hlo_text(hlo_text: str) -> Cost:
+    return HloCostModel(hlo_text).entry_cost()

@@ -1,0 +1,107 @@
+"""BS / MF batch composition (§3.1 operators, Eq. 5).
+
+* BS: group up to ``bs`` same-service requests per batch.
+* MF (multi-frame): for frequency tasks, take an IDENTICAL number of frames
+  (``mf``) from each of ``inter_request_count = floor(bs / mf)`` concurrent
+  homogeneous streams, filling the batch even when single streams are
+  bursty/uneven — the request-level trick that lifts GPU utilization.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Deque, Dict, List, Optional, Tuple
+
+from repro.core.allocator import ParallelPlan
+
+
+@dataclasses.dataclass
+class QueuedItem:
+    payload: Any                 # tokens / frame embedding reference
+    stream: int = 0              # stream/session id (MF groups by stream)
+    enqueued_s: float = 0.0
+    rid: int = 0
+
+
+@dataclasses.dataclass
+class ComposedBatch:
+    items: List[QueuedItem]
+    mf: int                      # frames taken per stream
+    streams: Tuple[int, ...]     # which streams contributed
+
+    @property
+    def size(self) -> int:
+        return len(self.items)
+
+
+class BSComposer:
+    """Latency tasks: plain FIFO batching up to ``bs``."""
+
+    def __init__(self, plan: ParallelPlan):
+        self.plan = plan
+        self.queue: Deque[QueuedItem] = collections.deque()
+
+    def add(self, item: QueuedItem) -> None:
+        self.queue.append(item)
+
+    def __len__(self) -> int:
+        return len(self.queue)
+
+    def compose(self) -> Optional[ComposedBatch]:
+        if not self.queue:
+            return None
+        items = []
+        while self.queue and len(items) < self.plan.bs:
+            items.append(self.queue.popleft())
+        return ComposedBatch(items=items, mf=1,
+                             streams=tuple({i.stream for i in items}))
+
+
+class MFComposer:
+    """Frequency tasks: per-stream queues; a batch takes exactly ``mf``
+    frames from each of up to ``inter_request_count`` streams (Eq. 5).
+    Falls back to fewer streams / partial mf when starved so frames never
+    wait past their latency budget."""
+
+    def __init__(self, plan: ParallelPlan):
+        self.plan = plan
+        self.streams: Dict[int, Deque[QueuedItem]] = {}
+
+    def add(self, item: QueuedItem) -> None:
+        self.streams.setdefault(item.stream, collections.deque()).append(item)
+
+    def __len__(self) -> int:
+        return sum(len(q) for q in self.streams.values())
+
+    def compose(self, *, now: float = 0.0,
+                max_wait_s: float = float("inf")) -> Optional[ComposedBatch]:
+        mf = max(1, self.plan.mf)
+        irc = self.plan.inter_request_count
+        ready = [s for s, q in self.streams.items() if len(q) >= mf]
+        overdue = any(q and now - q[0].enqueued_s >= max_wait_s
+                      for q in self.streams.values())
+        if len(ready) < 1 and not overdue:
+            return None
+        if not ready and overdue:
+            # partial-mf flush: take whatever the oldest streams have
+            ready = sorted((s for s, q in self.streams.items() if q),
+                           key=lambda s: self.streams[s][0].enqueued_s)
+        take_streams = ready[:irc]
+        items: List[QueuedItem] = []
+        for s in take_streams:
+            q = self.streams[s]
+            for _ in range(min(mf, len(q))):
+                items.append(q.popleft())
+        for s in list(self.streams):
+            if not self.streams[s]:
+                del self.streams[s]
+        if not items:
+            return None
+        return ComposedBatch(items=items, mf=mf, streams=tuple(take_streams))
+
+
+def make_composer(plan: ParallelPlan):
+    from repro.core.categories import Sensitivity
+    if plan.category.sensitivity == Sensitivity.FREQUENCY and plan.mf > 1:
+        return MFComposer(plan)
+    return BSComposer(plan)

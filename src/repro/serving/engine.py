@@ -1,0 +1,177 @@
+"""Live serving engine: batched prefill + decode driven by an EPARA
+ParallelPlan.
+
+``ServiceRuntime`` owns one service's params and its DP replica groups;
+each group runs batch-synchronous generation (prefill the composed batch,
+decode until done).  Request-level DP round-robins composed batches across
+groups (sticky for stateful archs).  The same engine object backs the CPU
+examples (reduced configs) and, via pjit'd step functions passed in by the
+launcher, the mesh deployment.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.allocator import DPGroupRouter, ParallelPlan
+from repro.models.config import ModelConfig
+from repro.models.registry import ModelApi, model_api
+
+from .batching import BSComposer, ComposedBatch, MFComposer, QueuedItem, \
+    make_composer
+from .sampler import SamplerConfig, sample
+
+
+@dataclasses.dataclass
+class GenerationRequest:
+    rid: int
+    tokens: np.ndarray               # prompt (L,) int32
+    max_new_tokens: int = 16
+    stream: int = 0
+    extras: Optional[Dict[str, Any]] = None   # e.g. image/frame embeddings
+    submitted_s: float = 0.0
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    rid: int
+    tokens: np.ndarray               # generated ids (n,)
+    prefill_s: float
+    decode_s: float
+    group: int
+
+
+class ServiceRuntime:
+    """One deployed service: params + plan + DP groups."""
+
+    def __init__(self, cfg: ModelConfig, params, plan: ParallelPlan, *,
+                 prefill_fn: Optional[Callable] = None,
+                 decode_fn: Optional[Callable] = None,
+                 sampler: SamplerConfig = SamplerConfig(), seed: int = 0,
+                 impl: Optional[str] = None):
+        self.cfg = cfg
+        self.params = params
+        self.plan = plan
+        self.api: ModelApi = model_api(cfg)
+        self.router = DPGroupRouter(plan)
+        self.composer = make_composer(plan)
+        self.sampler = sampler
+        self._key = jax.random.PRNGKey(seed)
+        impl = impl
+        api = self.api
+
+        if prefill_fn is None:
+            prefill_fn = jax.jit(
+                lambda p, b, cs: api.prefill(p, cfg, b, cache_size=cs,
+                                             impl=impl),
+                static_argnums=(2,))
+        if decode_fn is None:
+            decode_fn = jax.jit(
+                lambda p, t, c: api.decode_step(p, cfg, t, c, impl=impl))
+        self.prefill_fn = prefill_fn
+        self.decode_fn = decode_fn
+
+    # -- queue ------------------------------------------------------------
+    def submit(self, req: GenerationRequest, now: float = 0.0) -> None:
+        self.composer.add(QueuedItem(payload=req, stream=req.stream,
+                                     enqueued_s=now, rid=req.rid))
+
+    def pending(self) -> int:
+        return len(self.composer)
+
+    # -- execution ----------------------------------------------------------
+    def _pad_prompts(self, reqs: Sequence[GenerationRequest]):
+        L = max(len(r.tokens) for r in reqs)
+        toks = np.zeros((len(reqs), L), np.int32)
+        lens = np.zeros((len(reqs),), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, L - len(r.tokens):] = r.tokens   # left-pad
+            lens[i] = len(r.tokens)
+        return jnp.asarray(toks), lens
+
+    def _build_batch(self, reqs: Sequence[GenerationRequest], toks):
+        batch: Dict[str, Any] = {"tokens": toks}
+        if self.cfg.family in ("audio", "vlm"):
+            embs = [r.extras["embeddings"] for r in reqs]
+            batch["embeddings"] = jnp.asarray(np.stack(embs))
+        return batch
+
+    def run_batch(self, composed: ComposedBatch, *,
+                  now: float = 0.0) -> List[GenerationResult]:
+        reqs = [item.payload for item in composed.items]
+        group = self.router.route(session=reqs[0].stream)
+        toks, lens = self._pad_prompts(reqs)
+        max_new = max(r.max_new_tokens for r in reqs)
+        cache_size = int(toks.shape[1] + max_new)
+
+        t0 = time.perf_counter()
+        batch = self._build_batch(reqs, toks)
+        logits, cache = self.prefill_fn(self.params, batch, cache_size)
+        logits = jax.block_until_ready(logits)
+        t1 = time.perf_counter()
+
+        outs = []
+        cur = self._sample(logits)
+        outs.append(np.asarray(cur))
+        for _ in range(max_new - 1):
+            logits, cache = self.decode_fn(self.params, cur, cache)
+            cur = self._sample(logits)
+            outs.append(np.asarray(cur))
+        jax.block_until_ready(cur)
+        t2 = time.perf_counter()
+
+        gen = np.stack(outs, axis=1)  # (B, max_new)
+        results = []
+        for i, r in enumerate(reqs):
+            results.append(GenerationResult(
+                rid=r.rid, tokens=gen[i, :r.max_new_tokens],
+                prefill_s=t1 - t0, decode_s=t2 - t1, group=group))
+        return results
+
+    def _sample(self, logits):
+        self._key, sub = jax.random.split(self._key)
+        return sample(logits, sub, self.sampler)
+
+    def step(self, now: float = 0.0,
+             max_wait_s: float = float("inf")) -> List[GenerationResult]:
+        """Compose one batch (BS or MF semantics) and run it."""
+        if isinstance(self.composer, MFComposer):
+            composed = self.composer.compose(now=now, max_wait_s=max_wait_s)
+        else:
+            composed = self.composer.compose()
+        if composed is None:
+            return []
+        return self.run_batch(composed, now=now)
+
+
+class EparaServingEngine:
+    """Multi-service front door: submits requests to ServiceRuntimes by
+    service name.  Placement/offload decisions come from the control plane
+    (see examples/serve_cluster.py); this class is the data plane."""
+
+    def __init__(self):
+        self.runtimes: Dict[str, ServiceRuntime] = {}
+        self._results: List[GenerationResult] = []
+
+    def deploy(self, name: str, runtime: ServiceRuntime) -> None:
+        self.runtimes[name] = runtime
+
+    def submit(self, service: str, req: GenerationRequest,
+               now: float = 0.0) -> None:
+        self.runtimes[service].submit(req, now)
+
+    def drain(self, now: float = 0.0) -> List[GenerationResult]:
+        out: List[GenerationResult] = []
+        for rt in self.runtimes.values():
+            while rt.pending():
+                res = rt.step(now=now, max_wait_s=0.0)
+                if not res:
+                    break
+                out.extend(res)
+        self._results.extend(out)
+        return out

@@ -1,0 +1,54 @@
+"""Cache pytree utilities for the serving engine.
+
+Model caches are pytrees whose array leaves have layout (layers, batch, ...)
+with ``len`` scalars.  These helpers slice/merge along the batch axis so the
+engine can admit/evict slots without knowing each family's cache layout.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+
+_SCALAR_KEYS = ("len",)
+
+
+def _is_scalar_entry(key: str) -> bool:
+    return key in _SCALAR_KEYS
+
+
+def map_batch(cache: Dict[str, Any], fn) -> Dict[str, Any]:
+    """Apply fn to every array leaf along its batch axis (axis=1)."""
+    out = {}
+    for k, v in cache.items():
+        out[k] = v if _is_scalar_entry(k) else fn(v)
+    return out
+
+
+def select_slots(cache: Dict[str, Any], idx: Sequence[int]) -> Dict[str, Any]:
+    idx = jnp.asarray(idx)
+    return map_batch(cache, lambda a: jnp.take(a, idx, axis=1))
+
+
+def batch_size(cache: Dict[str, Any]) -> int:
+    for k, v in cache.items():
+        if not _is_scalar_entry(k):
+            return v.shape[1]
+    raise ValueError("cache has no array leaves")
+
+
+def concat(caches: Sequence[Dict[str, Any]]) -> Dict[str, Any]:
+    keys = caches[0].keys()
+    out = {}
+    for k in keys:
+        if _is_scalar_entry(k):
+            out[k] = caches[0][k]
+        else:
+            out[k] = jnp.concatenate([c[k] for c in caches], axis=1)
+    return out
+
+
+def cache_bytes(cache: Dict[str, Any]) -> int:
+    return sum(v.size * v.dtype.itemsize for k, v in cache.items()
+               if not _is_scalar_entry(k))

@@ -1,0 +1,26 @@
+"""Token samplers for the serving engine."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerConfig:
+    temperature: float = 0.0     # 0 => greedy
+    top_k: int = 0               # 0 => disabled
+
+
+def sample(logits, key, cfg: SamplerConfig = SamplerConfig()):
+    """logits: (B, V) -> (B,) int32."""
+    if cfg.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits.astype(jnp.float32) / cfg.temperature
+    if cfg.top_k > 0:
+        top_vals, _ = jax.lax.top_k(logits, cfg.top_k)
+        cutoff = top_vals[:, -1:]
+        logits = jnp.where(logits < cutoff, -jnp.inf, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,291 @@
+"""Event-driven edge-cloud co-simulation (§5.2 methodology).
+
+The simulator "fully executes the request scheduling process but bypasses
+actual packet transmission and model computation": transmission latency is
+priced from payload/bandwidth, computation latency from the shared roofline
+cost model (repro.core.costmodel) — both identical to what the control
+plane itself believes, so scheduler quality (not cost-model mismatch) is
+what the experiments measure.
+
+Execution model per (server, service): capacity c reqs/s from the placed
+plans; latency requests flow through a virtual single-queue (finish = max
+(now, vf) + 1/c + base latency); frequency streams reserve fps for their
+duration (partial credit at stream end via ``frequency_credit``).  Only
+request-level schedulers (EPARA) may split one stream across replica
+groups/servers — the Fig. 1 effect.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+from repro.core import costmodel as cm
+from repro.core.allocator import plan_goodput
+from repro.core.categories import (GPUSpec, Request, ServerSpec, ServiceSpec)
+from repro.core.cluster import EdgeCloudControlPlane
+from repro.core.goodput import GoodputMeter, frequency_credit
+from repro.core.handler import Outcome
+from repro.core.placement import EPSILON_SERVER
+
+from .baselines import Route, Scheduler
+from .workload import demand_matrix
+
+
+@dataclasses.dataclass
+class SimConfig:
+    horizon_s: float = 120.0
+    sync_interval_s: float = 1.0
+    placement_interval_s: float = 60.0
+    inter_server_bw_gbs: float = 1.25
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class SimResult:
+    scheduler: str
+    goodput: float              # satisfied credits / sec
+    offered: float
+    fulfillment: float
+    violations: int
+    offload_counts: List[int]
+    handled: int
+
+    first_hops: int = 1
+
+    @property
+    def mean_offloads(self) -> float:
+        """Offload hops per arriving request (the paper's Fig. 17e metric:
+        <1 when sync is fresh; grows with staleness)."""
+        return len(self.offload_counts) / max(1, self.first_hops)
+
+
+class _ServerState:
+    __slots__ = ("capacity", "vf", "stream_load")
+
+    def __init__(self):
+        self.capacity: Dict[str, float] = {}
+        self.vf: Dict[str, float] = {}          # virtual finish per service
+        self.stream_load: Dict[str, float] = {}  # reserved fps
+
+
+class Simulation:
+    def __init__(self, servers: Sequence[ServerSpec],
+                 services: Mapping[str, ServiceSpec],
+                 scheduler: Scheduler,
+                 events: Sequence[Tuple[float, int, Request]],
+                 cfg: SimConfig = SimConfig()):
+        self.servers = list(servers)
+        self.services = dict(services)
+        self.scheduler = scheduler
+        self.cfg = cfg
+        self.meter = GoodputMeter()
+        self.server_ids = [s.sid for s in self.servers]
+        self.state: Dict[int, _ServerState] = {
+            s.sid: _ServerState() for s in self.servers}
+        self.control_plane = EdgeCloudControlPlane(
+            self.servers, self.services,
+            sync_interval_s=cfg.sync_interval_s,
+            placement_interval_s=cfg.placement_interval_s, seed=cfg.seed)
+        # EPARA's control plane must use the scheduler's plans
+        self.control_plane.plans = dict(scheduler.plans)
+        self._events = sorted(events, key=lambda e: e[0])
+        self._heap: List[Tuple[float, int, str, tuple]] = []
+        self._seq = itertools.count()
+        self._offload_counts: List[int] = []
+        self._handled = 0
+        self._first_hops = 0
+        self.placements: List[Tuple[str, int]] = []
+
+    # ------------------------------------------------------------------
+    # context interface consumed by baseline schedulers
+    # ------------------------------------------------------------------
+    def is_placed(self, sid: int, service: str) -> bool:
+        return self.state[sid].capacity.get(service, 0.0) > 0
+
+    def has_capacity(self, sid: int, service: str, now: float) -> bool:
+        st = self.state[sid]
+        cap = st.capacity.get(service, 0.0) - st.stream_load.get(service, 0.0)
+        if cap <= 0:
+            return False
+        svc = self.services[service]
+        return self.queue_time(sid, service, now) <= svc.slo_latency_s
+
+    def queue_time(self, sid: int, service: str, now: float) -> float:
+        st = self.state[sid]
+        return max(0.0, st.vf.get(service, 0.0) - now)
+
+    # ------------------------------------------------------------------
+    def _apply_placement(self, placements, now: float) -> None:
+        self.placements = list(placements)
+        self.control_plane.placements = list(placements)
+        gpu = self.servers[0].gpu
+        for st in self.state.values():
+            st.capacity.clear()
+        pooled: Dict[str, float] = {}
+        for svc_name, sid in placements:
+            svc = self.services[svc_name]
+            plan = self.scheduler.plans[svc_name]
+            g = plan_goodput(svc, gpu, plan,
+                             cross_server=(sid == EPSILON_SERVER))
+            if sid == EPSILON_SERVER:
+                pooled[svc_name] = pooled.get(svc_name, 0.0) + g
+            else:
+                cap = self.state[sid].capacity
+                cap[svc_name] = cap.get(svc_name, 0.0) + g
+        # ε capacity: spread across the least-loaded servers
+        for svc_name, g in pooled.items():
+            share = g / len(self.servers)
+            for st in self.state.values():
+                st.capacity[svc_name] = st.capacity.get(svc_name, 0.0) + share
+
+    # ------------------------------------------------------------------
+    def run(self) -> SimResult:
+        cfg = self.cfg
+        # initial placement from the full offered demand (offline mode §3.3)
+        demand = demand_matrix(self._events, self.services, cfg.horizon_s)
+        placements = self.scheduler.place(
+            self.control_plane.build_problem(demand))
+        self._apply_placement(placements, 0.0)
+
+        push = lambda t, kind, payload: heapq.heappush(
+            self._heap, (t, next(self._seq), kind, payload))
+        for t, sid, req in self._events:
+            self.meter.offered(req)
+            push(t, "arrival", (sid, req))
+        t = cfg.sync_interval_s
+        while t < cfg.horizon_s:
+            push(t, "sync", ())
+            t += cfg.sync_interval_s
+
+        while self._heap:
+            now, _, kind, payload = heapq.heappop(self._heap)
+            if kind == "sync":
+                self.control_plane.publish_all(now)
+                self.control_plane.sync_step(now)
+            elif kind == "arrival":
+                sid, req = payload
+                self._handle(req, sid, now, push)
+            elif kind == "done":
+                req, finish = payload
+                self.meter.complete_latency(req, finish)
+            elif kind == "stream_end":
+                req, achieved, sid = payload
+                svc = self.services[req.service]
+                st = self.state[sid]
+                st.stream_load[req.service] = max(
+                    0.0, st.stream_load.get(req.service, 0.0) - achieved)
+                self.meter.complete_frequency(req, now, achieved,
+                                              svc.slo_fps)
+        horizon = cfg.horizon_s
+        return SimResult(
+            scheduler=self.scheduler.name,
+            goodput=self.meter.total_credit / horizon,
+            offered=self.meter.total_offered / horizon,
+            fulfillment=self.meter.fulfillment_ratio,
+            violations=self.meter.violations,
+            offload_counts=self._offload_counts,
+            handled=self._handled, first_hops=max(1, self._first_hops))
+
+    # ------------------------------------------------------------------
+    def _handle(self, req: Request, sid: int, now: float, push) -> None:
+        self._handled += 1
+        if req.offload_count == 0:
+            self._first_hops += 1
+        svc = self.services[req.service]
+        sched_lat = self.scheduler.scheduling_latency(len(self.servers))
+        now = now + sched_lat
+        route = self.scheduler.route(req, sid, now, self)
+        if route.outcome == Outcome.TIMEOUT or (
+                req.deadline_s and now > req.deadline_s):
+            self.meter.drop(req, now)
+            return
+        if route.outcome in (Outcome.OFFLOAD,):
+            dest = route.destination
+            hop = cm.transfer_time(svc.request_bytes,
+                                   self.cfg.inter_server_bw_gbs)
+            from repro.core.handler import RequestHandler
+            fwd = RequestHandler.apply_offload(req, sid)
+            self._offload_counts.append(fwd.offload_count)
+            push(now + hop, "arrival", (dest, fwd))
+            return
+        if route.outcome in (Outcome.OFFLOAD_EXCEEDED, Outcome.INSUFFICIENT):
+            self.meter.drop(req, now)
+            return
+        # local-ish execution
+        self._execute_local(req, sid, now, push)
+
+    def _execute_local(self, req: Request, sid: int, now: float,
+                       push) -> None:
+        svc = self.services[req.service]
+        plan = self.scheduler.plans[req.service]
+        st = self.state[sid]
+        cap = st.capacity.get(req.service, 0.0)
+        if cap <= 0:
+            self.meter.drop(req, now)
+            return
+        if svc.is_frequency and req.duration_s > 0:
+            demand_fps = req.frames / req.duration_s
+            idle = max(0.0, cap - st.stream_load.get(req.service, 0.0))
+            achievable = min(demand_fps, idle,
+                             self.scheduler.stream_fps_cap(svc))
+            if self.scheduler.request_level and achievable < demand_fps:
+                # EPARA request-level DP: split surplus frames across peers
+                achievable += self._peer_stream_share(
+                    req, sid, demand_fps - achievable)
+                achievable = min(achievable, demand_fps)
+            st.stream_load[req.service] = \
+                st.stream_load.get(req.service, 0.0) + achievable
+            push(now + req.duration_s, "stream_end",
+                 (req, achievable, sid))
+        else:
+            eff_cap = max(1e-6, cap - st.stream_load.get(req.service, 0.0))
+            vf = max(now, st.vf.get(req.service, now))
+            vf += 1.0 / eff_cap
+            st.vf[req.service] = vf
+            base = cm.effective_latency(svc, self.servers[0].gpu,
+                                        batch=plan.bs, mp=plan.mp,
+                                        mt=plan.mt, mf=plan.mf) / plan.bs
+            finish = vf + base
+            push(finish, "done", (req, finish))
+
+    def _peer_stream_share(self, req: Request, sid: int,
+                           needed_fps: float) -> float:
+        """Round-robin the stream's surplus frames across peers with idle
+        capacity (request-level DP across servers)."""
+        got = 0.0
+        for s in self.server_ids:
+            if s == sid or needed_fps - got <= 1e-9:
+                continue
+            st = self.state[s]
+            idle = max(0.0, st.capacity.get(req.service, 0.0)
+                       - st.stream_load.get(req.service, 0.0))
+            take = min(idle, needed_fps - got) * 0.9  # offload discount
+            if take > 0:
+                st.stream_load[req.service] = \
+                    st.stream_load.get(req.service, 0.0) + take
+                got += take
+                # release happens with the stream (approximate: schedule on
+                # the home server's stream_end; peers release via decay)
+                self._schedule_peer_release(req, s, take)
+        return got
+
+    def _schedule_peer_release(self, req: Request, sid: int,
+                               fps: float) -> None:
+        heapq.heappush(self._heap, (
+            req.arrival_s + req.duration_s, next(self._seq), "stream_end",
+            (dataclasses.replace(req, frames=0), fps, sid)))
+
+
+def run_comparison(servers, services, events, scheduler_names,
+                   cfg: SimConfig = SimConfig(), *, seed: int = 0
+                   ) -> Dict[str, SimResult]:
+    from .baselines import make_scheduler
+    gpu = servers[0].gpu
+    out = {}
+    for name in scheduler_names:
+        sched = make_scheduler(name, services, gpu, seed=seed)
+        sim = Simulation(servers, services, sched, events, cfg)
+        out[name] = sim.run()
+    return out

@@ -1,0 +1,54 @@
+"""Minimal sharding-agnostic checkpointing: pytrees <-> .npz archives.
+
+Leaves are addressed by their tree path ("blocks/attn/wq", tuple indices as
+digits) so restores are order-independent and partial restores (e.g. params
+only, no optimizer state) are possible.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(path: str, tree, *, step: Optional[int] = None) -> str:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    if step is not None:
+        flat["__step__"] = np.asarray(step)
+    np.savez(path, **flat)
+    return path if path.endswith(".npz") else path + ".npz"
+
+
+def restore(path: str, like) -> Any:
+    """Restore into the structure of ``like`` (shapes/dtypes preserved)."""
+    if not path.endswith(".npz"):
+        path += ".npz"
+    data = np.load(path)
+    flat_like = _flatten(like)
+    missing = [k for k in flat_like if k not in data.files]
+    if missing:
+        raise KeyError(f"checkpoint {path} missing keys: {missing[:5]}...")
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    keys = list(_flatten(like).keys())
+    restored = [jax.numpy.asarray(data[k]).astype(leaf.dtype).reshape(
+        leaf.shape) for k, leaf in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, restored)
+
+
+def restored_step(path: str) -> Optional[int]:
+    if not path.endswith(".npz"):
+        path += ".npz"
+    data = np.load(path)
+    return int(data["__step__"]) if "__step__" in data.files else None

@@ -1,0 +1,135 @@
+"""Optimizers on raw pytrees (no optax dependency): AdamW and Adafactor.
+
+Adafactor's factored second moment keeps optimizer state ~O(n+m) per (n,m)
+matrix — the difference between grok-1-314b fitting a single 256-chip pod
+during the training dry-run (~9.8 GB/chip) and OOMing (~17 GB/chip with
+AdamW, see EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    learning_rate: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          mu=jax.tree.map(zeros, params),
+                          nu=jax.tree.map(zeros, params))
+
+    def update(self, grads, state: AdamWState, params
+               ) -> Tuple[Any, AdamWState]:
+        step = state.step + 1
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) *
+                          g.astype(jnp.float32), state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) *
+                          jnp.square(g.astype(jnp.float32)), state.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, m, v):
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + self.eps)
+            u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32)
+                    - self.learning_rate * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, AdamWState(step=step, mu=mu, nu=nu)
+
+
+class AdafactorState(NamedTuple):
+    step: jnp.ndarray
+    vr: Any    # row second-moment (or full v for <2D leaves)
+    vc: Any    # col second-moment (zeros-dim placeholder for <2D leaves)
+
+
+@dataclasses.dataclass(frozen=True)
+class Adafactor:
+    """Factored second-moment (Shazeer & Stern 2018), no first moment."""
+    learning_rate: float = 3e-4
+    decay: float = 0.8        # step-dependent: 1 - step^-decay
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+
+    @staticmethod
+    def _factored(p) -> bool:
+        return p.ndim >= 2
+
+    def init(self, params) -> AdafactorState:
+        def vr_init(p):
+            if self._factored(p):
+                return jnp.zeros(p.shape[:-1], jnp.float32)
+            return jnp.zeros(p.shape, jnp.float32)
+
+        def vc_init(p):
+            if self._factored(p):
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return jnp.zeros((), jnp.float32)
+
+        return AdafactorState(step=jnp.zeros((), jnp.int32),
+                              vr=jax.tree.map(vr_init, params),
+                              vc=jax.tree.map(vc_init, params))
+
+    def update(self, grads, state: AdafactorState, params
+               ) -> Tuple[Any, AdafactorState]:
+        step = state.step + 1
+        beta = 1.0 - step.astype(jnp.float32) ** (-self.decay)
+
+        def upd(p, g, vr, vc):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + self.eps
+            if self._factored(p):
+                vr_new = beta * vr + (1 - beta) * g2.mean(axis=-1)
+                vc_new = beta * vc + (1 - beta) * g2.mean(axis=-2)
+                denom = vr_new.mean(axis=-1, keepdims=True)
+                r = vr_new / jnp.maximum(denom, self.eps)
+                v = r[..., None] * vc_new[..., None, :]
+            else:
+                vr_new = beta * vr + (1 - beta) * g2
+                vc_new = vc
+                v = vr_new
+            u = g / jnp.sqrt(jnp.maximum(v, self.eps))
+            norm = jnp.sqrt(jnp.mean(jnp.square(u)))
+            u = u / jnp.maximum(1.0, norm / self.clip_threshold)
+            if self.weight_decay:
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - self.learning_rate * u
+            return new_p.astype(p.dtype), vr_new, vc_new
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_vr = treedef.flatten_up_to(state.vr)
+        flat_vc = treedef.flatten_up_to(state.vc)
+        out = [upd(p, g, vr, vc)
+               for p, g, vr, vc in zip(flat_p, flat_g, flat_vr, flat_vc)]
+        new_params = treedef.unflatten([o[0] for o in out])
+        new_vr = treedef.unflatten([o[1] for o in out])
+        new_vc = treedef.unflatten([o[2] for o in out])
+        return new_params, AdafactorState(step=step, vr=new_vr, vc=new_vc)
+
+
+def get_optimizer(name: str, learning_rate: float = 3e-4):
+    if name == "adamw":
+        return AdamW(learning_rate=learning_rate)
+    if name == "adafactor":
+        return Adafactor(learning_rate=learning_rate)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,136 @@
+"""Training step: chunked cross-entropy loss + grads + optimizer update.
+
+The loss scans the sequence in chunks so the (B, L, vocab) logits tensor is
+never materialized — at minitron-4b's 256k vocab and 1M tokens the full
+tensor would be ~0.5 TB; chunking bounds the transient to
+(B, chunk, vocab) per device (see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.registry import model_api
+
+DEFAULT_LOSS_CHUNK = 512
+MOE_AUX_WEIGHT = 0.01
+
+
+def chunked_cross_entropy(hidden, labels, logits_fn, *,
+                          chunk: int = DEFAULT_LOSS_CHUNK,
+                          ignore_id: int = -1):
+    """hidden: (B, L, d); labels: (B, L).  Mean NLL over non-ignored
+    positions, computed chunk-by-chunk over L via lax.map."""
+    B, L, d = hidden.shape
+    chunk = min(chunk, L)
+    pad = (-L) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)),
+                         constant_values=ignore_id)
+    n_chunks = hidden.shape[1] // chunk
+    hidden = hidden.reshape(B, n_chunks, chunk, d).transpose(1, 0, 2, 3)
+    labels = labels.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def per_chunk(args):
+        # remat: the (B, chunk, V) logits are recomputed in the backward
+        # instead of being saved per chunk (they alone would be ~16 GB/dev
+        # for minicpm-2b train_4k — EXPERIMENTS.md §Dry-run)
+        h, y = args
+        logits = logits_fn(h).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(y, 0)[..., None], axis=-1)[..., 0]
+        nll = logz - gold
+        mask = (y != ignore_id).astype(jnp.float32)
+        return jnp.sum(nll * mask), jnp.sum(mask)
+
+    losses, counts = jax.lax.map(per_chunk, (hidden, labels))
+    total = jnp.sum(losses)
+    n = jnp.maximum(jnp.sum(counts), 1.0)
+    return total / n
+
+
+def make_loss_fn(cfg: ModelConfig, *, loss_chunk: int = DEFAULT_LOSS_CHUNK,
+                 impl: Optional[str] = None) -> Callable:
+    api = model_api(cfg)
+
+    def loss_fn(params, batch: Dict[str, Any]):
+        hidden, aux = api.forward_hidden(params, cfg, batch, train=True,
+                                         impl=impl)
+        labels = batch["labels"]
+        if cfg.family == "vlm":  # loss over the text region only
+            hidden = hidden[:, cfg.prefix_len:]
+        lf = lambda h: api.logits_fn(params, cfg, h)
+        loss = chunked_cross_entropy(hidden, labels, lf, chunk=loss_chunk)
+        return loss + MOE_AUX_WEIGHT * aux, {"nll": loss, "aux": aux}
+
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, optimizer, *,
+                    loss_chunk: int = DEFAULT_LOSS_CHUNK,
+                    num_microbatches: int = 1,
+                    accum_dtype=jnp.float32,
+                    impl: Optional[str] = None) -> Callable:
+    """Returns train_step(params, opt_state, batch) ->
+    (params, opt_state, metrics).  pjit-ready: pure, no python state.
+
+    ``num_microbatches > 1`` scans the global batch in chunks with fp32
+    gradient accumulation: live activation memory scales with B/k while the
+    optimizer update still sees the full-batch gradient — required to fit
+    train_4k for the 100B+ configs (EXPERIMENTS.md §Dry-run)."""
+    loss_fn = make_loss_fn(cfg, loss_chunk=loss_chunk, impl=impl)
+    k = num_microbatches
+
+    def train_step(params, opt_state, batch):
+        if k == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            def reshard(x):
+                B = x.shape[0]
+                assert B % k == 0, f"batch {B} % microbatches {k}"
+                return x.reshape(k, B // k, *x.shape[1:])
+
+            micro = jax.tree.map(reshard, batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params)
+
+            def acc_body(carry, mb):
+                g_acc, loss_acc, aux_acc = carry
+                (loss, metrics), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(accum_dtype) / k, g_acc, g)
+                return (g_acc, loss_acc + loss / k,
+                        aux_acc + metrics["aux"] / k), None
+
+            (grads, loss, aux), _ = jax.lax.scan(
+                acc_body, (zeros, jnp.zeros((), jnp.float32),
+                           jnp.zeros((), jnp.float32)), micro)
+            metrics = {"nll": loss, "aux": aux}
+        new_params, new_state = optimizer.update(grads, opt_state, params)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, *,
+                   loss_chunk: int = DEFAULT_LOSS_CHUNK,
+                   impl: Optional[str] = None) -> Callable:
+    loss_fn = make_loss_fn(cfg, loss_chunk=loss_chunk, impl=impl)
+
+    def eval_step(params, batch):
+        loss, metrics = loss_fn(params, batch)
+        return dict(metrics, loss=loss)
+
+    return eval_step

@@ -1,0 +1,27 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here on purpose — tests and benches
+run with the real single CPU device; only launch/dryrun.py forces 512
+placeholder devices (and only in its own process)."""
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def toy_config(**over):
+    from repro.models.config import ModelConfig
+    base = dict(name="toy", family="dense", num_layers=2, d_model=64,
+                num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+                vocab_size=257, dtype="float32", param_dtype="float32")
+    base.update(over)
+    return ModelConfig(**base)
+
+
+@pytest.fixture
+def dense_cfg():
+    return toy_config()

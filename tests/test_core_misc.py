@@ -1,0 +1,178 @@
+"""Allocator (§3.1/§4.1), goodput accounting, cost model, and control-plane
+integration tests."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import costmodel as cm
+from repro.core.allocator import (DPGroupRouter, ParallelPlan, allocate,
+                                  categorize, mesh_submesh, plan_goodput)
+from repro.core.categories import (CAT_FREQ_MULTI, CAT_LAT_SINGLE, GPUSpec,
+                                   Operator, Request, Sensitivity,
+                                   ServerSpec, ServiceSpec, operators_for)
+from repro.core.cluster import EdgeCloudControlPlane
+from repro.core.goodput import GoodputMeter, frequency_credit
+
+GPU = GPUSpec()
+
+
+def _svc(name="s", gflops=50, weights_gb=0.5, vram_gb=1.0, freq=False,
+         fps=30.0, lat=0.5, stateful=False):
+    return ServiceSpec(
+        name=name, flops_per_request=gflops * 1e9,
+        weights_bytes=weights_gb * 1e9, vram_bytes=vram_gb * 1e9,
+        sensitivity=Sensitivity.FREQUENCY if freq else Sensitivity.LATENCY,
+        slo_latency_s=lat, slo_fps=fps if freq else 0.0, stateful=stateful)
+
+
+# ---------------------------------------------------------------------------
+# categorization + operator sets (Fig. 5)
+# ---------------------------------------------------------------------------
+
+def test_categorize_by_vram():
+    small = _svc(vram_gb=1.0)
+    big = _svc(vram_gb=100.0)
+    assert not categorize(small, GPU).multi_gpu
+    assert categorize(big, GPU).multi_gpu
+
+
+def test_categorize_by_latency():
+    slow = _svc(gflops=5e5, lat=0.01)   # cannot meet SLO on one GPU
+    assert categorize(slow, GPU).multi_gpu
+
+
+def test_operator_sets_match_fig5():
+    assert operators_for(CAT_LAT_SINGLE) == {Operator.BS, Operator.MT}
+    assert Operator.DP in operators_for(CAT_FREQ_MULTI)
+    assert Operator.MF in operators_for(CAT_FREQ_MULTI)
+    assert Operator.MP in operators_for(CAT_FREQ_MULTI)
+
+
+def test_plan_respects_category_operators():
+    plan = allocate(_svc(freq=False), GPU)
+    assert plan.dp == 1 and plan.mf == 1          # latency task: no DP/MF
+    plan_f = allocate(_svc(freq=True, vram_gb=100.0, gflops=5e4,
+                           fps=10000.0), GPU)
+    assert plan_f.category.multi_gpu
+
+
+# ---------------------------------------------------------------------------
+# Eq. 4 / Eq. 5
+# ---------------------------------------------------------------------------
+
+def test_dp_group_count_eq4():
+    svc = _svc(freq=True, gflops=2e5, fps=120.0, lat=0.5, vram_gb=100.0)
+    plan = allocate(svc, GPU)
+    one_group = cm.throughput(svc, GPU, batch=plan.bs, mp=plan.mp,
+                              mt=plan.mt)
+    assert plan.dp == max(1, math.ceil(svc.slo_fps / one_group))
+
+
+def test_inter_request_count_eq5():
+    plan = ParallelPlan(service="s", category=CAT_FREQ_MULTI, bs=16, mf=4)
+    assert plan.inter_request_count == 4
+    plan = ParallelPlan(service="s", category=CAT_FREQ_MULTI, bs=16, mf=5)
+    assert plan.inter_request_count == 3   # floor
+
+
+@settings(max_examples=40, deadline=None)
+@given(gflops=st.floats(1, 1e6), weights=st.floats(0.01, 400),
+       freq=st.booleans(), fps=st.floats(1, 240), lat=st.floats(0.05, 5))
+def test_allocate_invariants(gflops, weights, freq, fps, lat):
+    """Property: plans are always internally consistent — operators allowed
+    by the category, VRAM never overcommitted by MT, positive degrees."""
+    svc = _svc(gflops=gflops, weights_gb=weights, vram_gb=weights * 1.2,
+               freq=freq, fps=fps, lat=lat)
+    plan = allocate(svc, GPU)
+    assert plan.mp >= 1 and plan.bs >= 1 and plan.mt >= 1
+    assert plan.dp >= 1 and plan.mf >= 1
+    allowed = operators_for(plan.category)
+    assert plan.operators() <= allowed
+    assert cm.vram_fraction(svc, GPU, plan.mp) * plan.mt <= 1.0 + 1e-9
+    if not freq:
+        assert plan.dp == 1 and plan.mf == 1
+    assert plan.mf <= plan.bs or plan.mf == 1
+
+
+# ---------------------------------------------------------------------------
+# DP router (request-level)
+# ---------------------------------------------------------------------------
+
+def test_dp_router_round_robin():
+    plan = ParallelPlan(service="s", category=CAT_FREQ_MULTI, dp=3)
+    r = DPGroupRouter(plan)
+    assert [r.route() for _ in range(6)] == [0, 1, 2, 0, 1, 2]
+
+
+def test_dp_router_sticky_sessions():
+    plan = ParallelPlan(service="s", category=CAT_FREQ_MULTI, dp=3,
+                        sticky=True)
+    r = DPGroupRouter(plan)
+    g1 = r.route(session=42)
+    g2 = r.route(session=43)
+    assert r.route(session=42) == g1   # same session -> same group
+    assert g2 != g1
+
+
+def test_mesh_submesh_mapping():
+    plan = ParallelPlan(service="s", category=CAT_FREQ_MULTI, dp=4, mp=2,
+                        bs=8)
+    mp = mesh_submesh(plan)
+    assert mp.chips == 8 and mp.data_parallel == 4
+
+
+# ---------------------------------------------------------------------------
+# goodput accounting
+# ---------------------------------------------------------------------------
+
+def test_frequency_credit_paper_example():
+    # 120 frames, SLO 60 fps, achieved 30 fps => 60 satisfied (§3.3)
+    assert frequency_credit(120, 30.0, 60.0) == pytest.approx(60.0)
+    assert frequency_credit(120, 90.0, 60.0) == pytest.approx(120.0)
+
+
+def test_goodput_meter_windows():
+    m = GoodputMeter()
+    req = Request(rid=1, service="s", arrival_s=0.0, deadline_s=2.0)
+    m.offered(req)
+    m.complete_latency(req, finish_s=1.0)
+    late = Request(rid=2, service="s", arrival_s=0.0, deadline_s=0.5)
+    m.offered(late)
+    m.complete_latency(late, finish_s=1.5)
+    assert m.total_credit == 1.0 and m.violations == 1
+    assert m.goodput("s", window=(0.0, 2.0)) == pytest.approx(0.5)
+    assert m.goodput("s", window=(1.2, 2.0)) == pytest.approx(0.0)
+
+
+# ---------------------------------------------------------------------------
+# control plane integration
+# ---------------------------------------------------------------------------
+
+def test_control_plane_end_to_end():
+    servers = [ServerSpec(sid=i, num_gpus=2) for i in range(3)]
+    services = {"a": _svc("a"), "b": _svc("b", freq=True)}
+    cp = EdgeCloudControlPlane(servers, services)
+    demand = {(s, n): 20.0 for s in services for n in range(3)}
+    theta = cp.run_placement(demand)
+    assert theta
+    cp.publish_all(0.0)
+    for _ in range(3):
+        cp.sync_step(0.0)
+    req = Request(rid=1, service="a", arrival_s=0.0, deadline_s=5.0)
+    d = cp.handle(req, now=0.1, at_server=0)
+    assert d.outcome.value in ("local", "offload")
+
+
+def test_device_registration_single_gpu_only():
+    servers = [ServerSpec(sid=0, num_gpus=2)]
+    services = {"small": _svc("small", vram_gb=1.0),
+                "huge": _svc("huge", vram_gb=200.0)}
+    cp = EdgeCloudControlPlane(servers, services)
+    dev = cp.register_device(0, now=0.0)
+    ready = cp.assign_device_service(dev.did, "small", now=0.0)
+    assert ready > 0.0
+    with pytest.raises(ValueError):
+        cp.assign_device_service(dev.did, "huge", now=0.0)
+    cp.deregister_device(dev.did)
+    assert dev.did not in cp.devices

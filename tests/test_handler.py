@@ -1,0 +1,150 @@
+"""Distributed request handler (§3.2): Fig. 6 decision ladder, Eq. 1
+offload weighting, loop freedom, bounded offload counts — unit +
+hypothesis property tests."""
+import dataclasses
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.categories import Request, Sensitivity, ServiceSpec
+from repro.core.handler import (Decision, Outcome, RequestHandler,
+                                ServerView, ServiceState)
+
+SVC = ServiceSpec(name="svc", flops_per_request=1e9, weights_bytes=1e8,
+                  vram_bytes=2e8, slo_latency_s=1.0)
+
+
+def _view(sid, *, p_hat=10.0, p_act=0.0, queue=0.0, age=0.1,
+          available=True, cross=False, on_device=False):
+    return ServerView(sid=sid, services={
+        "svc": ServiceState(theoretical_goodput=p_hat, actual_goodput=p_act,
+                            queue_time_s=queue, cross_server=cross,
+                            on_device=on_device)},
+        sync_age_s=age, available=available)
+
+
+def _req(**kw):
+    base = dict(rid=1, service="svc", arrival_s=0.0, deadline_s=1.0)
+    base.update(kw)
+    return Request(**base)
+
+
+def test_timeout_first():
+    h = RequestHandler(0)
+    d = h.handle(_req(deadline_s=0.5), now=0.6, svc=SVC,
+                 local=_view(0), peers={})
+    assert d.outcome == Outcome.TIMEOUT
+
+
+def test_local_first():
+    h = RequestHandler(0)
+    d = h.handle(_req(), now=0.1, svc=SVC, local=_view(0),
+                 peers={1: _view(1)})
+    assert d.outcome == Outcome.LOCAL
+
+
+def test_local_priority_ladder():
+    h = RequestHandler(0)
+    # cross-server-parallel local outranks device, both beat offload
+    d = h.handle(_req(), 0.1, SVC, _view(0, cross=True), {1: _view(1)})
+    assert d.outcome == Outcome.LOCAL_CROSS
+    d = h.handle(_req(), 0.1, SVC, _view(0, on_device=True), {1: _view(1)})
+    assert d.outcome == Outcome.LOCAL_DEVICE
+
+
+def test_saturated_local_offloads():
+    h = RequestHandler(0, seed=1)
+    local = _view(0, p_hat=10.0, p_act=10.0, queue=5.0)  # saturated
+    d = h.handle(_req(), 0.1, SVC, local, {1: _view(1)})
+    assert d.outcome == Outcome.OFFLOAD and d.destination == 1
+
+
+def test_offload_count_bound():
+    h = RequestHandler(0, max_offload_count=5)
+    local = _view(0, p_hat=0.0, queue=99.0)
+    req = _req(offload_count=5)
+    d = h.handle(req, 0.1, SVC, local, {1: _view(1)})
+    assert d.outcome == Outcome.OFFLOAD_EXCEEDED
+
+
+def test_loop_freedom():
+    h = RequestHandler(0, seed=0)
+    local = _view(0, p_hat=0.0, queue=99.0)
+    req = _req(path=(1, 2))
+    d = h.handle(req, 0.1, SVC, local,
+                 {1: _view(1), 2: _view(2), 3: _view(3)})
+    assert d.outcome == Outcome.OFFLOAD and d.destination == 3
+
+
+def test_queue_exclusion_rule():
+    """Peers whose queued compute exceeds t_n + SLO are excluded (§3.2)."""
+    h = RequestHandler(0, seed=0)
+    local = _view(0, p_hat=0.0, queue=99.0)
+    overdue = _view(1, queue=5.0, age=0.1)     # 5.0 > 0.1 + 1.0
+    ok = _view(2, queue=0.2, age=0.1)
+    d = h.handle(_req(), 0.1, SVC, local, {1: overdue, 2: ok})
+    assert d.destination == 2
+
+
+def test_insufficient_when_no_feasible_peer():
+    h = RequestHandler(0)
+    local = _view(0, p_hat=0.0, queue=99.0)
+    d = h.handle(_req(), 0.1, SVC, local,
+                 {1: _view(1, available=False), 2: _view(2, p_hat=0.0)})
+    assert d.outcome == Outcome.INSUFFICIENT
+
+
+def test_offload_probability_weighted_by_idle_goodput():
+    """Eq. 1: destination frequency ∝ p̃ = p̂ − p."""
+    h = RequestHandler(0, seed=42)
+    local = _view(0, p_hat=0.0, queue=99.0)
+    peers = {1: _view(1, p_hat=30.0, p_act=0.0),    # idle 30
+             2: _view(2, p_hat=10.0, p_act=0.0)}    # idle 10
+    counts = {1: 0, 2: 0}
+    for _ in range(600):
+        d = h.handle(_req(), 0.1, SVC, local, peers)
+        counts[d.destination] += 1
+    ratio = counts[1] / max(1, counts[2])
+    assert 2.0 < ratio < 4.5   # expect ~3
+
+
+def test_apply_offload_records_path():
+    req = _req()
+    fwd = RequestHandler.apply_offload(req, origin=7)
+    assert fwd.path == (7,) and fwd.offload_count == 1
+    assert req.path == ()   # original untouched
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    p_hats=st.lists(st.floats(0, 100), min_size=1, max_size=6),
+    p_acts=st.lists(st.floats(0, 100), min_size=1, max_size=6),
+    queues=st.lists(st.floats(0, 10), min_size=1, max_size=6),
+    offload_count=st.integers(0, 7),
+    path=st.lists(st.integers(1, 6), max_size=4),
+    now=st.floats(0, 2.0),
+)
+def test_handler_decision_always_valid(p_hats, p_acts, queues,
+                                       offload_count, path, now):
+    """Property: for arbitrary peer states the decision is well-formed —
+    never offloads to itself, to a path member, to an unavailable or
+    infeasible peer; respects the count bound and the timeout rule."""
+    n = min(len(p_hats), len(p_acts), len(queues))
+    peers = {i + 1: _view(i + 1, p_hat=p_hats[i], p_act=p_acts[i],
+                          queue=queues[i]) for i in range(n)}
+    h = RequestHandler(0, max_offload_count=5, seed=7)
+    req = _req(offload_count=offload_count, path=tuple(path))
+    local = _view(0, p_hat=0.0, queue=99.0)
+    d = h.handle(req, now, SVC, local, peers)
+    if now > req.deadline_s:
+        assert d.outcome == Outcome.TIMEOUT
+        return
+    if d.outcome == Outcome.OFFLOAD:
+        assert offload_count < 5
+        dest = d.destination
+        assert dest in peers and dest != 0 and dest not in path
+        state = peers[dest].state_of("svc")
+        assert state.idle_goodput > 0
+        assert state.queue_time_s <= peers[dest].sync_age_s + SVC.slo_latency_s
+    elif d.outcome == Outcome.OFFLOAD_EXCEEDED:
+        assert offload_count >= 5

@@ -1,0 +1,91 @@
+"""Event-driven simulator: determinism, EPARA vs baseline ordering on the
+paper's standard scenario, offload bounds, scheduler policy surfaces."""
+import pytest
+
+from repro.core.categories import EDGE_P100, ServerSpec
+from repro.simulator.baselines import SCHEDULERS, make_scheduler
+from repro.simulator.engine import SimConfig, Simulation, run_comparison
+from repro.simulator.workload import (WorkloadConfig, demand_matrix,
+                                      generate_requests, table1_services)
+
+
+@pytest.fixture(scope="module")
+def scenario():
+    services = table1_services()
+    servers = [ServerSpec(sid=i, num_gpus=1, gpu=EDGE_P100)
+               for i in range(4)]
+    wl = WorkloadConfig(horizon_s=30.0, load_scale=20.0, seed=3)
+    events = generate_requests(services, len(servers), wl)
+    return services, servers, events
+
+
+def test_workload_generation_stats():
+    services = table1_services()
+    wl = WorkloadConfig(horizon_s=30.0, load_scale=2.0, seed=0)
+    events = generate_requests(services, 3, wl)
+    assert len(events) > 100
+    ts = [t for t, _, _ in events]
+    assert ts == sorted(ts)
+    assert all(0 <= sid < 3 for _, sid, _ in events)
+    dm = demand_matrix(events, services, wl.horizon_s)
+    assert all(v >= 0 for v in dm.values())
+    freq = [r for _, _, r in events if r.duration_s > 0]
+    assert freq and all(r.frames > 1 for r in freq)
+
+
+def test_simulation_deterministic(scenario):
+    services, servers, events = scenario
+    cfg = SimConfig(horizon_s=30.0)
+    runs = [Simulation(servers, services,
+                       make_scheduler("EPARA", services, EDGE_P100, seed=1),
+                       events, cfg).run() for _ in range(2)]
+    assert runs[0].goodput == pytest.approx(runs[1].goodput)
+    assert runs[0].violations == runs[1].violations
+
+
+def test_epara_beats_baselines_under_load(scenario):
+    services, servers, events = scenario
+    res = run_comparison(servers, services, events,
+                         ["EPARA", "InterEdge", "Galaxy", "SERV-P"],
+                         SimConfig(horizon_s=30.0))
+    ep = res["EPARA"].goodput
+    for name in ("InterEdge", "Galaxy", "SERV-P"):
+        assert ep >= res[name].goodput, \
+            f"EPARA {ep} < {name} {res[name].goodput}"
+    # the paper's headline: clear margin over the weakest baselines
+    assert ep > 1.2 * res["SERV-P"].goodput
+
+
+def test_offload_counts_bounded(scenario):
+    services, servers, events = scenario
+    sim = Simulation(servers, services,
+                     make_scheduler("EPARA", services, EDGE_P100),
+                     events, SimConfig(horizon_s=30.0))
+    r = sim.run()
+    assert all(c <= 5 for c in r.offload_counts)
+
+
+def test_scheduler_policy_surfaces():
+    services = table1_services(include_heavy=False)
+    for name, cls in SCHEDULERS.items():
+        sched = make_scheduler(name, services, EDGE_P100)
+        for svc_name, plan in sched.plans.items():
+            if not sched.request_level:
+                assert plan.dp == 1 and plan.mf == 1, name
+        if name == "Galaxy":
+            assert all(p.bs == 1 and p.mt == 1
+                       for p in sched.plans.values())
+        if name == "SERV-P":
+            assert sched.scheduling_latency(10) >= 0.05
+            assert sched.scheduling_latency(40) == \
+                sched.scheduling_latency(10)   # grouped at 10
+
+
+def test_stream_fps_cap_is_the_request_level_difference():
+    """Fig. 1: without request-level DP one stream caps at a single group's
+    rate; EPARA's cap is the whole deployment."""
+    services = table1_services()
+    heavy = services["deeplabv3p-vid"]
+    ep = make_scheduler("EPARA", services, EDGE_P100)
+    ie = make_scheduler("InterEdge", services, EDGE_P100)
+    assert ep.stream_fps_cap(heavy) >= ie.stream_fps_cap(heavy)

@@ -1,0 +1,101 @@
+"""Ring synchronization (§3.4): propagation, staleness bounds, failure
+bypass, silent-corruption recovery; plus the parameter-server backend."""
+import pytest
+
+from repro.core.handler import ServerView, ServiceState
+from repro.core.sync import (ParameterServerSync, RingSynchronizer,
+                             sync_round_seconds)
+
+
+def _view(sid, goodput=10.0):
+    return ServerView(sid=sid, services={
+        "svc": ServiceState(theoretical_goodput=goodput)})
+
+
+def _ring(n, **kw):
+    return RingSynchronizer(list(range(n)), **kw)
+
+
+def test_one_round_reaches_neighbors_only():
+    ring = _ring(6)
+    ring.publish_local(0, _view(0), now=0.0)
+    ring.step(0.0)
+    for sid in range(6):
+        views = ring.views_for(sid, 0.0)
+        if sid in (1, 5):
+            assert 0 in views
+        elif sid != 0:
+            assert 0 not in views
+
+
+def test_full_propagation_in_n_over_2_rounds():
+    n = 8
+    ring = _ring(n)
+    for sid in range(n):
+        ring.publish_local(sid, _view(sid), now=0.0)
+    for r in range(n // 2):
+        ring.step(float(r))
+    for sid in range(n):
+        views = ring.views_for(sid, 1.0)
+        assert set(views) == set(range(n)) - {sid}
+
+
+def test_staleness_bound_matches_ring_distance():
+    ring = _ring(10, interval_s=2.0)
+    b = ring.staleness_bound(0, 5)       # distance 5
+    assert b == pytest.approx(5 * 2.0 + ring.round_cost_s)
+    assert ring.staleness_bound(0, 9) == pytest.approx(
+        1 * 2.0 + ring.round_cost_s)     # wraps around
+
+
+def test_failure_bypass_and_flagging():
+    ring = _ring(5)
+    for sid in range(5):
+        ring.publish_local(sid, _view(sid), now=0.0)
+    ring.fail(2)
+    for r in range(4):
+        ring.step(float(r))
+    views = ring.views_for(0, 1.0)
+    # server 2's state is flagged unavailable; others still propagate
+    if 2 in views:
+        assert not views[2].available
+    for sid in (1, 3, 4):
+        assert sid in views and views[sid].available
+    ring.repair(2)
+    assert 2 not in ring.failed
+
+
+def test_corruption_corrected_next_publish():
+    ring = _ring(4)
+    for sid in range(4):
+        ring.publish_local(sid, _view(sid, goodput=10.0), now=0.0)
+    for r in range(2):
+        ring.step(float(r))
+    ring.corrupt(1, factor=4.0)
+    bad = ring.views_for(0, 1.0)[1].services["svc"].theoretical_goodput
+    assert bad == pytest.approx(40.0)
+    # next genuine publish + rounds wash it out
+    ring.publish_local(1, _view(1, goodput=10.0), now=2.0)
+    for r in range(2):
+        ring.step(2.0 + r)
+    good = ring.views_for(0, 3.0)[1].services["svc"].theoretical_goodput
+    assert good == pytest.approx(10.0)
+
+
+def test_round_cost_scales_with_servers_and_bandwidth():
+    slow = sync_round_seconds(1000, 8, bandwidth_gbps=0.5)
+    fast = sync_round_seconds(1000, 8, bandwidth_gbps=5.0)
+    small = sync_round_seconds(100, 8, bandwidth_gbps=0.5)
+    assert slow > fast and slow > small
+
+
+def test_parameter_server_backend_flexibility():
+    """§3.4: handler stays valid under a PS-style sync backend."""
+    ps = ParameterServerSync([0, 1, 2], interval_s=0.5)
+    for sid in range(3):
+        ps.publish_local(sid, _view(sid), now=0.0)
+    views = ps.views_for(0, 1.0)
+    assert set(views) == {1, 2}
+    assert views[1].sync_age_s >= 0.5
+    ps.fail(2)
+    assert not ps.views_for(0, 1.0)[2].available

@@ -1,0 +1,88 @@
+"""End-to-end system behaviour: the full EPARA pipeline — allocator ->
+placement -> sync -> handler -> live JAX serving — plus the launchers'
+public entry points."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, reduced
+from repro.core import (EdgeCloudControlPlane, Outcome, Request, ServerSpec,
+                        ServiceSpec, Sensitivity)
+from repro.models.registry import model_api
+from repro.serving.engine import (EparaServingEngine, GenerationRequest,
+                                  ServiceRuntime)
+
+
+def _specs():
+    return {
+        "chat": ServiceSpec("chat", flops_per_request=1e10,
+                            weights_bytes=2e8, vram_bytes=5e8,
+                            slo_latency_s=1.0),
+        "video": ServiceSpec("video", flops_per_request=5e9,
+                             weights_bytes=1e8, vram_bytes=3e8,
+                             sensitivity=Sensitivity.FREQUENCY,
+                             slo_fps=30.0, slo_latency_s=0.2),
+    }
+
+
+def test_full_pipeline_serves_requests(dense_cfg):
+    servers = [ServerSpec(sid=i, num_gpus=2) for i in range(2)]
+    cp = EdgeCloudControlPlane(servers, _specs())
+    demand = {(s, n): 10.0 for s in _specs() for n in range(2)}
+    placements = cp.run_placement(demand)
+    assert placements
+    cp.publish_all(0.0)
+    for _ in range(2):
+        cp.sync_step(0.0)
+
+    # live data plane: toy dense model stands in for both services
+    params = model_api(dense_cfg).init(jax.random.PRNGKey(0), dense_cfg)
+    engines = {s.sid: EparaServingEngine() for s in servers}
+    for svc, sid in placements:
+        if sid >= 0:
+            engines[sid].deploy(svc, ServiceRuntime(dense_cfg, params,
+                                                    cp.plans[svc]))
+    served = 0
+    for i in range(6):
+        svc = list(_specs())[i % 2]
+        req = Request(rid=i, service=svc, arrival_s=0.0, deadline_s=100.0)
+        d = cp.handle(req, now=0.0, at_server=i % 2)
+        assert d.outcome in (Outcome.LOCAL, Outcome.OFFLOAD,
+                             Outcome.LOCAL_CROSS)
+        target = d.destination if d.outcome == Outcome.OFFLOAD else i % 2
+        if svc not in engines[target].runtimes:
+            target = next(s for s, e in engines.items()
+                          if svc in e.runtimes)
+        engines[target].submit(svc, GenerationRequest(
+            rid=i, tokens=np.arange(4, dtype=np.int32), max_new_tokens=2))
+        served += 1
+    results = []
+    for e in engines.values():
+        results.extend(e.drain())
+    assert len(results) == served
+    assert all(len(r.tokens) == 2 for r in results)
+
+
+def test_serve_launcher_main():
+    from repro.launch import serve
+    rc = serve.main(["--archs", "codeqwen1.5-7b", "--servers", "2",
+                     "--requests", "4", "--max-new-tokens", "2"])
+    assert rc == 0
+
+
+def test_train_launcher_main():
+    from repro.launch import train
+    rc = train.main(["--arch", "minicpm-2b", "--reduced", "--steps", "3",
+                     "--batch", "2", "--seq", "32", "--log-every", "2"])
+    assert rc == 0
+
+
+def test_reduced_configs_are_smoke_sized():
+    for arch in ARCH_IDS:
+        cfg = reduced(get_config(arch))
+        assert cfg.num_layers <= 2 or cfg.family == "hybrid"
+        assert cfg.d_model <= 512
+        if cfg.family == "moe":
+            assert cfg.num_experts <= 4
