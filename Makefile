@@ -1,0 +1,19 @@
+PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+export PYTHONPATH
+
+.PHONY: test smoke bench serve quickstart
+
+test:                ## tier-1 suite
+	python -m pytest -x -q
+
+smoke:               ## tiny-config benchmark pass (continuous batching)
+	python -m benchmarks.run --smoke
+
+bench:               ## full benchmark suite (paper figures)
+	python -m benchmarks.run
+
+serve:               ## end-to-end serving driver
+	python -m repro.launch.serve
+
+quickstart:
+	python examples/quickstart.py

@@ -1,0 +1,120 @@
+"""Continuous batching vs batch-sync serving: the slot data plane's win.
+
+Two comparisons on the paper's bursty mixed-``max_new_tokens`` workloads:
+
+1. **Live engine** (toy dense model on CPU): the same request set served
+   by ``ServiceRuntime(mode="continuous")`` and ``mode="sync"``.  The
+   derived column reports fused decode steps — the hardware-independent
+   cost the slot loop minimizes (short requests stop burning steps after
+   EOS / their own budget, late arrivals join mid-decode instead of
+   waiting for the batch to drain).
+
+2. **Simulator** (testbed scale): goodput of the event-driven simulator
+   under ``serving_mode="continuous"`` vs ``"sync"`` batch barriers, so
+   the co-simulation's admission model matches whichever live engine mode
+   is deployed.
+
+Smoke mode (REPRO_BENCH_SMOKE=1 or ``python -m benchmarks.run --smoke``)
+shrinks both to a few seconds.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from .common import Row, timed
+
+
+def _smoke() -> bool:
+    return os.environ.get("REPRO_BENCH_SMOKE", "0") == "1"
+
+
+def _toy_cfg():
+    from repro.models.config import ModelConfig
+    return ModelConfig(name="toy", family="dense", num_layers=2, d_model=64,
+                       num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+                       vocab_size=257, dtype="float32",
+                       param_dtype="float32")
+
+
+def _bursty_requests(n, rng, vocab):
+    """The paper's bursty shape: waves of short requests with a straggler
+    (long max_new) at the head of each wave."""
+    from repro.serving.engine import GenerationRequest
+    reqs = []
+    for i in range(n):
+        long = i % 4 == 0
+        reqs.append(GenerationRequest(
+            rid=i, tokens=rng.integers(1, vocab, 5).astype(np.int32),
+            max_new_tokens=16 if long else 2, stream=i))
+    return reqs
+
+
+def _live_engine_rows() -> list:
+    import jax
+
+    from repro.core.allocator import ParallelPlan
+    from repro.core.categories import Sensitivity, TaskCategory
+    from repro.models import transformer as T
+    from repro.serving.engine import ServiceRuntime
+
+    cfg = _toy_cfg()
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    plan = ParallelPlan(service="bench",
+                        category=TaskCategory(Sensitivity.LATENCY, False),
+                        bs=4)
+    n = 8 if _smoke() else 24
+    rows = []
+    steps = {}
+    for mode in ("continuous", "sync"):
+        rng = np.random.default_rng(0)
+        rt = ServiceRuntime(cfg, params, plan, mode=mode)
+        for r in _bursty_requests(n, rng, cfg.vocab_size):
+            rt.submit(r)
+        res, us = timed(rt.drain)
+        assert len(res) == n
+        toks = sum(len(r.tokens) for r in res)
+        steps[mode] = rt.decode_steps
+        rows.append((f"serve_{mode}", us,
+                     f"decode_steps={rt.decode_steps};tokens={toks}"))
+    assert steps["continuous"] < steps["sync"], steps
+    rows.append(("serve_step_saving", 0.0,
+                 f"{steps['sync'] - steps['continuous']}"
+                 f"/{steps['sync']}_steps_saved"))
+    return rows
+
+
+def _simulator_rows() -> list:
+    import dataclasses
+
+    from repro.simulator.engine import run_comparison
+
+    from .common import testbed_scenario
+
+    horizon = 10.0 if _smoke() else 40.0
+    load = 10.0 if _smoke() else 30.0
+    services, servers, events, cfg = testbed_scenario(horizon=horizon,
+                                                      load=load, seed=3)
+    rows = []
+    for mode in ("continuous", "sync"):
+        c = dataclasses.replace(cfg, serving_mode=mode)
+        out, us = timed(run_comparison, servers, services, events,
+                        ["EPARA"], c)
+        r = out["EPARA"]
+        rows.append((f"sim_{mode}", us,
+                     f"goodput={r.goodput:.2f};fulfillment="
+                     f"{r.fulfillment:.3f}"))
+    return rows
+
+
+def run() -> list:
+    rows: list = []
+    rows.extend(_live_engine_rows())
+    rows.extend(_simulator_rows())
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -4,9 +4,11 @@ Prints ``name,us_per_call,derived`` CSV rows.
 
   PYTHONPATH=src python -m benchmarks.run            # all
   PYTHONPATH=src python -m benchmarks.run goodput_testbed dp_scaling
+  PYTHONPATH=src python -m benchmarks.run --smoke    # tiny CI config
 """
 from __future__ import annotations
 
+import os
 import sys
 import time
 import traceback
@@ -24,13 +26,23 @@ MODULES = [
     "dp_scaling",         # Fig. 1 / 3a
     "case_study_llm",     # Fig. 8  (§4.3)
     "case_study_seg",     # Fig. 20 (§5.3.4)
+    "continuous_batching",  # slot data plane vs batch-sync (this repo)
     "kernel_bench",       # repo-specific
     "roofline_table",     # deliverable (g)
 ]
 
+# modules cheap enough (and load-bearing enough) for a CI smoke pass
+SMOKE_MODULES = ["continuous_batching"]
+
 
 def main() -> None:
-    wanted = sys.argv[1:] or MODULES
+    args = sys.argv[1:]
+    if "--smoke" in args:
+        args = [a for a in args if a != "--smoke"]
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+        wanted = args or SMOKE_MODULES
+    else:
+        wanted = args or MODULES
     failures = []
     print("name,us_per_call,derived")
     for modname in wanted:

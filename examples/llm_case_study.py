@@ -64,10 +64,11 @@ def main():
             tokens=rng.integers(0, cfg.vocab_size, 5,
                                 dtype=np.int64).astype(np.int32),
             max_new_tokens=4, stream=interaction))
-        out = rt.step(max_wait_s=0.0)[0]
+        out = rt.drain(max_wait_s=0.0)[0]   # slot loop: step until evicted
         print(f"  interaction {interaction}: DP group {group}, "
               f"decode {list(out.tokens)} "
-              f"({out.decode_s*1e3:.0f}ms decode)")
+              f"({out.decode_s*1e3:.0f}ms decode, "
+              f"{out.decode_steps} steps)")
     print("done.")
 
 

@@ -57,7 +57,7 @@ def main():
                 cfg, params, cp.plans[svc])
 
     rng = np.random.default_rng(0)
-    print("== serving ==")
+    print("== serving (continuous-batching slot loop) ==")
     for i in range(6):
         svc = list(services)[i % 2]
         req = Request(rid=i, service=svc, arrival_s=0.0, deadline_s=10.0)
@@ -71,11 +71,14 @@ def main():
             rid=i, tokens=rng.integers(0, cfg.vocab_size, 6,
                                        dtype=np.int32).astype(np.int32),
             max_new_tokens=4))
-        # frequency services hold frames for MF grouping; flush for demo
-        res = rt.step(max_wait_s=0.0)[0]
+        # each step() = evict / admit / one fused decode step; drain runs
+        # the loop until this request's slot is evicted (frequency services
+        # hold frames for MF grouping; max_wait_s=0.0 flushes for the demo)
+        res = rt.drain(max_wait_s=0.0)[0]
         print(f"  req{i} [{svc:9s}] {d.outcome.value:8s} -> server{target} "
               f"tokens={list(res.tokens)} "
-              f"({res.prefill_s*1e3:.0f}ms prefill)")
+              f"({res.prefill_s*1e3:.0f}ms prefill, "
+              f"{res.decode_steps} decode steps)")
     print("done.")
 
 

@@ -94,8 +94,11 @@ def main():
         results.extend(eng.drain())
     dt = time.time() - t0
     toks = sum(len(r.tokens) for r in results)
+    steps = sum(rt.decode_steps for eng in engines.values()
+                for rt in eng.runtimes.values())
     print(f"\nserved {len(results)}/{args.requests} requests "
-          f"({toks} tokens) in {dt:.1f}s — handler outcomes: {outcomes}")
+          f"({toks} tokens, {steps} fused decode steps) in {dt:.1f}s — "
+          f"handler outcomes: {outcomes}")
     assert len(results) == args.requests
 
 

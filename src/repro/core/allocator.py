@@ -55,6 +55,21 @@ class ParallelPlan:
         """Eq. 5: concurrent streams multiplexed into one batch."""
         return max(1, self.bs // max(1, self.mf))
 
+    @property
+    def max_in_flight(self) -> int:
+        """Decode slots per replica runtime: the continuous-batching engine
+        keeps at most ``bs`` requests in flight per DP group (the profiled
+        batch is the largest the latency SLO tolerates, so it also bounds
+        the fused decode batch)."""
+        return self.bs
+
+    @property
+    def server_slots(self) -> int:
+        """Total concurrent decode slots this plan sustains on a server:
+        MT co-locates ``mt`` independent runtimes per group (each with its
+        own ``bs`` slots) and DP adds ``dp`` replica groups."""
+        return self.bs * self.mt * self.dp
+
     def operators(self):
         ops = set()
         if self.bs > 1:

@@ -1,0 +1,12 @@
+"""JAX version compatibility for Pallas TPU symbols.
+
+``pltpu.TPUCompilerParams`` was renamed to ``pltpu.CompilerParams`` in
+newer JAX releases; the kernels target the new spelling and fall back to
+the old one so the suite runs on both.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from . import compat
+
 from .ref import NEG_INF
 
 DEFAULT_KV_BLOCK = 512
@@ -120,7 +122,7 @@ def decode_attention_pallas(q, k_cache, v_cache, cache_len, *, window=None,
             pltpu.VMEM((_SUB, 128), jnp.float32),
             pltpu.VMEM((_SUB, D), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(lens, qt, kt, vt)

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from . import compat
+
 from .ref import NEG_INF
 
 DEFAULT_Q_BLOCK = 128
@@ -162,7 +164,7 @@ def flash_attention_pallas(q, k, v, *, causal=True, window=None, prefix_len=0,
             pltpu.VMEM((q_block, _LANES), jnp.float32),   # l
             pltpu.VMEM((q_block, D), jnp.float32),        # acc
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(qt, kt, vt)

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from . import compat
+
 DEFAULT_CHUNK = 128
 
 
@@ -133,7 +135,7 @@ def ssd_scan_pallas(x, dt, A, B, C, D=None, *, chunk=DEFAULT_CHUNK,
             jax.ShapeDtypeStruct((Bb * H, P, N), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(Ab, xt, dtt, Bh, Ch, h0)

@@ -77,7 +77,12 @@ def _pick(mesh: Mesh, shape: Tuple[int, ...],
             if shape[d] % size == 0 and shape[d] > 0:
                 assignment[d] = axis
                 break
-    spec = [assignment.get(d) for d in range(len(shape))]
+    spec = []
+    for d in range(len(shape)):
+        a = assignment.get(d)
+        if isinstance(a, (tuple, list)):  # unwrap singleton axis tuples so
+            a = a[0] if len(a) == 1 else tuple(a)  # specs compare equal on
+        spec.append(a)                    # JAX versions without normalization
     return P(*spec)
 
 

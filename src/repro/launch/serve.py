@@ -45,6 +45,10 @@ def main(argv=None) -> int:
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--max-new-tokens", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mode", choices=("continuous", "sync"),
+                    default="continuous",
+                    help="serving data plane: slot-based continuous "
+                         "batching (default) or run-to-completion batches")
     args = ap.parse_args(argv)
 
     arch_ids = [a.strip() for a in args.archs.split(",")]
@@ -77,7 +81,7 @@ def main(argv=None) -> int:
         cfg = cfgs[svc]
         params = model_api(cfg).init(jax.random.PRNGKey(hash(svc) % 2**31),
                                      cfg)
-        rt = ServiceRuntime(cfg, params, cp.plans[svc])
+        rt = ServiceRuntime(cfg, params, cp.plans[svc], mode=args.mode)
         engines[sid].deploy(svc, rt)
 
     # drive requests through handler -> engine
@@ -114,8 +118,11 @@ def main(argv=None) -> int:
         results.extend(eng.drain())
     dt = time.time() - t0
     toks = sum(len(r.tokens) for r in results)
+    steps = sum(rt.decode_steps for eng in engines.values()
+                for rt in eng.runtimes.values())
     print(f"served {len(results)}/{args.requests} requests, {toks} tokens "
-          f"in {dt:.2f}s ({toks/dt:.1f} tok/s)  outcomes={outcomes}")
+          f"in {dt:.2f}s ({toks/dt:.1f} tok/s, {steps} fused decode steps, "
+          f"mode={args.mode})  outcomes={outcomes}")
     return 0 if len(results) == args.requests else 1
 
 

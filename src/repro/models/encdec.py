@@ -182,8 +182,11 @@ def decode_step(params, cfg: ModelConfig, token, cache, impl=None):
     d = cfg.d_model
     half = d // 2
     freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / (half - 1))
-    ang = (new_len - 1).astype(jnp.float32) * freqs
-    posvec = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None]
+    pos = jnp.asarray(new_len - 1, jnp.float32)
+    if pos.ndim == 0:            # shared scalar len broadcasts over B;
+        pos = pos[None]          # per-slot (B,) lens index their own row
+    ang = pos[:, None] * freqs[None]
+    posvec = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
     x = x + posvec.astype(x.dtype)
 
     def body(carry, xs):

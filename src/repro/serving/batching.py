@@ -5,6 +5,12 @@
   (``mf``) from each of ``inter_request_count = floor(bs / mf)`` concurrent
   homogeneous streams, filling the batch even when single streams are
   bursty/uneven — the request-level trick that lifts GPU utilization.
+
+Both composers are **capacity-aware**: ``compose(limit=k)`` fills at most
+``k`` items so the continuous-batching engine can top up only the decode
+slots that are actually free, instead of composing a full ``bs`` batch
+behind a barrier.  ``push_front`` returns an item to the head of its queue
+(used when sticky DP routing finds the session's replica group full).
 """
 from __future__ import annotations
 
@@ -26,16 +32,25 @@ class QueuedItem:
 @dataclasses.dataclass
 class ComposedBatch:
     items: List[QueuedItem]
-    mf: int                      # frames taken per stream
+    mf: int                      # frames actually taken per stream (max)
     streams: Tuple[int, ...]     # which streams contributed
+    frames_per_stream: Dict[int, int] = dataclasses.field(
+        default_factory=dict)    # actual frames taken from each stream
 
     @property
     def size(self) -> int:
         return len(self.items)
 
 
+def _frame_counts(items: List[QueuedItem]) -> Dict[int, int]:
+    counts: Dict[int, int] = {}
+    for it in items:
+        counts[it.stream] = counts.get(it.stream, 0) + 1
+    return counts
+
+
 class BSComposer:
-    """Latency tasks: plain FIFO batching up to ``bs``."""
+    """Latency tasks: plain FIFO batching up to ``bs`` (or ``limit``)."""
 
     def __init__(self, plan: ParallelPlan):
         self.plan = plan
@@ -44,24 +59,33 @@ class BSComposer:
     def add(self, item: QueuedItem) -> None:
         self.queue.append(item)
 
+    def push_front(self, item: QueuedItem) -> None:
+        self.queue.appendleft(item)
+
     def __len__(self) -> int:
         return len(self.queue)
 
-    def compose(self) -> Optional[ComposedBatch]:
-        if not self.queue:
+    def compose(self, *, limit: Optional[int] = None,
+                **_kw) -> Optional[ComposedBatch]:
+        cap = self.plan.bs if limit is None else min(self.plan.bs, limit)
+        if not self.queue or cap <= 0:
             return None
         items = []
-        while self.queue and len(items) < self.plan.bs:
+        while self.queue and len(items) < cap:
             items.append(self.queue.popleft())
-        return ComposedBatch(items=items, mf=1,
-                             streams=tuple({i.stream for i in items}))
+        counts = _frame_counts(items)
+        return ComposedBatch(items=items, mf=max(counts.values()),
+                             streams=tuple(counts),
+                             frames_per_stream=counts)
 
 
 class MFComposer:
     """Frequency tasks: per-stream queues; a batch takes exactly ``mf``
     frames from each of up to ``inter_request_count`` streams (Eq. 5).
     Falls back to fewer streams / partial mf when starved so frames never
-    wait past their latency budget."""
+    wait past their latency budget.  The composed batch reports the frames
+    ACTUALLY taken per stream (a starved partial flush takes fewer than the
+    plan's ``mf``)."""
 
     def __init__(self, plan: ParallelPlan):
         self.plan = plan
@@ -70,13 +94,24 @@ class MFComposer:
     def add(self, item: QueuedItem) -> None:
         self.streams.setdefault(item.stream, collections.deque()).append(item)
 
+    def push_front(self, item: QueuedItem) -> None:
+        self.streams.setdefault(item.stream,
+                                collections.deque()).appendleft(item)
+
     def __len__(self) -> int:
         return sum(len(q) for q in self.streams.values())
 
     def compose(self, *, now: float = 0.0,
-                max_wait_s: float = float("inf")) -> Optional[ComposedBatch]:
+                max_wait_s: float = float("inf"),
+                limit: Optional[int] = None) -> Optional[ComposedBatch]:
         mf = max(1, self.plan.mf)
         irc = self.plan.inter_request_count
+        cap = self.plan.bs if limit is None else min(self.plan.bs, limit)
+        if cap <= 0:
+            return None
+        if cap < mf:             # few free slots: admit a partial mf rather
+            mf = cap             # than stalling admission entirely
+        irc = max(1, min(irc, cap // mf))
         ready = [s for s, q in self.streams.items() if len(q) >= mf]
         overdue = any(q and now - q[0].enqueued_s >= max_wait_s
                       for q in self.streams.values())
@@ -88,16 +123,25 @@ class MFComposer:
                            key=lambda s: self.streams[s][0].enqueued_s)
         take_streams = ready[:irc]
         items: List[QueuedItem] = []
+        budget = cap
         for s in take_streams:
             q = self.streams[s]
-            for _ in range(min(mf, len(q))):
+            take = min(mf, len(q), budget)
+            for _ in range(take):
                 items.append(q.popleft())
+            budget -= take
+            if budget <= 0:
+                break
         for s in list(self.streams):
             if not self.streams[s]:
                 del self.streams[s]
         if not items:
             return None
-        return ComposedBatch(items=items, mf=mf, streams=tuple(take_streams))
+        counts = _frame_counts(items)
+        return ComposedBatch(items=items, mf=max(counts.values()),
+                             streams=tuple(s for s in take_streams
+                                           if s in counts),
+                             frames_per_stream=counts)
 
 
 def make_composer(plan: ParallelPlan):

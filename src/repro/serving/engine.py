@@ -1,18 +1,38 @@
-"""Live serving engine: batched prefill + decode driven by an EPARA
-ParallelPlan.
+"""Live serving engine: continuous-batching decode over persistent slots,
+driven by an EPARA ParallelPlan.
 
-``ServiceRuntime`` owns one service's params and its DP replica groups;
-each group runs batch-synchronous generation (prefill the composed batch,
-decode until done).  Request-level DP round-robins composed batches across
-groups (sticky for stateful archs).  The same engine object backs the CPU
-examples (reduced configs) and, via pjit'd step functions passed in by the
-launcher, the mesh deployment.
+``ServiceRuntime`` owns one service's params and its DP replica groups.
+The default ``mode="continuous"`` keeps a persistent in-flight batch of
+decode slots per group; each ``step()``:
+
+  (a) **evicts** slots whose request hit EOS or its own ``max_new_tokens``
+      (``kvcache.select_slots`` compacts the cache batch axis),
+  (b) **admits** queued requests from the BS/MF composer into the freed
+      slots (``compose(limit=free)``), prefilling each admission on its
+      own — no cross-request padding — and merging the fresh cache into
+      the live batch with ``kvcache.merge``,
+  (c) runs **one fused decode step** for every occupied slot, with
+      per-slot ``len`` vectors (the decode kernels mask per-batch
+      ``cache_len``) and masked sampling for slots that finished at
+      admission time.
+
+Requests therefore decode exactly as long as they individually need, new
+arrivals join mid-decode without waiting for a batch to drain, and every
+result carries its own prefill time and admit→finish wall time.  The
+pre-slot run-to-completion path is preserved behind ``mode="sync"`` so the
+two can be compared (see benchmarks/continuous_batching.py); both modes
+produce identical greedy tokens for identically padded prompts.
+
+Request-level DP round-robins admissions across groups (sticky for
+stateful archs).  The same engine object backs the CPU examples (reduced
+configs) and, via pjit'd step functions passed in by the launcher, the
+mesh deployment.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -22,8 +42,8 @@ from repro.core.allocator import DPGroupRouter, ParallelPlan
 from repro.models.config import ModelConfig
 from repro.models.registry import ModelApi, model_api
 
-from .batching import BSComposer, ComposedBatch, MFComposer, QueuedItem, \
-    make_composer
+from . import kvcache
+from .batching import ComposedBatch, MFComposer, QueuedItem, make_composer
 from .sampler import SamplerConfig, sample
 
 
@@ -35,34 +55,86 @@ class GenerationRequest:
     stream: int = 0
     extras: Optional[Dict[str, Any]] = None   # e.g. image/frame embeddings
     submitted_s: float = 0.0
+    eos_token: Optional[int] = None  # evict the slot early on this token
 
 
 @dataclasses.dataclass
 class GenerationResult:
     rid: int
     tokens: np.ndarray               # generated ids (n,)
-    prefill_s: float
-    decode_s: float
+    prefill_s: float                 # this request's own prefill wall time
+    decode_s: float                  # admit→finish wall time (continuous)
     group: int
+    admitted_s: float = 0.0          # logical clock at admission
+    finished_s: float = 0.0          # logical clock at eviction
+    decode_steps: int = 0            # fused steps this request took part in
+
+
+class _Slot:
+    """One in-flight request occupying a decode slot."""
+    __slots__ = ("req", "emitted", "done", "prefill_s", "admit_wall",
+                 "decode_start_wall", "finish_wall", "admitted_s", "steps")
+
+    def __init__(self, req: GenerationRequest, first_token: int,
+                 prefill_s: float, admit_wall: float, admitted_s: float):
+        self.req = req
+        self.emitted: List[int] = [first_token]
+        self.prefill_s = prefill_s
+        self.admit_wall = admit_wall
+        self.decode_start_wall = admit_wall + prefill_s
+        self.finish_wall = 0.0
+        self.admitted_s = admitted_s
+        self.steps = 0
+        self.done = (len(self.emitted) >= req.max_new_tokens
+                     or (req.eos_token is not None
+                         and first_token == req.eos_token))
+        if self.done:
+            self.finish_wall = self.decode_start_wall
+
+    def push(self, token: int) -> None:
+        self.emitted.append(token)
+        if (len(self.emitted) >= self.req.max_new_tokens
+                or (self.req.eos_token is not None
+                    and token == self.req.eos_token)):
+            self.done = True
+            self.finish_wall = time.perf_counter()
+
+
+class _GroupState:
+    """Persistent in-flight batch of one DP replica group."""
+    __slots__ = ("cache", "slots")
+
+    def __init__(self):
+        self.cache = None
+        self.slots: List[_Slot] = []
+
+    @property
+    def live(self) -> int:
+        return len(self.slots)
 
 
 class ServiceRuntime:
-    """One deployed service: params + plan + DP groups."""
+    """One deployed service: params + plan + DP groups of decode slots."""
 
     def __init__(self, cfg: ModelConfig, params, plan: ParallelPlan, *,
                  prefill_fn: Optional[Callable] = None,
                  decode_fn: Optional[Callable] = None,
                  sampler: SamplerConfig = SamplerConfig(), seed: int = 0,
-                 impl: Optional[str] = None):
+                 impl: Optional[str] = None, mode: str = "continuous"):
+        if mode not in ("continuous", "sync"):
+            raise ValueError(f"mode must be continuous|sync, got {mode!r}")
         self.cfg = cfg
         self.params = params
         self.plan = plan
+        self.mode = mode
         self.api: ModelApi = model_api(cfg)
         self.router = DPGroupRouter(plan)
         self.composer = make_composer(plan)
         self.sampler = sampler
         self._key = jax.random.PRNGKey(seed)
-        impl = impl
+        self.groups: Dict[int, _GroupState] = {
+            g: _GroupState() for g in range(max(1, plan.dp))}
+        self.decode_steps = 0        # fused decode invocations (all groups)
         api = self.api
 
         if prefill_fn is None:
@@ -84,7 +156,10 @@ class ServiceRuntime:
     def pending(self) -> int:
         return len(self.composer)
 
-    # -- execution ----------------------------------------------------------
+    def in_flight(self) -> int:
+        return sum(g.live for g in self.groups.values())
+
+    # -- shared helpers ---------------------------------------------------
     def _pad_prompts(self, reqs: Sequence[GenerationRequest]):
         L = max(len(r.tokens) for r in reqs)
         toks = np.zeros((len(reqs), L), np.int32)
@@ -101,6 +176,124 @@ class ServiceRuntime:
             batch["embeddings"] = jnp.asarray(np.stack(embs))
         return batch
 
+    def _sample(self, logits, live=None):
+        self._key, sub = jax.random.split(self._key)
+        return sample(logits, sub, self.sampler, live=live)
+
+    # ------------------------------------------------------------------
+    # continuous mode: slot admit / fused decode / evict
+    # ------------------------------------------------------------------
+    def _free_slots(self) -> int:
+        return sum(max(0, self.plan.bs - g.live)
+                   for g in self.groups.values())
+
+    def _evict(self, group: int, state: _GroupState,
+               now: float) -> List[GenerationResult]:
+        """(a) Release every slot whose request finished; compact the
+        cache batch axis with select_slots."""
+        if not state.slots:
+            return []
+        keep = [i for i, s in enumerate(state.slots) if not s.done]
+        if len(keep) == len(state.slots):
+            return []
+        results = []
+        for s in state.slots:
+            if not s.done:
+                continue
+            results.append(GenerationResult(
+                rid=s.req.rid, tokens=np.asarray(s.emitted, np.int32),
+                prefill_s=s.prefill_s,
+                decode_s=max(0.0, s.finish_wall - s.decode_start_wall),
+                group=group, admitted_s=s.admitted_s, finished_s=now,
+                decode_steps=s.steps))
+        state.slots = [state.slots[i] for i in keep]
+        state.cache = (kvcache.select_slots(state.cache, keep)
+                       if keep else None)
+        return results
+
+    def _admit_one(self, req: GenerationRequest, group: int,
+                   state: _GroupState, now: float) -> None:
+        """(b) Prefill one admission on its own (no cross-request padding)
+        and merge its cache into the group's live batch."""
+        t0 = time.perf_counter()
+        toks, _ = self._pad_prompts([req])
+        batch = self._build_batch([req], toks)
+        cache_size = int(toks.shape[1] + req.max_new_tokens)
+        logits, cache = self.prefill_fn(self.params, batch, cache_size)
+        first = int(np.asarray(self._sample(logits))[0])
+        jax.block_until_ready(logits)
+        t1 = time.perf_counter()
+        state.slots.append(_Slot(req, first, prefill_s=t1 - t0,
+                                 admit_wall=t0, admitted_s=now))
+        cache = kvcache.with_lens(cache, kvcache.lens(cache))
+        state.cache = (cache if state.cache is None
+                       else kvcache.merge([state.cache, cache]))
+
+    def _route_admission(self, item: QueuedItem) -> Optional[int]:
+        """Pick a DP group with a free slot; sticky sessions must land on
+        their pinned group or wait."""
+        g = self.router.route(session=item.stream)
+        if self.groups[g].live < self.plan.bs:
+            return g
+        if self.plan.sticky and item.stream:
+            return None          # session pinned to a full group: requeue
+        for alt, state in self.groups.items():
+            if state.live < self.plan.bs:
+                return alt
+        return None
+
+    def _admit(self, now: float, max_wait_s: float) -> None:
+        free = self._free_slots()
+        if free <= 0 or not len(self.composer):
+            return
+        if isinstance(self.composer, MFComposer):
+            composed = self.composer.compose(now=now, max_wait_s=max_wait_s,
+                                             limit=free)
+        else:
+            composed = self.composer.compose(limit=free)
+        if composed is None:
+            return
+        unplaced = []
+        for item in composed.items:
+            g = self._route_admission(item)
+            if g is None:
+                unplaced.append(item)
+                continue
+            self._admit_one(item.payload, g, self.groups[g], now)
+        for item in reversed(unplaced):   # push_front in reverse keeps FIFO
+            self.composer.push_front(item)
+
+    def _decode_group(self, state: _GroupState) -> None:
+        """(c) One fused decode step over every occupied slot."""
+        if not state.slots:
+            return
+        live = np.array([not s.done for s in state.slots])
+        if not live.any():
+            return               # everything awaits eviction
+        cur = jnp.asarray([s.emitted[-1] if not s.done else 0
+                           for s in state.slots], jnp.int32)
+        logits, state.cache = self.decode_fn(self.params, cur, state.cache)
+        toks = np.asarray(self._sample(logits, live=jnp.asarray(live)))
+        self.decode_steps += 1
+        for i, slot in enumerate(state.slots):
+            if slot.done:
+                continue
+            slot.steps += 1
+            slot.push(int(toks[i]))
+
+    def _step_continuous(self, now: float,
+                         max_wait_s: float) -> List[GenerationResult]:
+        results: List[GenerationResult] = []
+        for group, state in self.groups.items():
+            results.extend(self._evict(group, state, now))
+        self._admit(now, max_wait_s)
+        for state in self.groups.values():
+            self._decode_group(state)
+        return results
+
+    # ------------------------------------------------------------------
+    # sync mode: run-to-completion batches (the pre-slot baseline)
+    # ------------------------------------------------------------------
     def run_batch(self, composed: ComposedBatch, *,
                   now: float = 0.0) -> List[GenerationResult]:
         reqs = [item.payload for item in composed.items]
@@ -122,24 +315,24 @@ class ServiceRuntime:
             logits, cache = self.decode_fn(self.params, cur, cache)
             cur = self._sample(logits)
             outs.append(np.asarray(cur))
+            self.decode_steps += 1
         jax.block_until_ready(cur)
         t2 = time.perf_counter()
 
         gen = np.stack(outs, axis=1)  # (B, max_new)
         results = []
         for i, r in enumerate(reqs):
+            # sync mode charges the batch-wide decode time to every member
+            # (the very distortion the slot path fixes)
             results.append(GenerationResult(
                 rid=r.rid, tokens=gen[i, :r.max_new_tokens],
-                prefill_s=t1 - t0, decode_s=t2 - t1, group=group))
+                prefill_s=t1 - t0, decode_s=t2 - t1, group=group,
+                admitted_s=now, finished_s=now,
+                decode_steps=max_new - 1))
         return results
 
-    def _sample(self, logits):
-        self._key, sub = jax.random.split(self._key)
-        return sample(logits, sub, self.sampler)
-
-    def step(self, now: float = 0.0,
-             max_wait_s: float = float("inf")) -> List[GenerationResult]:
-        """Compose one batch (BS or MF semantics) and run it."""
+    def _step_sync(self, now: float,
+                   max_wait_s: float) -> List[GenerationResult]:
         if isinstance(self.composer, MFComposer):
             composed = self.composer.compose(now=now, max_wait_s=max_wait_s)
         else:
@@ -147,6 +340,31 @@ class ServiceRuntime:
         if composed is None:
             return []
         return self.run_batch(composed, now=now)
+
+    # ------------------------------------------------------------------
+    def step(self, now: float = 0.0,
+             max_wait_s: float = float("inf")) -> List[GenerationResult]:
+        """Advance the data plane by one scheduling round.
+
+        Continuous mode: evict / admit / one fused decode step.  Sync
+        mode: compose one batch (BS or MF semantics) and run it to
+        completion."""
+        if self.mode == "sync":
+            return self._step_sync(now, max_wait_s)
+        return self._step_continuous(now, max_wait_s)
+
+    def drain(self, now: float = 0.0,
+              max_wait_s: float = 0.0) -> List[GenerationResult]:
+        """Step until queue and slots are empty; returns all results."""
+        out: List[GenerationResult] = []
+        while self.pending() or self.in_flight():
+            before = (self.pending(), self.in_flight(), self.decode_steps)
+            res = self.step(now=now, max_wait_s=max_wait_s)
+            out.extend(res)
+            if (self.pending(), self.in_flight(),
+                    self.decode_steps) == before and not res:
+                break            # no progress possible (e.g. empty compose)
+        return out
 
 
 class EparaServingEngine:
@@ -165,13 +383,24 @@ class EparaServingEngine:
                now: float = 0.0) -> None:
         self.runtimes[service].submit(req, now)
 
+    def step(self, now: float = 0.0,
+             max_wait_s: float = 0.0) -> List[GenerationResult]:
+        """One scheduling round across every deployed runtime."""
+        out: List[GenerationResult] = []
+        for rt in self.runtimes.values():
+            out.extend(rt.step(now=now, max_wait_s=max_wait_s))
+        self._results.extend(out)
+        return out
+
     def drain(self, now: float = 0.0) -> List[GenerationResult]:
         out: List[GenerationResult] = []
         for rt in self.runtimes.values():
-            while rt.pending():
+            while rt.pending() or rt.in_flight():
+                before = (rt.pending(), rt.in_flight(), rt.decode_steps)
                 res = rt.step(now=now, max_wait_s=0.0)
-                if not res:
-                    break
                 out.extend(res)
+                if (rt.pending(), rt.in_flight(),
+                        rt.decode_steps) == before and not res:
+                    break
         self._results.extend(out)
         return out

@@ -1,54 +1,172 @@
-"""Cache pytree utilities for the serving engine.
+"""Cache pytree utilities for the serving engine's slot data plane.
 
-Model caches are pytrees whose array leaves have layout (layers, batch, ...)
-with ``len`` scalars.  These helpers slice/merge along the batch axis so the
-engine can admit/evict slots without knowing each family's cache layout.
+Model caches are arbitrary pytrees (flat dicts today — KV for attention
+families, conv/ssd state for SSM/hybrid, encoder memory for enc-dec — but
+nesting is allowed).  The slot engine admits and evicts requests without
+knowing each family's layout; it relies only on a shape convention shared
+by every family:
+
+* ``ndim >= 2`` leaves are batched state with layout ``(layers, batch,
+  ...)`` — the batch axis is axis 1;
+* ``ndim == 1`` leaves are **per-slot** counters, batch axis 0 (the slot
+  engine stores each slot's own sequence length here);
+* ``ndim == 0`` leaves are counters shared by the whole batch (what the
+  model ``prefill`` functions emit as ``len``).
+
+``select_slots``/``concat`` slice and join along the batch axis (evict /
+admit).  ``merge`` is the admission workhorse: it promotes shared ``len``
+scalars to per-slot vectors, zero-pads differing trailing axes (ragged KV
+sequence capacity) up to the max, and concatenates — so a freshly
+prefilled single-request cache can join a live in-flight batch whose KV
+capacity differs.  End-padding is safe for full-attention caches because
+per-slot lengths mask the tail; ring (sliding-window) caches are never
+padded in practice since every cache of the family shares ``S = window``.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Sequence
+from typing import Any, List, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 
-_SCALAR_KEYS = ("len",)
+Cache = Any  # pytree of arrays
 
 
-def _is_scalar_entry(key: str) -> bool:
-    return key in _SCALAR_KEYS
+def _batch_axis(leaf) -> Union[int, None]:
+    """Batch axis of one leaf under the shape convention (None = shared)."""
+    if leaf.ndim == 0:
+        return None
+    return 0 if leaf.ndim == 1 else 1
 
 
-def map_batch(cache: Dict[str, Any], fn) -> Dict[str, Any]:
-    """Apply fn to every array leaf along its batch axis (axis=1)."""
-    out = {}
-    for k, v in cache.items():
-        out[k] = v if _is_scalar_entry(k) else fn(v)
-    return out
+def map_batch(cache: Cache, fn) -> Cache:
+    """Apply ``fn(leaf, batch_axis)`` to every batched leaf; shared scalars
+    pass through untouched."""
+    return jax.tree.map(
+        lambda a: a if a.ndim == 0 else fn(a, _batch_axis(a)), cache)
 
 
-def select_slots(cache: Dict[str, Any], idx: Sequence[int]) -> Dict[str, Any]:
-    idx = jnp.asarray(idx)
-    return map_batch(cache, lambda a: jnp.take(a, idx, axis=1))
+def batch_size(cache: Cache) -> int:
+    """Number of slots in the cache (size of the batch axis)."""
+    for leaf in jax.tree.leaves(cache):
+        if leaf.ndim >= 2:
+            return int(leaf.shape[1])
+    for leaf in jax.tree.leaves(cache):
+        if leaf.ndim == 1:
+            return int(leaf.shape[0])
+    raise ValueError("cache has no batched leaves")
 
 
-def batch_size(cache: Dict[str, Any]) -> int:
-    for k, v in cache.items():
-        if not _is_scalar_entry(k):
-            return v.shape[1]
-    raise ValueError("cache has no array leaves")
+def select_slots(cache: Cache, idx: Sequence[int]) -> Cache:
+    """Keep only the slots in ``idx`` (evict everything else)."""
+    idx = jnp.asarray(idx, jnp.int32)
+    return map_batch(cache, lambda a, ax: jnp.take(a, idx, axis=ax))
 
 
-def concat(caches: Sequence[Dict[str, Any]]) -> Dict[str, Any]:
-    keys = caches[0].keys()
-    out = {}
-    for k in keys:
-        if _is_scalar_entry(k):
-            out[k] = caches[0][k]
-        else:
-            out[k] = jnp.concatenate([c[k] for c in caches], axis=1)
-    return out
+def concat(caches: Sequence[Cache]) -> Cache:
+    """Join caches along the batch axis.  Leaf shapes must already agree
+    away from the batch axis (use ``merge`` for ragged capacities); shared
+    scalar leaves keep the first cache's value."""
+    def join(*leaves):
+        if leaves[0].ndim == 0:
+            return leaves[0]
+        return jnp.concatenate(leaves, axis=_batch_axis(leaves[0]))
+    return jax.tree.map(join, *caches)
 
 
-def cache_bytes(cache: Dict[str, Any]) -> int:
-    return sum(v.size * v.dtype.itemsize for k, v in cache.items()
-               if not _is_scalar_entry(k))
+def lens(cache: Cache) -> jnp.ndarray:
+    """Per-slot sequence lengths (B,) — broadcasts a shared scalar ``len``."""
+    B = batch_size(cache)
+    for leaf in jax.tree.leaves(cache):
+        if leaf.ndim == 1:
+            return leaf.astype(jnp.int32)
+    for leaf in jax.tree.leaves(cache):
+        if leaf.ndim == 0:
+            return jnp.full((B,), leaf, jnp.int32)
+    raise ValueError("cache has no length leaves")
+
+
+def with_lens(cache: Cache, new_lens) -> Cache:
+    """Replace every length leaf (ndim 0 or 1) with per-slot ``new_lens``.
+
+    This is how the engine converts a model-emitted cache (shared scalar
+    ``len``) into slot form before merging it into the live batch."""
+    new_lens = jnp.asarray(new_lens, jnp.int32)
+    if new_lens.ndim == 0:
+        new_lens = new_lens[None]
+    return jax.tree.map(
+        lambda a: new_lens if a.ndim <= 1 and jnp.issubdtype(
+            a.dtype, jnp.integer) else a, cache)
+
+
+def pad_to(cache: Cache, like: Cache) -> Cache:
+    """Zero-pad each batched leaf's trailing axes (everything after the
+    batch axis) up to ``like``'s sizes.  ``like`` may be a cache or a
+    pytree of shape tuples.  Used to grow a live batch's KV capacity when
+    an admitted request needs a longer sequence budget."""
+    leaves, treedef = jax.tree.flatten(cache)
+    targets = [tuple(s.shape) if hasattr(s, "shape") else tuple(s)
+               for s in jax.tree.leaves(
+                   like, is_leaf=lambda x: isinstance(x, tuple))]
+    if len(targets) != len(leaves):
+        raise ValueError("pad_to: reference does not match cache structure")
+
+    def pad_entry(leaf, target):
+        if leaf.ndim <= 1:
+            return leaf          # per-slot / shared counters never pad
+        widths = []
+        for d, (have, want) in enumerate(zip(leaf.shape, target)):
+            if d == 1:           # batch axis: concat's job, never padded
+                widths.append((0, 0))
+                continue
+            if want < have:
+                raise ValueError(
+                    f"pad_to cannot shrink axis {d}: {have} -> {want}")
+            widths.append((0, want - have))
+        if all(w == (0, 0) for w in widths):
+            return leaf
+        return jnp.pad(leaf, widths)
+
+    return jax.tree.unflatten(
+        treedef, [pad_entry(l, t) for l, t in zip(leaves, targets)])
+
+
+def merge(caches: Sequence[Cache]) -> Cache:
+    """Admission merge: per-slot length promotion + ragged-capacity padding
+    + batch concat, in one call.
+
+    Every input keeps its own sequence length; trailing axes that differ
+    across inputs (KV capacity S) are zero-padded at the end to the max.
+    The result always carries per-slot (B,) lengths, ready for the fused
+    per-slot decode step."""
+    caches = list(caches)
+    if len(caches) == 1:
+        c = caches[0]
+        return with_lens(c, lens(c))
+    normalized: List[Cache] = [with_lens(c, lens(c)) for c in caches]
+    leaves_list = [jax.tree.leaves(c) for c in normalized]
+    targets = []
+    for position, leaf in enumerate(leaves_list[0]):
+        if leaf.ndim <= 1:
+            targets.append(tuple(leaf.shape))
+            continue
+        shape = list(leaf.shape)
+        for other in leaves_list[1:]:
+            o = other[position]
+            if o.ndim != leaf.ndim:
+                raise ValueError("merge: mismatched cache structures")
+            for d in range(leaf.ndim):
+                if d != 1:       # batch axis may differ freely
+                    shape[d] = max(shape[d], o.shape[d])
+        targets.append(tuple(shape))
+    treedef = jax.tree.structure(normalized[0])
+    target_tree = jax.tree.unflatten(treedef, targets)
+    padded = [pad_to(c, target_tree) for c in normalized]
+    return concat(padded)
+
+
+def cache_bytes(cache: Cache) -> int:
+    """Bytes held by the batched state (length counters are negligible and
+    excluded, matching the allocator's VRAM accounting)."""
+    return sum(leaf.size * leaf.dtype.itemsize
+               for leaf in jax.tree.leaves(cache) if leaf.ndim >= 2)

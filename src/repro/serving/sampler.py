@@ -14,13 +14,26 @@ class SamplerConfig:
     top_k: int = 0               # 0 => disabled
 
 
-def sample(logits, key, cfg: SamplerConfig = SamplerConfig()):
-    """logits: (B, V) -> (B,) int32."""
+def sample(logits, key, cfg: SamplerConfig = SamplerConfig(), *,
+           live=None, fill_token: int = 0):
+    """logits: (B, V) -> (B,) int32.
+
+    ``live`` is an optional (B,) bool mask for the slot engine: slots that
+    already finished (EOS / their own ``max_new_tokens``) but still occupy
+    a decode slot until the next evict pass must not emit real tokens —
+    their rows are overwritten with ``fill_token`` so the fused batch-wide
+    sample stays shape-stable and deterministic regardless of which slots
+    are done."""
     if cfg.temperature <= 0.0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    logits = logits.astype(jnp.float32) / cfg.temperature
-    if cfg.top_k > 0:
-        top_vals, _ = jax.lax.top_k(logits, cfg.top_k)
-        cutoff = top_vals[:, -1:]
-        logits = jnp.where(logits < cutoff, -jnp.inf, logits)
-    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+        out = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    else:
+        scaled = logits.astype(jnp.float32) / cfg.temperature
+        if cfg.top_k > 0:
+            top_vals, _ = jax.lax.top_k(scaled, cfg.top_k)
+            cutoff = top_vals[:, -1:]
+            scaled = jnp.where(scaled < cutoff, -jnp.inf, scaled)
+        out = jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+    if live is not None:
+        out = jnp.where(jnp.asarray(live), out,
+                        jnp.asarray(fill_token, jnp.int32))
+    return out

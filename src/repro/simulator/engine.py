@@ -40,6 +40,14 @@ class SimConfig:
     placement_interval_s: float = 60.0
     inter_server_bw_gbs: float = 1.25
     seed: int = 0
+    # data-plane service discipline for latency tasks.  "continuous"
+    # (default) matches the live engine's slot loop: requests are admitted
+    # as capacity frees, so service behaves as a 1/c fluid flow.  "sync"
+    # models the pre-slot run-to-completion engine: requests barrier until
+    # a full ``bs`` batch forms (or ``sync_flush_s`` passes) and every
+    # member holds its slot for the full batch latency.
+    serving_mode: str = "continuous"
+    sync_flush_s: float = 0.05
 
 
 @dataclasses.dataclass
@@ -62,12 +70,14 @@ class SimResult:
 
 
 class _ServerState:
-    __slots__ = ("capacity", "vf", "stream_load")
+    __slots__ = ("capacity", "vf", "stream_load", "forming", "forming_gen")
 
     def __init__(self):
         self.capacity: Dict[str, float] = {}
         self.vf: Dict[str, float] = {}          # virtual finish per service
         self.stream_load: Dict[str, float] = {}  # reserved fps
+        self.forming: Dict[str, list] = {}       # sync mode: batch barrier
+        self.forming_gen: Dict[str, int] = {}    # guards stale flush events
 
 
 class Simulation:
@@ -170,6 +180,12 @@ class Simulation:
             elif kind == "done":
                 req, finish = payload
                 self.meter.complete_latency(req, finish)
+            elif kind == "batch_flush":
+                sid, service, gen = payload
+                st = self.state[sid]
+                if (st.forming_gen.get(service, 0) == gen
+                        and st.forming.get(service)):
+                    self._dispatch_batch(sid, service, now, push)
             elif kind == "stream_end":
                 req, achieved, sid = payload
                 svc = self.services[req.service]
@@ -239,7 +255,20 @@ class Simulation:
                 st.stream_load.get(req.service, 0.0) + achievable
             push(now + req.duration_s, "stream_end",
                  (req, achievable, sid))
+        elif self.cfg.serving_mode == "sync":
+            # run-to-completion barrier: the request waits for a full batch
+            # (or the flush timer), then holds its slot for the whole batch
+            forming = st.forming.setdefault(req.service, [])
+            forming.append(req)
+            gen = st.forming_gen.setdefault(req.service, 0)
+            if len(forming) >= plan.bs:
+                self._dispatch_batch(sid, req.service, now, push)
+            elif len(forming) == 1:
+                push(now + self.cfg.sync_flush_s, "batch_flush",
+                     (sid, req.service, gen))
         else:
+            # continuous admission: the slot loop admits as capacity frees,
+            # so latency service behaves as a 1/c fluid flow per request
             eff_cap = max(1e-6, cap - st.stream_load.get(req.service, 0.0))
             vf = max(now, st.vf.get(req.service, now))
             vf += 1.0 / eff_cap
@@ -249,6 +278,28 @@ class Simulation:
                                         mt=plan.mt, mf=plan.mf) / plan.bs
             finish = vf + base
             push(finish, "done", (req, finish))
+
+    def _dispatch_batch(self, sid: int, service: str, now: float,
+                        push) -> None:
+        """Sync mode: run one composed batch to completion; every member
+        finishes together at the batch-wide latency (the barrier cost the
+        continuous engine removes)."""
+        st = self.state[sid]
+        batch = st.forming.pop(service, [])
+        st.forming_gen[service] = st.forming_gen.get(service, 0) + 1
+        if not batch:
+            return
+        svc = self.services[service]
+        plan = self.scheduler.plans[service]
+        # a flush-timer partial batch only pays for its own size; the sync
+        # cost is the barrier wait + whole-batch hold, not padded compute
+        batch_lat = cm.effective_latency(svc, self.servers[0].gpu,
+                                         batch=len(batch), mp=plan.mp,
+                                         mt=plan.mt, mf=plan.mf)
+        vf = max(now, st.vf.get(service, now)) + batch_lat
+        st.vf[service] = vf
+        for req in batch:
+            push(vf, "done", (req, vf))
 
     def _peer_stream_share(self, req: Request, sid: int,
                            needed_fps: float) -> float:

@@ -1,0 +1,132 @@
+"""Deterministic stand-in for ``hypothesis`` when it is not installed.
+
+The property tests in this suite use a small strategy surface
+(integers/floats/booleans/none/sampled_from/one_of/lists).  When the real
+``hypothesis`` is available nothing here is used; otherwise ``install()``
+registers a minimal shim under ``sys.modules['hypothesis']`` so the test
+modules import unchanged and each ``@given`` test runs against a fixed
+number of seeded pseudo-random examples instead of being skipped at
+collection time.  Failures reproduce exactly (the draw sequence depends
+only on the test name), they just lack hypothesis' shrinking.
+"""
+from __future__ import annotations
+
+import random
+import sys
+import types
+import zlib
+
+_DEFAULT_MAX_EXAMPLES = 25
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng):
+        return self._draw(rng)
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value, max_value, **_kw):
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def booleans():
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def none():
+    return _Strategy(lambda rng: None)
+
+
+def sampled_from(seq):
+    seq = list(seq)
+    return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+
+def one_of(*strategies):
+    return _Strategy(
+        lambda rng: strategies[rng.randrange(len(strategies))].example(rng))
+
+
+def lists(elements, min_size=0, max_size=10):
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        return [elements.example(rng) for _ in range(n)]
+    return _Strategy(draw)
+
+
+def tuples(*strategies):
+    return _Strategy(lambda rng: tuple(s.example(rng) for s in strategies))
+
+
+def just(value):
+    return _Strategy(lambda rng: value)
+
+
+def settings(max_examples=_DEFAULT_MAX_EXAMPLES, **_kw):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*args, **strategies):
+    assert not args, "fallback @given supports keyword strategies only"
+
+    def deco(fn):
+        def runner():
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = random.Random(seed)
+            n = getattr(runner, "_fallback_max_examples",
+                        _DEFAULT_MAX_EXAMPLES)
+            for i in range(n):
+                kwargs = {k: s.example(rng) for k, s in strategies.items()}
+                try:
+                    fn(**kwargs)
+                except _Unsatisfied:
+                    continue
+                except Exception as e:  # noqa: BLE001 — annotate the example
+                    raise AssertionError(
+                        f"falsifying example (fallback draw {i}): "
+                        f"{kwargs!r}") from e
+
+        runner.__name__ = fn.__name__
+        runner.__qualname__ = fn.__qualname__
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        return runner
+
+    return deco
+
+
+def assume(condition):
+    if not condition:
+        raise _Unsatisfied()
+
+
+class _Unsatisfied(Exception):
+    pass
+
+
+def install() -> None:
+    """Register the shim as ``hypothesis`` / ``hypothesis.strategies``."""
+    if "hypothesis" in sys.modules:
+        return
+    mod = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "none", "sampled_from",
+                 "one_of", "lists", "tuples", "just"):
+        setattr(st, name, globals()[name])
+    mod.given = given
+    mod.settings = settings
+    mod.assume = assume
+    mod.strategies = st
+    mod.HealthCheck = types.SimpleNamespace(all=lambda: [])
+    mod.__is_repro_fallback__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st

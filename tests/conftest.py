@@ -5,6 +5,12 @@ import jax
 import numpy as np
 import pytest
 
+try:  # hypothesis is optional: fall back to a deterministic shim so the
+    import hypothesis  # noqa: F401 — suite collects and runs without it
+except ImportError:
+    from _hypothesis_fallback import install as _install_hypothesis_fallback
+    _install_hypothesis_fallback()
+
 jax.config.update("jax_enable_x64", False)
 
 

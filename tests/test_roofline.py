@@ -37,8 +37,10 @@ def test_unrolled_matches_xla():
 
     c = jax.jit(f).lower(x).compile()
     cost = analyze_hlo_text(c.as_text())
-    assert cost.flops == pytest.approx(float(c.cost_analysis()["flops"]),
-                                       rel=0.05)
+    ca = c.cost_analysis()
+    if isinstance(ca, list):  # older JAX wraps the dict in a list
+        ca = ca[0]
+    assert cost.flops == pytest.approx(float(ca["flops"]), rel=0.05)
 
 
 def test_collective_wire_factors():

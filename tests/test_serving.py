@@ -76,12 +76,12 @@ def _toy_runtime(dense_cfg):
 
 
 def test_engine_matches_direct_greedy_decode(dense_cfg):
-    """The batched engine must emit exactly the greedy continuation the raw
-    model produces for a single request."""
+    """The slot engine must emit exactly the greedy continuation the raw
+    model produces for a single request — in both serving modes."""
     params, rt = _toy_runtime(dense_cfg)
     prompt = np.arange(1, 8, dtype=np.int32)
     rt.submit(GenerationRequest(rid=0, tokens=prompt, max_new_tokens=5))
-    res = rt.step()[0]
+    res = rt.drain()[0]
 
     logits, cache = T.prefill(params, dense_cfg,
                               {"tokens": jnp.asarray(prompt[None])},
@@ -95,6 +95,11 @@ def test_engine_matches_direct_greedy_decode(dense_cfg):
         want.append(int(tok[0]))
     assert list(res.tokens) == want
 
+    plan = ParallelPlan(service="toy", category=LAT, bs=4)
+    rt_sync = ServiceRuntime(dense_cfg, params, plan, mode="sync")
+    rt_sync.submit(GenerationRequest(rid=0, tokens=prompt, max_new_tokens=5))
+    assert list(rt_sync.drain()[0].tokens) == want
+
 
 def test_engine_batches_multiple_requests(dense_cfg):
     _, rt = _toy_runtime(dense_cfg)
@@ -102,7 +107,7 @@ def test_engine_batches_multiple_requests(dense_cfg):
         rt.submit(GenerationRequest(rid=i, tokens=np.arange(2 + i,
                                                             dtype=np.int32),
                                     max_new_tokens=3))
-    res = rt.step()
+    res = rt.drain()
     assert sorted(r.rid for r in res) == [0, 1, 2]
     assert all(r.tokens.shape == (3,) for r in res)
 
