@@ -1,7 +1,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test smoke bench serve quickstart
+.PHONY: test smoke bench bench-paged serve quickstart
 
 test:                ## tier-1 suite
 	python -m pytest -x -q
@@ -11,6 +11,10 @@ smoke:               ## tiny-config benchmark pass (continuous batching)
 
 bench:               ## full benchmark suite (paper figures)
 	python -m benchmarks.run
+
+bench-paged:         ## paged KV arena vs dense merge vs sync data planes
+	REPRO_BENCH_SMOKE=$${REPRO_BENCH_SMOKE:-0} PYTHONHASHSEED=0 \
+	python -m benchmarks.continuous_batching
 
 serve:               ## end-to-end serving driver
 	python -m repro.launch.serve

@@ -65,10 +65,14 @@ def main():
                                 dtype=np.int64).astype(np.int32),
             max_new_tokens=4, stream=interaction))
         out = rt.drain(max_wait_s=0.0)[0]   # slot loop: step until evicted
+        arena = rt.groups[out.group].arena
         print(f"  interaction {interaction}: DP group {group}, "
               f"decode {list(out.tokens)} "
               f"({out.decode_s*1e3:.0f}ms decode, "
-              f"{out.decode_steps} steps)")
+              f"{out.decode_steps} steps, arena "
+              f"{arena.live}/{arena.capacity} slots after evict)")
+    print(f"  fused decode compiled {rt.decode_traces}x across all "
+          f"interactions (paged arena: one static shape)")
     print("done.")
 
 

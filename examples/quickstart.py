@@ -57,7 +57,7 @@ def main():
                 cfg, params, cp.plans[svc])
 
     rng = np.random.default_rng(0)
-    print("== serving (continuous-batching slot loop) ==")
+    print("== serving (continuous batching over the paged KV arena) ==")
     for i in range(6):
         svc = list(services)[i % 2]
         req = Request(rid=i, service=svc, arrival_s=0.0, deadline_s=10.0)
@@ -79,6 +79,14 @@ def main():
               f"tokens={list(res.tokens)} "
               f"({res.prefill_s*1e3:.0f}ms prefill, "
               f"{res.decode_steps} decode steps)")
+
+    # the arena data plane compiles one fused decode step per service and
+    # never copies the live batch on admission — visible in the counters
+    for sid, m in sorted(runtimes.items()):
+        for svc, rt in m.items():
+            print(f"  server{sid}/{svc}: {rt.decode_traces} decode "
+                  f"compile(s), {rt.whole_cache_copies} whole-cache "
+                  f"copies, {rt.admission_copy_bytes // 1024} KB admitted")
     print("done.")
 
 

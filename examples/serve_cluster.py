@@ -89,17 +89,29 @@ def main():
             rid=i, tokens=rng.integers(0, cfg.vocab_size, 8,
                                        dtype=np.int64).astype(np.int32),
             max_new_tokens=6, stream=i % 4, extras=extras))
+    # step every runtime to completion, feeding each round's queue-time
+    # estimate back into the handler's view (StepStats telemetry)
     results = []
-    for eng in engines.values():
-        results.extend(eng.drain())
+    for sid, eng in engines.items():
+        results.extend(eng.serve_until_idle(
+            on_stats=lambda svc, st, sid=sid:
+                cp.set_queue_time(sid, svc, st.queue_time_s)))
     dt = time.time() - t0
     toks = sum(len(r.tokens) for r in results)
     steps = sum(rt.decode_steps for eng in engines.values()
                 for rt in eng.runtimes.values())
+    traces = sum(rt.decode_traces for eng in engines.values()
+                 for rt in eng.runtimes.values())
+    copies = sum(rt.whole_cache_copies for eng in engines.values()
+                 for rt in eng.runtimes.values())
+    deployed = sum(len(eng.runtimes) for eng in engines.values())
     print(f"\nserved {len(results)}/{args.requests} requests "
           f"({toks} tokens, {steps} fused decode steps) in {dt:.1f}s — "
           f"handler outcomes: {outcomes}")
+    print(f"paged arena: {traces} decode compiles across {deployed} "
+          f"deployed runtimes, {copies} whole-cache admission copies")
     assert len(results) == args.requests
+    assert copies == 0          # arena admissions never copy the live batch
 
 
 if __name__ == "__main__":

@@ -206,6 +206,17 @@ class DPGroupRouter:
         self._next = (self._next + 1) % self.plan.dp
         return g
 
+    def release(self, session: int) -> None:
+        """Drop a session's group pin.  The serving engine calls this from
+        its eviction hook once no request of the session remains queued or
+        in flight — without it ``_sessions`` grows forever under a churn
+        of short-lived sessions (one entry per session ever seen)."""
+        self._sessions.pop(session, None)
+
+    def sessions(self) -> int:
+        """Live sticky-session pins (leak observability)."""
+        return len(self._sessions)
+
 
 # ---------------------------------------------------------------------------
 # mesh mapping: EPARA plan -> TPU mesh axes (first-class launcher input)

@@ -290,14 +290,18 @@ def _spf_lazy(problem: PlacementProblem, candidates: Sequence[Placement],
         heap.append((-state.gain(delta), i, delta))
     heapq.heapify(heap)
     while heap:
-        neg_gain, _, delta = heapq.heappop(heap)
+        neg_gain, order, delta = heapq.heappop(heap)
         if -neg_gain <= 0 and not (allow_equal and -neg_gain == 0):
             break
         if delta in theta or not state.feasible(delta):
             continue
         fresh = state.gain(delta)
         if heap and fresh < -heap[0][0] - 1e-12:
-            heapq.heappush(heap, (-fresh, id(delta), delta))
+            # keep the candidate's original index as the tiebreak: the old
+            # id(delta) key made equal-gain pops follow allocation
+            # addresses, so placements (and every downstream goodput
+            # figure) varied run to run
+            heapq.heappush(heap, (-fresh, order, delta))
             continue
         if fresh <= 0 and not (allow_equal and fresh == 0):
             break

@@ -1,4 +1,4 @@
-"""Pallas TPU flash-decode kernel: one new token vs a long KV cache.
+"""Pallas TPU flash-decode kernels: one new token vs a long KV cache.
 
 The decode hot loop is memory-bound (stream the whole cache once per token),
 so the kernel's job is to keep the cache stream dense: grid = (batch*q_heads,
@@ -9,6 +9,21 @@ broadcast across the sublane dimension.
 Valid-length masking comes from a per-batch ``cache_len`` operand (int32,
 one scalar per bh row) so ragged caches batch together; sliding windows
 mask to the trailing ``window`` positions.
+
+Two cache layouts are supported:
+
+* **dense** — contiguous ``(B, S, Hkv, D)`` caches
+  (``decode_attention_pallas``);
+* **paged** — the serving arena's block-pool layout: physical pages
+  ``(P, block_size, Hkv, D)`` plus a ``(B, blocks_per_slot)`` block table.
+  ``paged_decode_attention_pallas`` scalar-prefetches the block table so
+  each grid step's BlockSpec index map resolves logical block ``ki`` of
+  batch ``b`` to its physical page — K/V stream straight from the pool
+  with no gather materialization.  ``paged_gather_ref`` is the CPU/XLA
+  fallback (dense gather through the table, then the dense kernel math),
+  and is what the serving engine's fused step uses on every backend
+  today; wiring the Pallas kernel through the model families' decode
+  path is a ROADMAP follow-up.
 """
 from __future__ import annotations
 
@@ -126,5 +141,120 @@ def decode_attention_pallas(q, k_cache, v_cache, cache_len, *, window=None,
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(lens, qt, kt, vt)
+
+    return out[:, 0].reshape(B, Hq, D)
+
+
+# ---------------------------------------------------------------------------
+# paged layout: K/V read through a block table (serving arena fast path)
+# ---------------------------------------------------------------------------
+
+def paged_gather_ref(pages, block_tables):
+    """Dense-gather fallback: pages (P, bs, Hkv, D) + tables (B, nblk)
+    -> contiguous (B, nblk*bs, Hkv, D).  Unallocated table entries point
+    at the pool's trash block; callers mask them via ``cache_len``."""
+    B, nblk = block_tables.shape
+    _, bs, Hkv, D = pages.shape
+    g = pages[block_tables]                    # (B, nblk, bs, Hkv, D)
+    return g.reshape(B, nblk * bs, Hkv, D)
+
+
+def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *, scale: float,
+                         k_block: int, nk: int, q_heads: int):
+    bh = pl.program_id(0)
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    cache_len = len_ref[bh // q_heads]
+    k_lo = ki * k_block
+    # a logical block past cache_len maps to the trash page: skip it
+    @pl.when(k_lo < cache_len)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)           # (_SUB, D)
+        k = k_ref[0, 0].astype(jnp.float32)        # (k_block, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (_SUB, k_block), 1)
+        ok = kpos < cache_len
+        s = jnp.where(ok, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, :1]) * ok.astype(jnp.float32)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        m_ref[...] = m_new
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha[:, :1] + pv
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_ref[...][:, :1]
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l, 1e-37)).astype(o_ref.dtype)
+
+
+def paged_decode_attention_pallas(q, k_pages, v_pages, block_tables,
+                                  cache_len, *, softmax_scale=None,
+                                  interpret=False):
+    """q: (B, Hq, D); pages: (P, block_size, Hkv, D); block_tables:
+    (B, blocks_per_slot) int32; cache_len: (B,) int32.  Returns (B, Hq, D).
+
+    The block table rides in scalar-prefetch SMEM so the K/V BlockSpec
+    index maps dereference it — the kernel streams physical pages in
+    logical order without ever building the contiguous view.
+    """
+    B, Hq, D = q.shape
+    P, k_block, Hkv, _ = k_pages.shape
+    nk = block_tables.shape[1]
+    group = Hq // Hkv
+    scale = softmax_scale if softmax_scale is not None else D ** -0.5
+    cache_len = jnp.asarray(cache_len, jnp.int32)
+    if cache_len.ndim == 0:
+        cache_len = jnp.full((B,), cache_len, jnp.int32)
+    tables = jnp.asarray(block_tables, jnp.int32)
+
+    # per-kv-head page pools so one (head, physical block) pair is a tile
+    kp = k_pages.transpose(2, 0, 1, 3)             # (Hkv, P, bs, D)
+    vp = v_pages.transpose(2, 0, 1, 3)
+    qt = jnp.broadcast_to(q.reshape(B * Hq, 1, D), (B * Hq, _SUB, D))
+
+    def kv_index(bh, ki, bt_ref, len_ref):
+        b = bh // Hq
+        kvh = (bh % Hq) // group
+        return (kvh, bt_ref[b, ki], 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                     # block table + lens
+        grid=(B * Hq, nk),
+        in_specs=[
+            pl.BlockSpec((1, _SUB, D), lambda bh, ki, bt, ln: (bh, 0, 0)),
+            pl.BlockSpec((1, 1, k_block, D), kv_index),
+            pl.BlockSpec((1, 1, k_block, D), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, _SUB, D), lambda bh, ki, bt, ln:
+                               (bh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((_SUB, 128), jnp.float32),
+            pltpu.VMEM((_SUB, 128), jnp.float32),
+            pltpu.VMEM((_SUB, D), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_paged_decode_kernel, scale=scale,
+                               k_block=k_block, nk=nk, q_heads=Hq)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * Hq, _SUB, D), q.dtype),
+        compiler_params=compat.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(tables, cache_len, qt, kp, vp)
 
     return out[:, 0].reshape(B, Hq, D)

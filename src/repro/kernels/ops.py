@@ -18,7 +18,8 @@ from typing import Optional
 import jax.numpy as jnp
 
 from . import ref
-from .decode_attention import decode_attention_pallas
+from .decode_attention import (decode_attention_pallas, paged_gather_ref,
+                               paged_decode_attention_pallas)
 from .flash_attention import flash_attention_pallas
 from .moe_gemm import grouped_matmul_pallas
 from .ssd_scan import ssd_scan_pallas
@@ -98,6 +99,25 @@ def decode_attention(q, k_cache, v_cache, cache_len, *,
             softmax_scale=softmax_scale)
     return decode_attention_pallas(
         q, k_cache, v_cache, cache_len, window=window,
+        softmax_scale=softmax_scale, interpret=(impl == "pallas_interpret"))
+
+
+def paged_decode_attention(q, k_pages, v_pages, block_tables, cache_len, *,
+                           softmax_scale=None, impl: Optional[str] = None):
+    """Decode attention against the serving arena's paged KV layout.
+
+    ``"ref"`` gathers the pages densely through the block table and runs
+    the jnp oracle (the CPU fallback the slot engine uses); the Pallas
+    path streams K/V through the table via scalar prefetch.
+    """
+    impl = impl or default_impl()
+    if impl == "ref":
+        k = paged_gather_ref(k_pages, block_tables)
+        v = paged_gather_ref(v_pages, block_tables)
+        return ref.decode_attention_ref(q, k, v, cache_len,
+                                        softmax_scale=softmax_scale)
+    return paged_decode_attention_pallas(
+        q, k_pages, v_pages, block_tables, cache_len,
         softmax_scale=softmax_scale, interpret=(impl == "pallas_interpret"))
 
 

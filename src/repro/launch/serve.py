@@ -49,6 +49,14 @@ def main(argv=None) -> int:
                     default="continuous",
                     help="serving data plane: slot-based continuous "
                          "batching (default) or run-to-completion batches")
+    ap.add_argument("--kvcache-impl", choices=("paged", "dense"),
+                    default="paged",
+                    help="cache data plane: fixed-capacity paged KV arena "
+                         "(default; one decode compile, zero-copy "
+                         "admissions) or the legacy dense merge path")
+    ap.add_argument("--max-seq-len", type=int, default=256,
+                    help="per-slot token budget the paged arena is sized "
+                         "for (prompt + max_new_tokens)")
     args = ap.parse_args(argv)
 
     arch_ids = [a.strip() for a in args.archs.split(",")]
@@ -81,7 +89,9 @@ def main(argv=None) -> int:
         cfg = cfgs[svc]
         params = model_api(cfg).init(jax.random.PRNGKey(hash(svc) % 2**31),
                                      cfg)
-        rt = ServiceRuntime(cfg, params, cp.plans[svc], mode=args.mode)
+        rt = ServiceRuntime(cfg, params, cp.plans[svc], mode=args.mode,
+                            kvcache_impl=args.kvcache_impl,
+                            max_seq_len=args.max_seq_len)
         engines[sid].deploy(svc, rt)
 
     # drive requests through handler -> engine
@@ -113,16 +123,30 @@ def main(argv=None) -> int:
         engines[target].submit(svc, GenerationRequest(
             rid=i, tokens=prompt, max_new_tokens=args.max_new_tokens,
             stream=i, extras=extras))
+    # step every engine to completion, feeding each round's queue-time
+    # estimate back into the control plane (StepStats -> handler state, so
+    # offload decisions see live data-plane backpressure)
     results = []
     for sid, eng in engines.items():
-        results.extend(eng.drain())
+        results.extend(eng.serve_until_idle(
+            on_stats=lambda svc, st, sid=sid:
+                cp.set_queue_time(sid, svc, st.queue_time_s)))
     dt = time.time() - t0
     toks = sum(len(r.tokens) for r in results)
     steps = sum(rt.decode_steps for eng in engines.values()
                 for rt in eng.runtimes.values())
+    traces = sum(rt.decode_traces for eng in engines.values()
+                 for rt in eng.runtimes.values())
+    copies = sum(rt.whole_cache_copies for eng in engines.values()
+                 for rt in eng.runtimes.values())
+    copy_mb = sum(rt.admission_copy_bytes for eng in engines.values()
+                  for rt in eng.runtimes.values()) / 1e6
     print(f"served {len(results)}/{args.requests} requests, {toks} tokens "
           f"in {dt:.2f}s ({toks/dt:.1f} tok/s, {steps} fused decode steps, "
-          f"mode={args.mode})  outcomes={outcomes}")
+          f"mode={args.mode}, kvcache={args.kvcache_impl})  "
+          f"outcomes={outcomes}")
+    print(f"data plane: {traces} decode compiles, {copies} whole-cache "
+          f"admission copies, {copy_mb:.2f} MB admission-copy bytes")
     return 0 if len(results) == args.requests else 1
 
 

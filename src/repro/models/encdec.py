@@ -176,18 +176,14 @@ def decode_step(params, cfg: ModelConfig, token, cache, impl=None):
     B = token.shape[0]
     window = cfg.sliding_window
     new_len = cache["len"] + 1
-    pos = layers.sinusoidal_positions(1, cfg.d_model)  # position via sin table
-    # decode position = new_len - 1; compute its sinusoid directly
     x = layers.embed(params["embed"], cfg, token).astype(cfg.compute_dtype)
-    d = cfg.d_model
-    half = d // 2
-    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / (half - 1))
+    # decode position = new_len - 1, evaluated per slot: a shared scalar
+    # ``len`` broadcasts over B, a per-slot (B,) vector (the slot engine /
+    # paged arena case) gives every slot its own position row
     pos = jnp.asarray(new_len - 1, jnp.float32)
-    if pos.ndim == 0:            # shared scalar len broadcasts over B;
-        pos = pos[None]          # per-slot (B,) lens index their own row
-    ang = pos[:, None] * freqs[None]
-    posvec = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
-    x = x + posvec.astype(x.dtype)
+    if pos.ndim == 0:
+        pos = jnp.full((B,), pos)
+    x = x + layers.sinusoid_at(pos, cfg.d_model).astype(x.dtype)
 
     def body(carry, xs):
         x, k_all, v_all = carry

@@ -81,9 +81,16 @@ def rope(x, positions, theta: float):
 
 def sinusoidal_positions(length: int, d: int):
     """Whisper-style sinusoidal positional embedding table (length, d)."""
+    return sinusoid_at(jnp.arange(length), d)
+
+
+def sinusoid_at(pos, d: int):
+    """Sinusoidal embedding at arbitrary (possibly per-slot) positions:
+    pos (B,) -> (B, d).  The decode path uses this with each slot's own
+    ``len`` so requests at different depths share one fused step."""
     half = d // 2
     freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / (half - 1))
-    ang = jnp.arange(length)[:, None] * freqs[None]
+    ang = jnp.asarray(pos, jnp.float32)[:, None] * freqs[None]
     return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
 
 

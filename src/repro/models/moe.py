@@ -203,11 +203,17 @@ def prefill(params, cfg: ModelConfig, batch: Dict[str, Any], *,
 def _moe_mlp_single(p, cfg: ModelConfig, x_t, *, impl=None):
     """Decode-time MoE for a (B, d) token batch.
 
-    Routes the whole decode batch as ONE dispatch group (G=1, S=B) through
-    the same capacity machinery as prefill — never gathers expert weights
-    per token (that would stream B*k full expert FFNs from HBM)."""
-    y, _ = moe_mlp(p, cfg, x_t[None], impl=impl)
-    return y[0]
+    Routes each slot's token as its OWN dispatch group (B groups of S=1)
+    through the same capacity machinery as prefill — never gathers expert
+    weights per token (that would stream B*k full expert FFNs from HBM),
+    and the grouped matmuls still see one fused (E, B*C, d) stack.
+    Per-slot grouping matters for the serving engine: a shared group would
+    make tokens compete for expert capacity across requests, so a slot's
+    output would depend on its batch neighbours (and, under the paged
+    arena's fixed-capacity batch, on unoccupied slots' garbage rows) —
+    per-token groups keep every decode row numerically independent."""
+    y, _ = moe_mlp(p, cfg, x_t[:, None], impl=impl)
+    return y[:, 0]
 
 
 def decode_step(params, cfg: ModelConfig, token, cache, impl=None):

@@ -1,0 +1,371 @@
+"""Paged KV arena: fixed-capacity, block-table cache store for the slot
+engine.
+
+The dense cache path (``kvcache.merge`` / ``select_slots``) re-materializes
+the whole live batch on every admission and changes the cache's batch axis
+whenever the live count changes — so each admission copies O(live cache)
+bytes and each batch-size change retraces the fused decode step under XLA.
+``KVArena`` replaces that with an allocator-shaped API sized once from the
+``ParallelPlan``:
+
+* the **token axis is paged**: every unbounded KV sequence axis is stored
+  as physical blocks of ``block_size`` tokens in a shared pool, and each
+  slot owns a row of a ``(capacity, blocks_per_slot)`` **block table**
+  mapping logical block -> physical block (a reserved trash block absorbs
+  writes from unoccupied slots, so the fused step needs no branches);
+* **admission writes pages in place** (``alloc`` + ``write_prefill``
+  scatter exactly the new request's pages and per-slot state — the live
+  batch is never touched);
+* **eviction is a free-list operation** (``free`` returns the slot's
+  blocks; no device work at all);
+* the decode step always runs at the full static shape ``(capacity, ...)``
+  with an occupancy mask, so it compiles exactly once per service.
+
+Cache pytrees keep the shape convention documented in ``kvcache``:
+``ndim >= 2`` leaves are ``(layers, batch, ...)`` batched state, small
+integer leaves are sequence lengths.  The arena classifies each leaf ONCE
+at construction by probing ``init_cache`` at two ``max_len`` values
+(``jax.eval_shape`` — no allocation): axes that grow with ``max_len`` are
+sequence axes and get paged; everything else (SSM/conv state, encoder
+cross-KV, saturated sliding-window rings) is fixed-size per-slot state
+held at ``(layers, capacity, ...)``.  This makes the arena family-agnostic
+across all six model families.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Cache = Any  # pytree of arrays
+
+_LEN, _PAGED, _STATE = "len", "paged", "state"
+
+
+def _is_len_leaf(shape: Tuple[int, ...], dtype) -> bool:
+    return len(shape) <= 1 and jnp.issubdtype(dtype, jnp.integer)
+
+
+class KVArena:
+    """Fixed-capacity paged cache arena for one DP replica group.
+
+    Host-side bookkeeping (free lists, block tables, occupancy) is plain
+    numpy; device state is three pytrees of fixed-shape arrays — ``pages``
+    (block pools for sequence leaves), ``state`` (per-slot fixed-size
+    leaves) and ``lens`` (``(capacity,)`` int32) — threaded functionally
+    through the jitted decode step via the pure helpers below.
+    """
+
+    def __init__(self, cfg, init_cache: Callable, *, capacity: int,
+                 max_seq_len: int, block_size: int = 32,
+                 pool_blocks: Optional[int] = None, dtype=None):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.cfg = cfg
+        self.capacity = int(capacity)
+        self.block_size = int(block_size)
+        self.blocks_per_slot = max(1, math.ceil(max_seq_len / block_size))
+        self.slot_tokens = self.blocks_per_slot * self.block_size  # S_max
+        self.pool_blocks = (self.capacity * self.blocks_per_slot
+                            if pool_blocks is None else int(pool_blocks))
+        if self.pool_blocks < self.blocks_per_slot:
+            raise ValueError("pool smaller than one slot's block budget")
+        self.trash_block = self.pool_blocks       # reserved garbage block
+
+        # -- classify the family's cache layout by probing init_cache ----
+        probe = lambda s: jax.eval_shape(
+            lambda: init_cache(cfg, 1, s, dtype) if dtype is not None
+            else init_cache(cfg, 1, s))
+        lo, hi = probe(self.slot_tokens), probe(self.slot_tokens
+                                               + self.block_size)
+        lo_leaves, self._treedef = jax.tree.flatten(lo)
+        hi_leaves = jax.tree.leaves(hi)
+        self._tags: List[str] = []
+        self._paged_shapes: List[Tuple[int, ...]] = []
+        self._state_shapes: List[Tuple[int, ...]] = []
+        self._dtypes: List[Any] = []
+        for a, b in zip(lo_leaves, hi_leaves):
+            self._dtypes.append(a.dtype)
+            if _is_len_leaf(a.shape, a.dtype):
+                self._tags.append(_LEN)
+                continue
+            grown = [d for d in range(a.ndim) if a.shape[d] != b.shape[d]]
+            if not grown:
+                if a.ndim < 2 or a.shape[1] != 1:
+                    raise ValueError(
+                        f"state leaf {a.shape} lacks a batch axis at 1")
+                self._tags.append(_STATE)
+                self._state_shapes.append(a.shape)
+            else:
+                if grown != [2] or a.ndim < 3 or a.shape[1] != 1:
+                    raise ValueError(
+                        f"paged leaf must grow only along axis 2 "
+                        f"(layers, batch, seq, ...); got {a.shape} vs "
+                        f"{b.shape}")
+                if a.shape[2] != self.slot_tokens:
+                    raise ValueError(
+                        f"seq axis {a.shape[2]} != arena slot_tokens "
+                        f"{self.slot_tokens}")
+                self._tags.append(_PAGED)
+                self._paged_shapes.append(a.shape)
+
+        # -- device state --------------------------------------------------
+        P1 = self.pool_blocks + 1                 # +1 trash block
+        self.pages: List[jnp.ndarray] = []
+        self.state: List[jnp.ndarray] = []
+        for i, tag in enumerate(self._tags):
+            if tag == _PAGED:
+                A0, _, _, *rest = lo_leaves[i].shape
+                self.pages.append(jnp.zeros(
+                    (A0, P1, self.block_size, *rest), self._dtypes[i]))
+            elif tag == _STATE:
+                A0, _, *rest = lo_leaves[i].shape
+                self.state.append(jnp.zeros((A0, self.capacity, *rest),
+                                            self._dtypes[i]))
+        self.lens = jnp.zeros((self.capacity,), jnp.int32)
+
+        # -- host bookkeeping ----------------------------------------------
+        self._block_tables = np.full(
+            (self.capacity, self.blocks_per_slot), self.trash_block,
+            np.int32)
+        self._free_slots: List[int] = list(range(self.capacity))
+        self._free_blocks: List[int] = list(range(self.pool_blocks))
+        self._slot_blocks = {}
+        self._occ = np.zeros((self.capacity,), bool)
+        self._write_fns: Dict[int, Callable] = {}
+        self._tables_dev: Optional[jnp.ndarray] = None
+        self._occ_dev: Optional[jnp.ndarray] = None
+
+        # bytes one cache token occupies across all paged leaves, and the
+        # fixed per-slot state footprint (allocator-style accounting)
+        self.token_bytes = sum(
+            int(np.prod([s[0], *s[3:]])) * np.dtype(d).itemsize
+            for s, d in zip(self._paged_shapes,
+                            (self._dtypes[i] for i, t in
+                             enumerate(self._tags) if t == _PAGED)))
+        self.state_slot_bytes = sum(
+            int(np.prod([s[0], *s[2:]])) * np.dtype(d).itemsize
+            for s, d in zip(self._state_shapes,
+                            (self._dtypes[i] for i, t in
+                             enumerate(self._tags) if t == _STATE)))
+
+    # ------------------------------------------------------------------
+    # allocator surface
+    # ------------------------------------------------------------------
+    def blocks_for(self, total_tokens: int) -> int:
+        return max(1, math.ceil(total_tokens / self.block_size))
+
+    def can_alloc(self, total_tokens: int) -> bool:
+        return (bool(self._free_slots)
+                and self.blocks_for(total_tokens) <= len(self._free_blocks)
+                and total_tokens <= self.slot_tokens)
+
+    def alloc(self, total_tokens: int, slot: Optional[int] = None) -> int:
+        """Claim a slot and its token blocks for a request whose lifetime
+        needs ``total_tokens`` (prompt + generation budget)."""
+        if total_tokens > self.slot_tokens:
+            raise ValueError(
+                f"request needs {total_tokens} tokens > arena slot budget "
+                f"{self.slot_tokens} (raise max_seq_len)")
+        n = self.blocks_for(total_tokens)
+        if n > len(self._free_blocks):
+            raise RuntimeError("arena out of blocks")
+        if slot is None:
+            if not self._free_slots:
+                raise RuntimeError("arena out of slots")
+            slot = self._free_slots.pop(0)
+        else:
+            self._free_slots.remove(slot)
+        blocks = [self._free_blocks.pop(0) for _ in range(n)]
+        self._slot_blocks[slot] = blocks
+        row = np.full((self.blocks_per_slot,), self.trash_block, np.int32)
+        row[:n] = blocks
+        self._block_tables[slot] = row
+        self._occ[slot] = True
+        self._tables_dev = self._occ_dev = None
+        return slot
+
+    def free(self, slot: int) -> None:
+        """Release a slot: pure free-list bookkeeping, zero device work."""
+        if not self._occ[slot]:
+            return
+        self._free_blocks.extend(self._slot_blocks.pop(slot))
+        self._block_tables[slot] = self.trash_block
+        self._occ[slot] = False
+        self._free_slots.append(slot)
+        self._tables_dev = self._occ_dev = None
+
+    def block_tables(self) -> np.ndarray:
+        """(capacity, blocks_per_slot) logical->physical block map."""
+        return self._block_tables.copy()
+
+    def occupancy(self) -> np.ndarray:
+        return self._occ.copy()
+
+    def device_block_tables(self) -> jnp.ndarray:
+        """Device-resident block table, re-uploaded only after an alloc or
+        free — steady-state decode steps pay no host copy or transfer."""
+        if self._tables_dev is None:
+            self._tables_dev = jnp.asarray(self._block_tables)
+        return self._tables_dev
+
+    def device_occupancy(self) -> jnp.ndarray:
+        if self._occ_dev is None:
+            self._occ_dev = jnp.asarray(self._occ)
+        return self._occ_dev
+
+    @property
+    def live(self) -> int:
+        return int(self._occ.sum())
+
+    def slot_bytes(self, prompt_len: int) -> int:
+        """Bytes an admission actually writes: the prompt's pages (block-
+        granular — whole blocks are the scatter unit) plus the slot's
+        fixed state — NOT the live batch (which is never copied)."""
+        blocks = self.blocks_for(max(1, prompt_len))
+        return (blocks * self.block_size * self.token_bytes
+                + self.state_slot_bytes)
+
+    # ------------------------------------------------------------------
+    # admission write path
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _donate_argnums(nums: Tuple[int, ...]) -> Tuple[int, ...]:
+        """Donate the arena's device buffers so XLA updates pages/state in
+        place instead of re-materializing the pool every call (CPU has no
+        donation support, so skip it there to avoid per-compile warnings)."""
+        return nums if jax.default_backend() != "cpu" else ()
+
+    def write_prefill(self, slot: int, cache: Cache,
+                      prompt_len: int) -> int:
+        """Scatter one freshly prefilled single-request cache (batch 1,
+        seq padded to ``slot_tokens``) into the slot's pages and state row.
+        Only the blocks the prompt occupies are written — positions past
+        the prompt are garbage until ``append_rows`` reaches them, and the
+        per-slot ``len`` masks them everywhere.  Returns the bytes written
+        (admission-copy accounting); one compile per distinct block count.
+        """
+        n_blocks = self.blocks_for(max(1, prompt_len))
+        fn = self._write_fns.get(n_blocks)
+        if fn is None:
+            fn = jax.jit(functools.partial(self._write_prefill_impl,
+                                           n_blocks=n_blocks),
+                         donate_argnums=self._donate_argnums((0, 1, 2)))
+            self._write_fns[n_blocks] = fn
+        self.pages, self.state, self.lens = fn(
+            self.pages, self.state, self.lens, cache,
+            jnp.asarray(slot, jnp.int32),
+            jnp.asarray(self._block_tables[slot][:n_blocks], jnp.int32),
+            jnp.asarray(prompt_len, jnp.int32))
+        return self.slot_bytes(prompt_len)
+
+    def _write_prefill_impl(self, pages, state, lens, cache, slot, bt_row,
+                            plen, *, n_blocks):
+        leaves = jax.tree.leaves(cache)
+        new_pages, new_state = list(pages), list(state)
+        pi = si = 0
+        cache_len = None
+        for leaf, tag in zip(leaves, self._tags):
+            if tag == _LEN and cache_len is None:
+                # trust the model's own emitted length (e.g. VLM prefills
+                # count their image prefix on top of the text prompt)
+                cache_len = jnp.asarray(leaf, jnp.int32).reshape(-1)[0]
+            if tag == _PAGED:
+                A0, _, S, *rest = leaf.shape
+                blocks = leaf[:, 0, :n_blocks * self.block_size].reshape(
+                    A0, n_blocks, self.block_size, *rest)
+                new_pages[pi] = pages[pi].at[:, bt_row].set(
+                    blocks.astype(pages[pi].dtype))
+                pi += 1
+            elif tag == _STATE:
+                new_state[si] = state[si].at[:, slot].set(
+                    leaf[:, 0].astype(state[si].dtype))
+                si += 1
+        if cache_len is None:
+            cache_len = plen
+        return new_pages, new_state, lens.at[slot].set(cache_len)
+
+    # ------------------------------------------------------------------
+    # pure helpers for the fused decode step (jit-safe, no host state)
+    # ------------------------------------------------------------------
+    def dense_view(self, pages: Sequence[jnp.ndarray],
+                   block_tables: jnp.ndarray) -> List[jnp.ndarray]:
+        """Gather each page pool through the block table into a contiguous
+        ``(layers, capacity, slot_tokens, ...)`` view — the dense-gather
+        path the engine currently uses on every backend.  The scalar-
+        prefetch Pallas kernel that reads K/V through the block table
+        WITHOUT materializing this view exists and is validated
+        (``kernels.decode_attention.paged_decode_attention_pallas``);
+        threading it through the families' decode steps is the ROADMAP
+        follow-up that makes this gather CPU-only."""
+        out = []
+        for p in pages:
+            A0, _, bs, *rest = p.shape
+            g = p[:, block_tables]        # (A0, cap, nblk, bs, *rest)
+            out.append(g.reshape(A0, self.capacity, self.slot_tokens,
+                                 *rest))
+        return out
+
+    def assemble(self, dense: Sequence[jnp.ndarray],
+                 state: Sequence[jnp.ndarray],
+                 lens: jnp.ndarray) -> Cache:
+        """Rebuild the family's cache pytree (per-slot lens everywhere)."""
+        leaves, di, si = [], iter(dense), iter(state)
+        for tag, dt in zip(self._tags, self._dtypes):
+            if tag == _LEN:
+                leaves.append(lens.astype(dt))
+            elif tag == _PAGED:
+                leaves.append(next(di))
+            else:
+                leaves.append(next(si))
+        return jax.tree.unflatten(self._treedef, leaves)
+
+    def disassemble(self, cache: Cache) -> Tuple[List[jnp.ndarray],
+                                                 List[jnp.ndarray]]:
+        dense, state = [], []
+        for leaf, tag in zip(jax.tree.leaves(cache), self._tags):
+            if tag == _PAGED:
+                dense.append(leaf)
+            elif tag == _STATE:
+                state.append(leaf)
+        return dense, state
+
+    def append_rows(self, pages: Sequence[jnp.ndarray],
+                    dense_new: Sequence[jnp.ndarray], lens: jnp.ndarray,
+                    live: jnp.ndarray,
+                    block_tables: jnp.ndarray) -> List[jnp.ndarray]:
+        """``arena.append``: write each live slot's newly produced cache
+        token back to its physical page (one row per slot, in place).
+        Dead/unoccupied slots route to the trash block, so the scatter is
+        branch-free and shape-stable."""
+        cap, bs = self.capacity, self.block_size
+        pos = jnp.clip(lens, 0, self.slot_tokens - 1)
+        blk = jnp.take_along_axis(block_tables, (pos // bs)[:, None],
+                                  axis=1)[:, 0]
+        flat = blk * bs + pos % bs
+        flat = jnp.where(live, flat, self.trash_block * bs)
+        out = []
+        for p, d in zip(pages, dense_new):
+            A0, P1, _, *rest = p.shape
+            idx = pos.reshape(1, cap, 1, *([1] * len(rest)))
+            row = jnp.take_along_axis(d, idx, axis=2)[:, :, 0]
+            pf = p.reshape(A0, P1 * bs, *rest)
+            pf = pf.at[:, flat].set(row.astype(p.dtype))
+            out.append(pf.reshape(p.shape))
+        return out
+
+    def merge_state(self, state: Sequence[jnp.ndarray],
+                    state_new: Sequence[jnp.ndarray],
+                    live: jnp.ndarray) -> List[jnp.ndarray]:
+        """Commit updated per-slot state only for live slots (dead slots
+        must not absorb the masked step's garbage)."""
+        out = []
+        for old, new in zip(state, state_new):
+            mask = live.reshape(1, self.capacity,
+                                *([1] * (old.ndim - 2)))
+            out.append(jnp.where(mask, new.astype(old.dtype), old))
+        return out

@@ -6,17 +6,22 @@
   homogeneous streams, filling the batch even when single streams are
   bursty/uneven — the request-level trick that lifts GPU utilization.
 
-Both composers are **capacity-aware**: ``compose(limit=k)`` fills at most
-``k`` items so the continuous-batching engine can top up only the decode
-slots that are actually free, instead of composing a full ``bs`` batch
-behind a barrier.  ``push_front`` returns an item to the head of its queue
-(used when sticky DP routing finds the session's replica group full).
+Both composers implement the single ``Composer`` protocol: ``add`` /
+``push_front`` / ``__len__`` / ``compose(*, limit, now, max_wait_s)``.
+``compose`` is **capacity-aware** (``limit=k`` fills at most ``k`` items so
+the continuous-batching engine can top up only the decode slots that are
+actually free, instead of composing a full ``bs`` batch behind a barrier)
+and takes the clock uniformly — BS simply ignores ``now``/``max_wait_s``,
+so the engine and the simulator never special-case the composer family.
+``push_front`` returns an item to the head of its queue (used when sticky
+DP routing finds the session's replica group full).
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Any, Deque, Dict, List, Optional, Tuple
+from typing import (Any, Deque, Dict, List, Optional, Protocol, Tuple,
+                    runtime_checkable)
 
 from repro.core.allocator import ParallelPlan
 
@@ -42,6 +47,23 @@ class ComposedBatch:
         return len(self.items)
 
 
+@runtime_checkable
+class Composer(Protocol):
+    """What the slot engine requires of a batch composer.  One signature
+    for every family: BS ignores the clock arguments, MF uses them for
+    its overdue partial-flush semantics."""
+
+    def add(self, item: QueuedItem) -> None: ...
+
+    def push_front(self, item: QueuedItem) -> None: ...
+
+    def __len__(self) -> int: ...
+
+    def compose(self, *, limit: Optional[int] = None, now: float = 0.0,
+                max_wait_s: float = float("inf")
+                ) -> Optional[ComposedBatch]: ...
+
+
 def _frame_counts(items: List[QueuedItem]) -> Dict[int, int]:
     counts: Dict[int, int] = {}
     for it in items:
@@ -65,8 +87,9 @@ class BSComposer:
     def __len__(self) -> int:
         return len(self.queue)
 
-    def compose(self, *, limit: Optional[int] = None,
-                **_kw) -> Optional[ComposedBatch]:
+    def compose(self, *, limit: Optional[int] = None, now: float = 0.0,
+                max_wait_s: float = float("inf")
+                ) -> Optional[ComposedBatch]:
         cap = self.plan.bs if limit is None else min(self.plan.bs, limit)
         if not self.queue or cap <= 0:
             return None
@@ -101,9 +124,9 @@ class MFComposer:
     def __len__(self) -> int:
         return sum(len(q) for q in self.streams.values())
 
-    def compose(self, *, now: float = 0.0,
-                max_wait_s: float = float("inf"),
-                limit: Optional[int] = None) -> Optional[ComposedBatch]:
+    def compose(self, *, limit: Optional[int] = None, now: float = 0.0,
+                max_wait_s: float = float("inf")
+                ) -> Optional[ComposedBatch]:
         mf = max(1, self.plan.mf)
         irc = self.plan.inter_request_count
         cap = self.plan.bs if limit is None else min(self.plan.bs, limit)
@@ -144,7 +167,7 @@ class MFComposer:
                              frames_per_stream=counts)
 
 
-def make_composer(plan: ParallelPlan):
+def make_composer(plan: ParallelPlan) -> Composer:
     from repro.core.categories import Sensitivity
     if plan.category.sensitivity == Sensitivity.FREQUENCY and plan.mf > 1:
         return MFComposer(plan)

@@ -5,28 +5,40 @@ driven by an EPARA ParallelPlan.
 The default ``mode="continuous"`` keeps a persistent in-flight batch of
 decode slots per group; each ``step()``:
 
-  (a) **evicts** slots whose request hit EOS or its own ``max_new_tokens``
-      (``kvcache.select_slots`` compacts the cache batch axis),
+  (a) **evicts** slots whose request hit EOS or its own ``max_new_tokens``,
   (b) **admits** queued requests from the BS/MF composer into the freed
       slots (``compose(limit=free)``), prefilling each admission on its
-      own — no cross-request padding — and merging the fresh cache into
-      the live batch with ``kvcache.merge``,
+      own — no cross-request padding,
   (c) runs **one fused decode step** for every occupied slot, with
       per-slot ``len`` vectors (the decode kernels mask per-batch
-      ``cache_len``) and masked sampling for slots that finished at
-      admission time.
+      ``cache_len``) and sampling masked by occupancy.
 
-Requests therefore decode exactly as long as they individually need, new
-arrivals join mid-decode without waiting for a batch to drain, and every
-result carries its own prefill time and admit→finish wall time.  The
-pre-slot run-to-completion path is preserved behind ``mode="sync"`` so the
-two can be compared (see benchmarks/continuous_batching.py); both modes
-produce identical greedy tokens for identically padded prompts.
+Two cache data planes back the slot loop (``kvcache_impl``):
+
+* ``"paged"`` (default) — a fixed-capacity ``KVArena`` per group, sized
+  from the plan (``plan.max_in_flight`` slots x paged token blocks).
+  Admission scatters only the new request's pages into the arena
+  (``arena.alloc`` + ``arena.write_prefill``), eviction is a free-list
+  operation, and decode always runs at the full static ``(capacity, ...)``
+  shape with an occupancy mask — so the fused step compiles EXACTLY ONCE
+  per service no matter how the live batch size churns, and no admission
+  ever copies the live batch.
+* ``"dense"`` — the pre-arena pytree path (``kvcache.select_slots`` /
+  ``merge``), temporarily retained for comparison: every admission
+  re-materializes the whole live cache and every live-batch-size change
+  retraces the decode step.  ``benchmarks/continuous_batching.py`` reports
+  both implementations' retrace counts and admission-copy bytes.
+
+``step()`` returns a ``StepStats`` telemetry record (results + queue-time
+estimate + copy/retrace counters); the launcher feeds
+``StepStats.queue_time_s`` back into the control plane's handler state
+(``EdgeCloudControlPlane.set_queue_time``) so offload decisions see real
+data-plane backpressure.  The pre-slot run-to-completion path is preserved
+behind ``mode="sync"``; all paths produce identical greedy tokens.
 
 Request-level DP round-robins admissions across groups (sticky for
-stateful archs).  The same engine object backs the CPU examples (reduced
-configs) and, via pjit'd step functions passed in by the launcher, the
-mesh deployment.
+stateful archs); sticky session pins are released through the engine's
+eviction hook once a session has no queued or in-flight requests left.
 """
 from __future__ import annotations
 
@@ -43,8 +55,12 @@ from repro.models.config import ModelConfig
 from repro.models.registry import ModelApi, model_api
 
 from . import kvcache
-from .batching import ComposedBatch, MFComposer, QueuedItem, make_composer
+from .arena import KVArena
+from .batching import ComposedBatch, QueuedItem, make_composer
 from .sampler import SamplerConfig, sample
+
+DEFAULT_MAX_SEQ_LEN = 256
+DEFAULT_BLOCK_SIZE = 32
 
 
 @dataclasses.dataclass
@@ -70,13 +86,39 @@ class GenerationResult:
     decode_steps: int = 0            # fused steps this request took part in
 
 
+@dataclasses.dataclass
+class StepStats:
+    """One scheduling round's telemetry.  ``results`` carries the finished
+    requests (what ``drain`` accumulates); the rest is the feedback the
+    control plane's handler consumes (queue-time backpressure) and the
+    data-plane efficiency counters the benchmarks report."""
+    results: List[GenerationResult]
+    now: float = 0.0
+    admitted: int = 0                # requests admitted this step
+    evicted: int = 0                 # slots released this step
+    in_flight: int = 0               # occupied slots after the step
+    pending: int = 0                 # queued requests after the step
+    queue_time_s: float = 0.0        # est. wait for a new arrival (handler)
+    admission_copy_bytes: int = 0    # cache bytes copied by slot churn this
+    #                                  step (admission merges + the dense
+    #                                  impl's eviction compaction)
+    whole_cache_copies: int = 0      # live-batch copies this step (dense
+    #                                  merge or select_slots compaction)
+    decode_steps: int = 0            # fused decode invocations this step
+
+
 class _Slot:
-    """One in-flight request occupying a decode slot."""
+    """One in-flight request occupying a decode slot.  Under the paged
+    arena, ``slot_id`` is the request's arena slot handle (its row in the
+    block table); under the dense impl it is the position in the group's
+    compacted cache batch axis."""
     __slots__ = ("req", "emitted", "done", "prefill_s", "admit_wall",
-                 "decode_start_wall", "finish_wall", "admitted_s", "steps")
+                 "decode_start_wall", "finish_wall", "admitted_s", "steps",
+                 "slot_id")
 
     def __init__(self, req: GenerationRequest, first_token: int,
-                 prefill_s: float, admit_wall: float, admitted_s: float):
+                 prefill_s: float, admit_wall: float, admitted_s: float,
+                 slot_id: int = -1):
         self.req = req
         self.emitted: List[int] = [first_token]
         self.prefill_s = prefill_s
@@ -85,6 +127,7 @@ class _Slot:
         self.finish_wall = 0.0
         self.admitted_s = admitted_s
         self.steps = 0
+        self.slot_id = slot_id
         self.done = (len(self.emitted) >= req.max_new_tokens
                      or (req.eos_token is not None
                          and first_token == req.eos_token))
@@ -101,11 +144,14 @@ class _Slot:
 
 
 class _GroupState:
-    """Persistent in-flight batch of one DP replica group."""
-    __slots__ = ("cache", "slots")
+    """Persistent in-flight state of one DP replica group: the slot
+    handles plus either a ``KVArena`` (paged) or a compacted cache pytree
+    (dense)."""
+    __slots__ = ("cache", "slots", "arena")
 
     def __init__(self):
-        self.cache = None
+        self.cache = None            # dense impl only
+        self.arena: Optional[KVArena] = None
         self.slots: List[_Slot] = []
 
     @property
@@ -120,13 +166,26 @@ class ServiceRuntime:
                  prefill_fn: Optional[Callable] = None,
                  decode_fn: Optional[Callable] = None,
                  sampler: SamplerConfig = SamplerConfig(), seed: int = 0,
-                 impl: Optional[str] = None, mode: str = "continuous"):
+                 impl: Optional[str] = None, mode: str = "continuous",
+                 kvcache_impl: str = "paged",
+                 max_seq_len: int = DEFAULT_MAX_SEQ_LEN,
+                 block_size: int = DEFAULT_BLOCK_SIZE,
+                 pool_blocks: Optional[int] = None,
+                 on_evict: Optional[Callable] = None):
         if mode not in ("continuous", "sync"):
             raise ValueError(f"mode must be continuous|sync, got {mode!r}")
+        if kvcache_impl not in ("paged", "dense"):
+            raise ValueError(
+                f"kvcache_impl must be paged|dense, got {kvcache_impl!r}")
         self.cfg = cfg
         self.params = params
         self.plan = plan
         self.mode = mode
+        self.kvcache_impl = kvcache_impl
+        self.max_seq_len = max_seq_len
+        self.block_size = block_size
+        self.pool_blocks = pool_blocks
+        self.on_evict = on_evict
         self.api: ModelApi = model_api(cfg)
         self.router = DPGroupRouter(plan)
         self.composer = make_composer(plan)
@@ -135,21 +194,53 @@ class ServiceRuntime:
         self.groups: Dict[int, _GroupState] = {
             g: _GroupState() for g in range(max(1, plan.dp))}
         self.decode_steps = 0        # fused decode invocations (all groups)
+        self.decode_traces = 0       # XLA (re)compilations of the fused step
+        self.prefill_traces = 0
+        self.admission_copy_bytes = 0
+        self.whole_cache_copies = 0  # admissions that copied the live batch
+        self._session_refs: Dict[int, int] = {}
+        self._service_ewma_s = 0.0   # EWMA of per-request service time
+        self._paged_decode_fn = None
         api = self.api
 
         if prefill_fn is None:
-            prefill_fn = jax.jit(
-                lambda p, b, cs: api.prefill(p, cfg, b, cache_size=cs,
-                                             impl=impl),
-                static_argnums=(2,))
+            def _prefill(p, b, cs):
+                self.prefill_traces += 1    # runs at trace time only
+                return api.prefill(p, cfg, b, cache_size=cs, impl=impl)
+            prefill_fn = jax.jit(_prefill, static_argnums=(2,))
         if decode_fn is None:
-            decode_fn = jax.jit(
-                lambda p, t, c: api.decode_step(p, cfg, t, c, impl=impl))
+            def _decode(p, t, c):
+                self.decode_traces += 1     # runs at trace time only
+                return api.decode_step(p, cfg, t, c, impl=impl)
+            decode_fn = jax.jit(_decode)
         self.prefill_fn = prefill_fn
         self.decode_fn = decode_fn
+        self._impl = impl
+
+    @property
+    def slot_token_budget(self) -> int:
+        """Cache tokens one arena slot can hold (block-rounded
+        ``max_seq_len``); a request's prompt + family extras + max_new
+        must fit."""
+        blocks = max(1, -(-self.max_seq_len // self.block_size))
+        return blocks * self.block_size
 
     # -- queue ------------------------------------------------------------
     def submit(self, req: GenerationRequest, now: float = 0.0) -> None:
+        if self.kvcache_impl == "paged" and self.mode == "continuous":
+            # reject over-budget requests at the door: raising later, mid-
+            # admission, would drop the composed batch's other members and
+            # leak their session pins
+            total = (len(req.tokens) + self._extra_cache_tokens()
+                     + req.max_new_tokens)
+            if total > self.slot_token_budget:
+                raise ValueError(
+                    f"request {req.rid} needs {total} cache tokens > "
+                    f"per-slot budget {self.slot_token_budget}; raise "
+                    f"max_seq_len")
+        if self.plan.sticky and req.stream:
+            self._session_refs[req.stream] = \
+                self._session_refs.get(req.stream, 0) + 1
         self.composer.add(QueuedItem(payload=req, stream=req.stream,
                                      enqueued_s=now, rid=req.rid))
 
@@ -158,6 +249,9 @@ class ServiceRuntime:
 
     def in_flight(self) -> int:
         return sum(g.live for g in self.groups.values())
+
+    def total_slots(self) -> int:
+        return self.plan.max_in_flight * len(self.groups)
 
     # -- shared helpers ---------------------------------------------------
     def _pad_prompts(self, reqs: Sequence[GenerationRequest]):
@@ -176,9 +270,44 @@ class ServiceRuntime:
             batch["embeddings"] = jnp.asarray(np.stack(embs))
         return batch
 
-    def _sample(self, logits, live=None):
+    def _extra_cache_tokens(self) -> int:
+        """Cache positions a request consumes beyond its text prompt: the
+        VLM family's image prefix rides along in the decoder cache (its
+        ``prefill`` budgets ``cache_size`` in TEXT tokens and adds the
+        prefix itself)."""
+        return self.cfg.prefix_len if self.cfg.family == "vlm" else 0
+
+    def _sample(self, logits, live=None, occupancy=None):
         self._key, sub = jax.random.split(self._key)
-        return sample(logits, sub, self.sampler, live=live)
+        return sample(logits, sub, self.sampler, live=live,
+                      occupancy=occupancy)
+
+    def _finish_request(self, req: GenerationRequest, group: int) -> None:
+        """Session-pin bookkeeping + user hook, fired whenever a request
+        leaves the data plane (slot eviction or sync-batch completion)."""
+        if self.plan.sticky and req.stream:
+            left = self._session_refs.get(req.stream, 1) - 1
+            if left <= 0:
+                self._session_refs.pop(req.stream, None)
+                self.router.release(req.stream)
+            else:
+                self._session_refs[req.stream] = left
+        if self.on_evict is not None:
+            self.on_evict(req, group)
+
+    def _note_service_time(self, res: GenerationResult) -> None:
+        t = max(1e-6, res.prefill_s + max(0.0, res.decode_s))
+        self._service_ewma_s = (t if self._service_ewma_s == 0.0
+                                else 0.8 * self._service_ewma_s + 0.2 * t)
+
+    def queue_time_estimate(self) -> float:
+        """Expected wait before a newly queued request starts decoding —
+        the handler's queue-time feedback signal (Eq. 1 exclusion uses
+        it to skip backlogged peers)."""
+        if self._service_ewma_s <= 0.0:
+            return 0.0
+        waves = self.pending() / max(1, self.total_slots())
+        return waves * self._service_ewma_s
 
     # ------------------------------------------------------------------
     # continuous mode: slot admit / fused decode / evict
@@ -189,8 +318,9 @@ class ServiceRuntime:
 
     def _evict(self, group: int, state: _GroupState,
                now: float) -> List[GenerationResult]:
-        """(a) Release every slot whose request finished; compact the
-        cache batch axis with select_slots."""
+        """(a) Release every slot whose request finished.  Paged: a pure
+        free-list operation per slot.  Dense: compact the cache batch axis
+        with select_slots (a whole-batch copy)."""
         if not state.slots:
             return []
         keep = [i for i, s in enumerate(state.slots) if not s.done]
@@ -200,34 +330,86 @@ class ServiceRuntime:
         for s in state.slots:
             if not s.done:
                 continue
-            results.append(GenerationResult(
+            res = GenerationResult(
                 rid=s.req.rid, tokens=np.asarray(s.emitted, np.int32),
                 prefill_s=s.prefill_s,
                 decode_s=max(0.0, s.finish_wall - s.decode_start_wall),
                 group=group, admitted_s=s.admitted_s, finished_s=now,
-                decode_steps=s.steps))
+                decode_steps=s.steps)
+            results.append(res)
+            self._note_service_time(res)
+            if state.arena is not None:
+                state.arena.free(s.slot_id)
+            self._finish_request(s.req, group)
         state.slots = [state.slots[i] for i in keep]
-        state.cache = (kvcache.select_slots(state.cache, keep)
-                       if keep else None)
+        if state.arena is None:
+            state.cache = (kvcache.select_slots(state.cache, keep)
+                           if keep else None)
+            if keep:                 # compaction re-materialized the batch
+                self.whole_cache_copies += 1
+                self.admission_copy_bytes += kvcache.cache_bytes(state.cache)
         return results
 
+    def _ensure_arena(self, state: _GroupState) -> KVArena:
+        if state.arena is None:
+            state.arena = KVArena(
+                self.cfg, self.api.init_cache,
+                capacity=self.plan.max_in_flight,
+                max_seq_len=self.max_seq_len, block_size=self.block_size,
+                pool_blocks=self.pool_blocks)
+        return state.arena
+
     def _admit_one(self, req: GenerationRequest, group: int,
-                   state: _GroupState, now: float) -> None:
+                   state: _GroupState, now: float) -> bool:
         """(b) Prefill one admission on its own (no cross-request padding)
-        and merge its cache into the group's live batch."""
+        and attach its cache to the group's live batch.  Paged: scatter
+        the request's pages into its arena slot — the live batch is
+        untouched.  Dense: kvcache.merge re-materializes everything.
+        Returns False when the arena is out of blocks (caller requeues)."""
+        extra = self._extra_cache_tokens()
+        if self.kvcache_impl == "paged":
+            arena = self._ensure_arena(state)
+            total = len(req.tokens) + extra + req.max_new_tokens
+            if total > arena.slot_tokens:
+                raise ValueError(
+                    f"request {req.rid} needs {total} tokens > per-slot "
+                    f"budget {arena.slot_tokens}; raise max_seq_len")
+            if not arena.can_alloc(total):
+                return False
+            # cache_size is budgeted in text tokens; family extras (VLM
+            # prefix) ride along so the model-built cache lands exactly on
+            # the arena's slot_tokens sequence axis
+            cache_size = arena.slot_tokens - extra
+        else:
+            cache_size = int(len(req.tokens) + req.max_new_tokens)
+
         t0 = time.perf_counter()
         toks, _ = self._pad_prompts([req])
         batch = self._build_batch([req], toks)
-        cache_size = int(toks.shape[1] + req.max_new_tokens)
         logits, cache = self.prefill_fn(self.params, batch, cache_size)
         first = int(np.asarray(self._sample(logits))[0])
         jax.block_until_ready(logits)
         t1 = time.perf_counter()
+
+        if self.kvcache_impl == "paged":
+            slot_id = arena.alloc(total)
+            self.admission_copy_bytes += arena.write_prefill(
+                slot_id, cache, prompt_len=len(req.tokens) + extra)
+        else:
+            slot_id = len(state.slots)
+            cache = kvcache.with_lens(cache, kvcache.lens(cache))
+            self.admission_copy_bytes += kvcache.cache_bytes(cache)
+            if state.cache is None:
+                state.cache = cache
+            else:
+                # the merge copies the entire live batch to admit one row
+                self.admission_copy_bytes += kvcache.cache_bytes(state.cache)
+                self.whole_cache_copies += 1
+                state.cache = kvcache.merge([state.cache, cache])
         state.slots.append(_Slot(req, first, prefill_s=t1 - t0,
-                                 admit_wall=t0, admitted_s=now))
-        cache = kvcache.with_lens(cache, kvcache.lens(cache))
-        state.cache = (cache if state.cache is None
-                       else kvcache.merge([state.cache, cache]))
+                                 admit_wall=t0, admitted_s=now,
+                                 slot_id=slot_id))
+        return True
 
     def _route_admission(self, item: QueuedItem) -> Optional[int]:
         """Pick a DP group with a free slot; sticky sessions must land on
@@ -242,31 +424,78 @@ class ServiceRuntime:
                 return alt
         return None
 
-    def _admit(self, now: float, max_wait_s: float) -> None:
+    def _admit(self, now: float, max_wait_s: float) -> int:
         free = self._free_slots()
         if free <= 0 or not len(self.composer):
-            return
-        if isinstance(self.composer, MFComposer):
-            composed = self.composer.compose(now=now, max_wait_s=max_wait_s,
-                                             limit=free)
-        else:
-            composed = self.composer.compose(limit=free)
+            return 0
+        composed = self.composer.compose(limit=free, now=now,
+                                         max_wait_s=max_wait_s)
         if composed is None:
-            return
+            return 0
+        admitted = 0
         unplaced = []
         for item in composed.items:
             g = self._route_admission(item)
-            if g is None:
+            if g is None or not self._admit_one(item.payload, g,
+                                                self.groups[g], now):
                 unplaced.append(item)
                 continue
-            self._admit_one(item.payload, g, self.groups[g], now)
+            admitted += 1
         for item in reversed(unplaced):   # push_front in reverse keeps FIFO
             self.composer.push_front(item)
+        return admitted
 
-    def _decode_group(self, state: _GroupState) -> None:
-        """(c) One fused decode step over every occupied slot."""
-        if not state.slots:
-            return
+    # -- fused decode: paged arena path ---------------------------------
+    def _build_paged_decode_fn(self, arena: KVArena):
+        api, cfg, impl = self.api, self.cfg, self._impl
+
+        def _step(params, tokens, pages, state, lens, live, block_tables):
+            self.decode_traces += 1        # runs at trace time only
+            dense = arena.dense_view(pages, block_tables)
+            cache = arena.assemble(dense, state, lens)
+            logits, new_cache = api.decode_step(params, cfg, tokens, cache,
+                                                impl=impl)
+            new_dense, new_state = arena.disassemble(new_cache)
+            pages = arena.append_rows(pages, new_dense, lens, live,
+                                      block_tables)
+            state = arena.merge_state(state, new_state, live)
+            lens = jnp.where(live, lens + 1, lens)
+            return logits, pages, state, lens
+
+        # donate the arena buffers (args 2..4) so XLA appends in place
+        # instead of re-materializing the page pool every decode step
+        return jax.jit(_step,
+                       donate_argnums=arena._donate_argnums((2, 3, 4)))
+
+    def _decode_group_paged(self, state: _GroupState) -> None:
+        arena = state.arena
+        cap = arena.capacity
+        tokens = np.zeros((cap,), np.int32)
+        live = np.zeros((cap,), bool)
+        for s in state.slots:
+            if not s.done:
+                tokens[s.slot_id] = s.emitted[-1]
+                live[s.slot_id] = True
+        if not live.any():
+            return               # everything awaits eviction
+        if self._paged_decode_fn is None:
+            self._paged_decode_fn = self._build_paged_decode_fn(arena)
+        live_dev = jnp.asarray(live)
+        logits, arena.pages, arena.state, arena.lens = \
+            self._paged_decode_fn(
+                self.params, jnp.asarray(tokens), arena.pages, arena.state,
+                arena.lens, live_dev, arena.device_block_tables())
+        toks = np.asarray(self._sample(logits, live=live_dev,
+                                       occupancy=arena.device_occupancy()))
+        self.decode_steps += 1
+        for slot in state.slots:
+            if slot.done:
+                continue
+            slot.steps += 1
+            slot.push(int(toks[slot.slot_id]))
+
+    # -- fused decode: dense (merge/select) path ------------------------
+    def _decode_group_dense(self, state: _GroupState) -> None:
         live = np.array([not s.done for s in state.slots])
         if not live.any():
             return               # everything awaits eviction
@@ -281,15 +510,32 @@ class ServiceRuntime:
             slot.steps += 1
             slot.push(int(toks[i]))
 
-    def _step_continuous(self, now: float,
-                         max_wait_s: float) -> List[GenerationResult]:
+    def _decode_group(self, state: _GroupState) -> None:
+        """(c) One fused decode step over every occupied slot."""
+        if not state.slots:
+            return
+        if state.arena is not None:
+            self._decode_group_paged(state)
+        else:
+            self._decode_group_dense(state)
+
+    def _step_continuous(self, now: float, max_wait_s: float) -> StepStats:
+        copy0, whole0 = self.admission_copy_bytes, self.whole_cache_copies
+        steps0 = self.decode_steps
         results: List[GenerationResult] = []
         for group, state in self.groups.items():
             results.extend(self._evict(group, state, now))
-        self._admit(now, max_wait_s)
+        admitted = self._admit(now, max_wait_s)
         for state in self.groups.values():
             self._decode_group(state)
-        return results
+        return StepStats(
+            results=results, now=now, admitted=admitted,
+            evicted=len(results), in_flight=self.in_flight(),
+            pending=self.pending(),
+            queue_time_s=self.queue_time_estimate(),
+            admission_copy_bytes=self.admission_copy_bytes - copy0,
+            whole_cache_copies=self.whole_cache_copies - whole0,
+            decode_steps=self.decode_steps - steps0)
 
     # ------------------------------------------------------------------
     # sync mode: run-to-completion batches (the pre-slot baseline)
@@ -329,26 +575,27 @@ class ServiceRuntime:
                 prefill_s=t1 - t0, decode_s=t2 - t1, group=group,
                 admitted_s=now, finished_s=now,
                 decode_steps=max_new - 1))
+            self._finish_request(r, group)
         return results
 
-    def _step_sync(self, now: float,
-                   max_wait_s: float) -> List[GenerationResult]:
-        if isinstance(self.composer, MFComposer):
-            composed = self.composer.compose(now=now, max_wait_s=max_wait_s)
-        else:
-            composed = self.composer.compose()
-        if composed is None:
-            return []
-        return self.run_batch(composed, now=now)
+    def _step_sync(self, now: float, max_wait_s: float) -> StepStats:
+        steps0 = self.decode_steps
+        composed = self.composer.compose(now=now, max_wait_s=max_wait_s)
+        results = ([] if composed is None
+                   else self.run_batch(composed, now=now))
+        return StepStats(results=results, now=now, admitted=len(results),
+                         evicted=len(results), in_flight=self.in_flight(),
+                         pending=self.pending(),
+                         queue_time_s=self.queue_time_estimate(),
+                         decode_steps=self.decode_steps - steps0)
 
     # ------------------------------------------------------------------
     def step(self, now: float = 0.0,
-             max_wait_s: float = float("inf")) -> List[GenerationResult]:
-        """Advance the data plane by one scheduling round.
-
-        Continuous mode: evict / admit / one fused decode step.  Sync
-        mode: compose one batch (BS or MF semantics) and run it to
-        completion."""
+             max_wait_s: float = float("inf")) -> StepStats:
+        """Advance the data plane by one scheduling round and report its
+        telemetry.  Continuous mode: evict / admit / one fused decode
+        step.  Sync mode: compose one batch (BS or MF semantics) and run
+        it to completion."""
         if self.mode == "sync":
             return self._step_sync(now, max_wait_s)
         return self._step_continuous(now, max_wait_s)
@@ -359,10 +606,10 @@ class ServiceRuntime:
         out: List[GenerationResult] = []
         while self.pending() or self.in_flight():
             before = (self.pending(), self.in_flight(), self.decode_steps)
-            res = self.step(now=now, max_wait_s=max_wait_s)
-            out.extend(res)
+            stats = self.step(now=now, max_wait_s=max_wait_s)
+            out.extend(stats.results)
             if (self.pending(), self.in_flight(),
-                    self.decode_steps) == before and not res:
+                    self.decode_steps) == before and not stats.results:
                 break            # no progress possible (e.g. empty compose)
         return out
 
@@ -370,10 +617,13 @@ class ServiceRuntime:
 class EparaServingEngine:
     """Multi-service front door: submits requests to ServiceRuntimes by
     service name.  Placement/offload decisions come from the control plane
-    (see examples/serve_cluster.py); this class is the data plane."""
+    (see examples/serve_cluster.py); this class is the data plane.  The
+    per-service ``StepStats`` of the latest round are kept in
+    ``last_stats`` for the handler's queue-time feedback."""
 
     def __init__(self):
         self.runtimes: Dict[str, ServiceRuntime] = {}
+        self.last_stats: Dict[str, StepStats] = {}
         self._results: List[GenerationResult] = []
 
     def deploy(self, name: str, runtime: ServiceRuntime) -> None:
@@ -387,20 +637,36 @@ class EparaServingEngine:
              max_wait_s: float = 0.0) -> List[GenerationResult]:
         """One scheduling round across every deployed runtime."""
         out: List[GenerationResult] = []
-        for rt in self.runtimes.values():
-            out.extend(rt.step(now=now, max_wait_s=max_wait_s))
+        for name, rt in self.runtimes.items():
+            stats = rt.step(now=now, max_wait_s=max_wait_s)
+            self.last_stats[name] = stats
+            out.extend(stats.results)
         self._results.extend(out)
         return out
 
     def drain(self, now: float = 0.0) -> List[GenerationResult]:
+        return self.serve_until_idle(now=now)
+
+    def serve_until_idle(self, now: float = 0.0, max_wait_s: float = 0.0,
+                         on_stats: Optional[Callable] = None
+                         ) -> List[GenerationResult]:
+        """Step every runtime round-robin until no runtime can make
+        progress, invoking ``on_stats(service, stats)`` after each round —
+        the hook the launchers use to feed ``StepStats.queue_time_s`` back
+        into the control plane's handler state."""
         out: List[GenerationResult] = []
-        for rt in self.runtimes.values():
-            while rt.pending() or rt.in_flight():
-                before = (rt.pending(), rt.in_flight(), rt.decode_steps)
-                res = rt.step(now=now, max_wait_s=0.0)
-                out.extend(res)
-                if (rt.pending(), rt.in_flight(),
-                        rt.decode_steps) == before and not res:
-                    break
+        progress = True
+        while progress:
+            progress = False
+            for name, rt in self.runtimes.items():
+                if not (rt.pending() or rt.in_flight()):
+                    continue
+                stats = rt.step(now=now, max_wait_s=max_wait_s)
+                self.last_stats[name] = stats
+                out.extend(stats.results)
+                if on_stats is not None:
+                    on_stats(name, stats)
+                if stats.results or stats.admitted or stats.decode_steps:
+                    progress = True
         self._results.extend(out)
         return out

@@ -15,15 +15,19 @@ class SamplerConfig:
 
 
 def sample(logits, key, cfg: SamplerConfig = SamplerConfig(), *,
-           live=None, fill_token: int = 0):
+           live=None, occupancy=None, fill_token: int = 0):
     """logits: (B, V) -> (B,) int32.
 
-    ``live`` is an optional (B,) bool mask for the slot engine: slots that
-    already finished (EOS / their own ``max_new_tokens``) but still occupy
-    a decode slot until the next evict pass must not emit real tokens —
-    their rows are overwritten with ``fill_token`` so the fused batch-wide
-    sample stays shape-stable and deterministic regardless of which slots
-    are done."""
+    Two optional (B,) bool masks keep the fused batch-wide sample
+    shape-stable and deterministic regardless of which rows are real:
+
+    * ``occupancy`` — the paged arena decodes at full static capacity, so
+      rows of unoccupied slots carry garbage logits and must never emit;
+    * ``live`` — slots that already finished (EOS / their own
+      ``max_new_tokens``) but still hold a slot until the next evict pass.
+
+    Rows masked by either are overwritten with ``fill_token``.
+    """
     if cfg.temperature <= 0.0:
         out = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     else:
@@ -33,7 +37,12 @@ def sample(logits, key, cfg: SamplerConfig = SamplerConfig(), *,
             cutoff = top_vals[:, -1:]
             scaled = jnp.where(scaled < cutoff, -jnp.inf, scaled)
         out = jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+    mask = None
     if live is not None:
-        out = jnp.where(jnp.asarray(live), out,
-                        jnp.asarray(fill_token, jnp.int32))
+        mask = jnp.asarray(live)
+    if occupancy is not None:
+        occ = jnp.asarray(occupancy)
+        mask = occ if mask is None else jnp.logical_and(mask, occ)
+    if mask is not None:
+        out = jnp.where(mask, out, jnp.asarray(fill_token, jnp.int32))
     return out

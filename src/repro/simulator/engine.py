@@ -40,14 +40,19 @@ class SimConfig:
     placement_interval_s: float = 60.0
     inter_server_bw_gbs: float = 1.25
     seed: int = 0
-    # data-plane service discipline for latency tasks.  "continuous"
-    # (default) matches the live engine's slot loop: requests are admitted
-    # as capacity frees, so service behaves as a 1/c fluid flow.  "sync"
-    # models the pre-slot run-to-completion engine: requests barrier until
-    # a full ``bs`` batch forms (or ``sync_flush_s`` passes) and every
-    # member holds its slot for the full batch latency.
-    serving_mode: str = "continuous"
+    # data-plane service discipline for latency tasks, mirroring the live
+    # engine's three paths.  "paged" (the arena data plane) admits as
+    # capacity frees with zero admission overhead: pure 1/c fluid flow.
+    # "continuous" is the dense slot loop: the same fluid flow plus
+    # ``admission_copy_s`` per admission (the kvcache.merge whole-batch
+    # copy + retrace stall the arena removes; 0 by default so legacy
+    # configs are unchanged).  "sync" models the pre-slot run-to-completion
+    # engine: requests barrier until a full ``bs`` batch forms (or
+    # ``sync_flush_s`` passes) and every member holds its slot for the
+    # full batch latency.
+    serving_mode: str = "paged"
     sync_flush_s: float = 0.05
+    admission_copy_s: float = 0.0
 
 
 @dataclasses.dataclass
@@ -90,6 +95,10 @@ class Simulation:
         self.services = dict(services)
         self.scheduler = scheduler
         self.cfg = cfg
+        if cfg.serving_mode not in ("paged", "continuous", "sync"):
+            raise ValueError(
+                f"serving_mode must be paged|continuous|sync, got "
+                f"{cfg.serving_mode!r}")
         self.meter = GoodputMeter()
         self.server_ids = [s.sid for s in self.servers]
         self.state: Dict[int, _ServerState] = {
@@ -267,11 +276,17 @@ class Simulation:
                 push(now + self.cfg.sync_flush_s, "batch_flush",
                      (sid, req.service, gen))
         else:
-            # continuous admission: the slot loop admits as capacity frees,
-            # so latency service behaves as a 1/c fluid flow per request
+            # paged/continuous admission: the slot loop admits as capacity
+            # frees, so latency service behaves as a 1/c fluid flow per
+            # request.  The dense ("continuous") impl additionally pays
+            # ``admission_copy_s`` per admission — the whole-live-batch
+            # kvcache.merge copy and decode retrace the paged arena
+            # eliminates (its admissions only scatter the new pages).
             eff_cap = max(1e-6, cap - st.stream_load.get(req.service, 0.0))
             vf = max(now, st.vf.get(req.service, now))
             vf += 1.0 / eff_cap
+            if self.cfg.serving_mode == "continuous":
+                vf += self.cfg.admission_copy_s
             st.vf[req.service] = vf
             base = cm.effective_latency(svc, self.servers[0].gpu,
                                         batch=plan.bs, mp=plan.mp,

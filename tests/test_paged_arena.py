@@ -1,0 +1,397 @@
+"""Paged KV arena data plane: allocator surface, block tables, paged↔dense
+equivalence (property test), the retrace regression the fixed-capacity
+design exists for, the paged decode kernel, and the satellite fixes
+(sticky-session release, Composer protocol, occupancy-masked sampling,
+simulator paged mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.allocator import DPGroupRouter, ParallelPlan
+from repro.core.categories import Sensitivity, TaskCategory
+from repro.models import transformer as T
+from repro.serving.arena import KVArena
+from repro.serving.batching import BSComposer, Composer, MFComposer
+from repro.serving.engine import (GenerationRequest, ServiceRuntime,
+                                  StepStats)
+from repro.serving.sampler import sample
+
+from conftest import toy_config
+
+LAT = TaskCategory(Sensitivity.LATENCY, False)
+
+
+def _plan(bs=2, **kw):
+    return ParallelPlan(service="t", category=LAT, bs=bs, **kw)
+
+
+# ---------------------------------------------------------------------------
+# arena allocator surface
+# ---------------------------------------------------------------------------
+
+def test_arena_classifies_leaves_and_sizes_pool(dense_cfg):
+    a = KVArena(dense_cfg, T.init_cache, capacity=3, max_seq_len=40,
+                block_size=8)
+    assert a.slot_tokens == 40 and a.blocks_per_slot == 5
+    assert a.pool_blocks == 15 and a.trash_block == 15
+    assert len(a.pages) == 2          # k and v are paged
+    assert len(a.state) == 0          # dense cfg has no fixed state leaves
+    assert a.pages[0].shape == (dense_cfg.num_layers, 16, 8,
+                                dense_cfg.num_kv_heads, dense_cfg.head_dim)
+    assert a.token_bytes > 0
+
+
+def test_arena_alloc_free_reuses_blocks(dense_cfg):
+    a = KVArena(dense_cfg, T.init_cache, capacity=2, max_seq_len=32,
+                block_size=8)
+    s0 = a.alloc(20)                  # 3 blocks
+    bt = a.block_tables()
+    assert a.live == 1 and a.occupancy()[s0]
+    assert (bt[s0] != a.trash_block).sum() == 3
+    assert (bt[1 - s0] == a.trash_block).all()
+    s1 = a.alloc(32)                  # 4 blocks
+    assert not a.can_alloc(8)         # slots exhausted
+    a.free(s0)
+    assert a.can_alloc(24)
+    s2 = a.alloc(24)
+    assert s2 == s0                   # slot recycled through the free list
+    assert a.live == 2
+    a.free(s1), a.free(s2)
+    assert a.live == 0
+    assert (a.block_tables() == a.trash_block).all()
+    assert len(a._free_blocks) == a.pool_blocks
+
+
+def test_arena_rejects_over_budget(dense_cfg):
+    a = KVArena(dense_cfg, T.init_cache, capacity=1, max_seq_len=16,
+                block_size=8)
+    with pytest.raises(ValueError):
+        a.alloc(17)
+
+
+def test_arena_write_then_gather_roundtrip(dense_cfg):
+    """write_prefill scatters pages; dense_view through the block table
+    reconstructs the request's cache row exactly."""
+    a = KVArena(dense_cfg, T.init_cache, capacity=2, max_seq_len=16,
+                block_size=8)
+    prompt = jnp.asarray(np.arange(1, 6, dtype=np.int32)[None])
+    params = T.init(jax.random.PRNGKey(0), dense_cfg)
+    _, cache = T.prefill(params, dense_cfg, {"tokens": prompt},
+                         cache_size=a.slot_tokens)
+    slot = a.alloc(10)
+    written = a.write_prefill(slot, cache, prompt_len=5)
+    assert written == a.slot_bytes(5)
+    dense = a.dense_view(a.pages, jnp.asarray(a.block_tables()))
+    np.testing.assert_allclose(np.asarray(dense[0][:, slot]),
+                               np.asarray(cache["k"][:, 0]), rtol=1e-6)
+    assert int(a.lens[slot]) == 5
+
+
+def test_arena_ssm_state_only():
+    """State-space caches have no sequence axis: every leaf is per-slot
+    state, the arena still gives fixed-shape decode."""
+    from repro.models import ssm as S
+    cfg = toy_config(family="ssm", ssm_state=4, ssm_headdim=16)
+    a = KVArena(cfg, S.init_cache, capacity=2, max_seq_len=32, block_size=8)
+    assert len(a.pages) == 0 and len(a.state) == 2
+    assert a.state[0].shape[1] == 2
+
+
+# ---------------------------------------------------------------------------
+# paged engine behavior
+# ---------------------------------------------------------------------------
+
+def _runtime(cfg, params, *, impl="paged", bs=2, **kw):
+    kw.setdefault("max_seq_len", 64)
+    kw.setdefault("block_size", 8)
+    return ServiceRuntime(cfg, params, _plan(bs=bs), kvcache_impl=impl,
+                          **kw)
+
+
+def _serve(rt, reqs):
+    for i, (p, n) in enumerate(reqs):
+        rt.submit(GenerationRequest(rid=i, tokens=p, max_new_tokens=n,
+                                    stream=i))
+    return {r.rid: list(r.tokens) for r in rt.drain()}
+
+
+def test_retrace_regression_paged_compiles_once(dense_cfg):
+    """Live batch size varying 1 -> capacity -> 1 must compile the fused
+    decode step exactly once (the dense path retraces per batch shape)."""
+    params = T.init(jax.random.PRNGKey(0), dense_cfg)
+    rt = _runtime(dense_cfg, params, bs=3)
+    rt.submit(GenerationRequest(rid=0, tokens=np.arange(1, 6, dtype=np.int32),
+                                max_new_tokens=10))
+    rt.step(); rt.step()              # live = 1
+    for i in (1, 2):                  # ramp to capacity mid-decode
+        rt.submit(GenerationRequest(rid=i,
+                                    tokens=np.arange(1, 4 + i, dtype=np.int32),
+                                    max_new_tokens=2 + i))
+    res = rt.drain()                  # ramps 3 -> ... -> 1 -> 0
+    assert len(res) == 3
+    assert rt.decode_traces == 1, rt.decode_traces
+    assert rt.whole_cache_copies == 0
+
+
+def test_dense_impl_retraces_on_batch_change(dense_cfg):
+    """The documented cost the arena removes: the dense path compiles a
+    new decode step per live batch shape."""
+    params = T.init(jax.random.PRNGKey(0), dense_cfg)
+    rt = _runtime(dense_cfg, params, impl="dense", bs=3)
+    reqs = [(np.arange(1, 6, dtype=np.int32), 6), (np.arange(1, 6, dtype=np.int32), 2),
+            (np.arange(1, 6, dtype=np.int32), 4)]
+    _serve(rt, reqs)
+    assert rt.decode_traces > 1
+    assert rt.whole_cache_copies > 0
+
+
+def test_arena_block_exhaustion_requeues_until_free(dense_cfg):
+    """A pool smaller than capacity x blocks_per_slot makes the block
+    allocator real: admissions without blocks wait on the free list."""
+    params = T.init(jax.random.PRNGKey(0), dense_cfg)
+    rt = ServiceRuntime(dense_cfg, params, _plan(bs=2),
+                        kvcache_impl="paged", max_seq_len=32, block_size=8,
+                        pool_blocks=5)     # 2 slots want up to 8 blocks
+    reqs = [(np.arange(1, 9, dtype=np.int32), 16), (np.arange(1, 9, dtype=np.int32), 16),
+            (np.arange(1, 9, dtype=np.int32), 16)]
+    res = _serve(rt, reqs)                 # each needs 3 blocks
+    assert sorted(res) == [0, 1, 2]        # all complete despite contention
+    arena = rt.groups[0].arena
+    assert len(arena._free_blocks) == 5    # everything returned
+
+
+def test_paged_rejects_request_over_slot_budget(dense_cfg):
+    """Over-budget requests fail at submit() — raising mid-admission
+    would drop the composed batch's other members."""
+    params = T.init(jax.random.PRNGKey(0), dense_cfg)
+    rt = ServiceRuntime(dense_cfg, params, _plan(bs=1),
+                        kvcache_impl="paged", max_seq_len=16, block_size=8)
+    with pytest.raises(ValueError):
+        rt.submit(GenerationRequest(rid=0,
+                                    tokens=np.arange(1, 14, dtype=np.int32),
+                                    max_new_tokens=8))
+    # an in-budget neighbour is unaffected
+    rt.submit(GenerationRequest(rid=1, tokens=np.arange(1, 5, dtype=np.int32),
+                                max_new_tokens=2))
+    assert [r.rid for r in rt.drain()] == [1]
+
+
+def test_step_returns_stepstats_telemetry(dense_cfg):
+    params = T.init(jax.random.PRNGKey(0), dense_cfg)
+    rt = _runtime(dense_cfg, params, bs=2)
+    rt.submit(GenerationRequest(rid=0, tokens=np.arange(1, 6, dtype=np.int32),
+                                max_new_tokens=3))
+    stats = rt.step()
+    assert isinstance(stats, StepStats)
+    assert stats.admitted == 1 and stats.in_flight == 1
+    assert stats.whole_cache_copies == 0
+    assert stats.admission_copy_bytes > 0
+    out = rt.drain()
+    assert len(out) == 1
+    final = rt.step()
+    assert final.results == [] and final.in_flight == 0
+    assert final.queue_time_s >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# paged <-> dense equivalence (property test; deterministic shim fallback)
+# ---------------------------------------------------------------------------
+
+_PROP_CFG = toy_config(num_layers=1, d_model=32, num_heads=2,
+                       num_kv_heads=2, head_dim=16, d_ff=64)
+_PROP_PARAMS = None
+
+
+def _prop_params():
+    global _PROP_PARAMS
+    if _PROP_PARAMS is None:
+        _PROP_PARAMS = T.init(jax.random.PRNGKey(7), _PROP_CFG)
+    return _PROP_PARAMS
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 2**16), n_reqs=st.integers(1, 6),
+       bs=st.integers(1, 3))
+def test_random_schedules_match_dense_tokens_and_lens(seed, n_reqs, bs):
+    """Random admit/evict/decode schedules (random prompt lengths, budgets
+    and eos tokens) must produce identical greedy tokens and final lens
+    under both kvcache_impls."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for _ in range(n_reqs):
+        plen = int(rng.integers(1, 9))
+        n = int(rng.integers(1, 7))
+        reqs.append((rng.integers(1, _PROP_CFG.vocab_size, plen)
+                     .astype(np.int32), n))
+    out = {}
+    for impl in ("paged", "dense"):
+        rt = ServiceRuntime(_PROP_CFG, _prop_params(), _plan(bs=bs),
+                            kvcache_impl=impl, max_seq_len=32, block_size=8)
+        out[impl] = _serve(rt, reqs)
+    assert out["paged"] == out["dense"]
+    lens = {rid: len(toks) for rid, toks in out["paged"].items()}
+    assert lens == {i: min(len(out["dense"][i]), reqs[i][1])
+                    for i in range(n_reqs)}
+
+
+def test_moe_decode_rows_are_batch_independent():
+    """Regression: decode-time MoE must route each slot's token in its own
+    dispatch group.  A shared group makes tokens compete for expert
+    capacity, so a request's output would depend on its batch neighbours —
+    under the arena's fixed-capacity batch even on unoccupied slots'
+    garbage rows."""
+    from repro.models import moe as M
+    cfg = toy_config(family="moe", num_experts=4, experts_per_token=2)
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(2)
+    reqs = [(rng.integers(1, cfg.vocab_size, 4 + i).astype(np.int32), 4)
+            for i in range(3)]
+
+    def direct(prompt, n):
+        logits, cache = M.prefill(params, cfg,
+                                  {"tokens": jnp.asarray(prompt[None])},
+                                  cache_size=len(prompt) + n)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        toks = [int(tok[0])]
+        for _ in range(n - 1):
+            logits, cache = M.decode_step(params, cfg, tok, cache)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            toks.append(int(tok[0]))
+        return toks
+
+    for impl in ("paged", "dense"):
+        rt = _runtime(cfg, params, impl=impl, bs=2)
+        got = _serve(rt, reqs)
+        for i, (p, n) in enumerate(reqs):
+            assert got[i] == direct(p, n), (impl, i)
+
+
+# ---------------------------------------------------------------------------
+# paged decode kernel: Pallas (interpret) vs dense-gather ref
+# ---------------------------------------------------------------------------
+
+def test_paged_decode_attention_matches_gathered_ref(rng):
+    from repro.kernels.decode_attention import (paged_decode_attention_pallas,
+                                                paged_gather_ref)
+    from repro.kernels.ref import decode_attention_ref
+    B, Hq, Hkv, D, bs, nblk, P = 3, 4, 2, 16, 16, 3, 10
+    q = jnp.asarray(rng.normal(size=(B, Hq, D)).astype(np.float32))
+    kp = jnp.asarray(rng.normal(size=(P + 1, bs, Hkv, D)).astype(np.float32))
+    vp = jnp.asarray(rng.normal(size=(P + 1, bs, Hkv, D)).astype(np.float32))
+    bt = jnp.asarray(rng.permutation(P)[:B * nblk]
+                     .reshape(B, nblk).astype(np.int32))
+    lens = jnp.asarray(np.array([5, 33, 48], np.int32))
+    want = decode_attention_ref(q, paged_gather_ref(kp, bt),
+                                paged_gather_ref(vp, bt), lens)
+    got = paged_decode_attention_pallas(q, kp, vp, bt, lens, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_ops_paged_decode_attention_ref_dispatch(rng):
+    from repro.kernels import ops
+    B, Hq, Hkv, D, bs, nblk, P = 2, 2, 2, 8, 8, 2, 6
+    q = jnp.asarray(rng.normal(size=(B, Hq, D)).astype(np.float32))
+    kp = jnp.asarray(rng.normal(size=(P + 1, bs, Hkv, D)).astype(np.float32))
+    vp = jnp.asarray(rng.normal(size=(P + 1, bs, Hkv, D)).astype(np.float32))
+    bt = jnp.asarray(np.array([[0, 1], [2, 3]], np.int32))
+    lens = jnp.asarray(np.array([7, 12], np.int32))
+    out = ops.paged_decode_attention(q, kp, vp, bt, lens, impl="ref")
+    assert out.shape == (B, Hq, D)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+# ---------------------------------------------------------------------------
+# satellites: sticky release, composer protocol, occupancy sampling, sim
+# ---------------------------------------------------------------------------
+
+def test_sticky_session_pins_released_on_final_evict(dense_cfg):
+    """The DPGroupRouter leak fix: session->group entries disappear once a
+    session has no queued or in-flight requests left, but survive while
+    later requests of the session are still pending."""
+    params = T.init(jax.random.PRNGKey(0), dense_cfg)
+    plan = ParallelPlan(service="t", category=LAT, bs=2, dp=2, sticky=True)
+    rt = ServiceRuntime(dense_cfg, params, plan, max_seq_len=64,
+                        block_size=8)
+    for i in range(6):
+        rt.submit(GenerationRequest(rid=i, tokens=np.arange(1, 5, dtype=np.int32),
+                                    max_new_tokens=3, stream=1 + i % 2))
+    rt.step()
+    assert rt.router.sessions() > 0       # pinned while in flight
+    res = rt.drain()
+    assert len(res) == 6
+    assert rt.router.sessions() == 0      # fully released after drain
+    groups = {}
+    for r in res:
+        groups.setdefault(r.rid % 2, set()).add(r.group)
+    assert all(len(g) == 1 for g in groups.values())  # stickiness intact
+
+
+def test_on_evict_hook_fires_per_request(dense_cfg):
+    params = T.init(jax.random.PRNGKey(0), dense_cfg)
+    seen = []
+    rt = ServiceRuntime(dense_cfg, params, _plan(bs=2), max_seq_len=64,
+                        block_size=8,
+                        on_evict=lambda req, group: seen.append(req.rid))
+    for i in range(3):
+        rt.submit(GenerationRequest(rid=i, tokens=np.arange(1, 5, dtype=np.int32),
+                                    max_new_tokens=2))
+    rt.drain()
+    assert sorted(seen) == [0, 1, 2]
+
+
+def test_composers_share_one_protocol():
+    bs = BSComposer(_plan(bs=4))
+    mf = MFComposer(ParallelPlan(service="t",
+                                 category=TaskCategory(Sensitivity.FREQUENCY,
+                                                       False),
+                                 bs=4, mf=2))
+    assert isinstance(bs, Composer) and isinstance(mf, Composer)
+    from repro.serving.batching import QueuedItem
+    for c in (bs, mf):
+        for s in (1, 2):
+            for _ in range(2):
+                c.add(QueuedItem(payload=0, stream=s))
+        # the engine's single uniform call shape works on both families
+        b = c.compose(limit=2, now=5.0, max_wait_s=0.0)
+        assert b is not None and b.size == 2
+
+
+def test_sampler_masks_occupancy_and_live():
+    logits = jnp.array([[0.0, 5.0], [4.0, 0.0], [0.0, 3.0]])
+    out = sample(logits, jax.random.PRNGKey(0),
+                 live=jnp.array([True, True, False]),
+                 occupancy=jnp.array([True, False, True]), fill_token=-1)
+    assert list(np.asarray(out)) == [1, -1, -1]
+
+
+def test_simulator_paged_mode_beats_dense_copy_overhead():
+    import dataclasses as dc
+
+    from repro.core.categories import Request, ServerSpec, ServiceSpec
+    from repro.simulator.engine import SimConfig, run_comparison
+
+    servers = [ServerSpec(sid=0, num_gpus=2)]
+    services = {"chat": ServiceSpec("chat", flops_per_request=5e9,
+                                    weights_bytes=1e8, vram_bytes=3e8,
+                                    slo_latency_s=0.5)}
+    rng = np.random.default_rng(0)
+    events, t = [], 0.0
+    for i in range(60):
+        t += float(rng.exponential(0.05))
+        events.append((t, 0, Request(rid=i, service="chat", arrival_s=t,
+                                     deadline_s=t + 0.5)))
+    base = SimConfig(horizon_s=10.0, sync_interval_s=1.0,
+                     admission_copy_s=0.01)
+    out = {}
+    for mode in ("paged", "continuous", "sync"):
+        cfg = dc.replace(base, serving_mode=mode)
+        out[mode] = run_comparison(servers, services, events, ["EPARA"],
+                                   cfg)["EPARA"].goodput
+    assert out["paged"] >= out["continuous"] >= out["sync"]
+    with pytest.raises(ValueError):
+        run_comparison(servers, services, events, ["EPARA"],
+                       dc.replace(base, serving_mode="bogus"))
