@@ -1,7 +1,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test smoke bench bench-paged serve quickstart
+.PHONY: test smoke bench bench-paged bench-chunked serve quickstart
 
 test:                ## tier-1 suite
 	python -m pytest -x -q
@@ -14,7 +14,11 @@ bench:               ## full benchmark suite (paper figures)
 
 bench-paged:         ## paged KV arena vs dense merge vs sync data planes
 	REPRO_BENCH_SMOKE=$${REPRO_BENCH_SMOKE:-0} PYTHONHASHSEED=0 \
-	python -m benchmarks.continuous_batching
+	REPRO_BENCH_SECTION=live,sim python -m benchmarks.continuous_batching
+
+bench-chunked:       ## chunked vs unchunked prefill (head-of-line stall)
+	REPRO_BENCH_SMOKE=$${REPRO_BENCH_SMOKE:-0} PYTHONHASHSEED=0 \
+	REPRO_BENCH_SECTION=chunked python -m benchmarks.continuous_batching
 
 serve:               ## end-to-end serving driver
 	python -m repro.launch.serve

@@ -104,10 +104,12 @@ def main():
                  for rt in eng.runtimes.values())
     copies = sum(rt.whole_cache_copies for eng in engines.values()
                  for rt in eng.runtimes.values())
+    chunks = sum(rt.prefill_chunk_calls for eng in engines.values()
+                 for rt in eng.runtimes.values())
     deployed = sum(len(eng.runtimes) for eng in engines.values())
     print(f"\nserved {len(results)}/{args.requests} requests "
-          f"({toks} tokens, {steps} fused decode steps) in {dt:.1f}s — "
-          f"handler outcomes: {outcomes}")
+          f"({toks} tokens, {steps} fused decode steps, {chunks} prefill "
+          f"chunks) in {dt:.1f}s — handler outcomes: {outcomes}")
     print(f"paged arena: {traces} decode compiles across {deployed} "
           f"deployed runtimes, {copies} whole-cache admission copies")
     assert len(results) == args.requests

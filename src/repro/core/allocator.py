@@ -45,6 +45,8 @@ class ParallelPlan:
     mf: int = 1          # inter-frame count (frequency tasks)
     dp: int = 1          # replica group count (frequency tasks)
     sticky: bool = False  # session-sticky DP routing (stateful archs)
+    prefill_chunk: int = 0  # chunked-prefill bucket size in tokens
+    #                         (0 = derive from the task category)
 
     @property
     def gpus(self) -> int:
@@ -69,6 +71,18 @@ class ParallelPlan:
         MT co-locates ``mt`` independent runtimes per group (each with its
         own ``bs`` slots) and DP adds ``dp`` replica groups."""
         return self.bs * self.mt * self.dp
+
+    def prefill_chunk_tokens(self, block_size: int = 32) -> int:
+        """Chunked-prefill bucket size for the serving engine's
+        piggybacked prefill.  Latency-sensitive categories take SMALL
+        chunks (prompt work is finely interleaved, so live decode slots
+        see minimal added per-step latency); frequency/throughput
+        categories take LARGE chunks (fewer, fatter prefill calls — per-
+        step stall matters less than aggregate prefill throughput)."""
+        if self.prefill_chunk > 0:
+            return self.prefill_chunk
+        mult = 2 if self.category.sensitivity == Sensitivity.LATENCY else 4
+        return mult * block_size
 
     def operators(self):
         ops = set()
@@ -171,6 +185,9 @@ def allocate(svc: ServiceSpec, gpu: GPUSpec, *,
     mf = _choose_mf(svc, bs) if Operator.MF in allowed else 1
     dp = (_choose_dp(svc, gpu, mp, bs, mt, mf, target_fps)
           if Operator.DP in allowed else 1)
+    # prefill_chunk stays 0: the category-derived mapping in
+    # ``prefill_chunk_tokens`` applies at the engine's block size (small
+    # chunks for latency tasks, large for frequency/throughput)
     return ParallelPlan(service=svc.name, category=category, mp=mp, bs=bs,
                         mt=mt, mf=mf, dp=dp, sticky=svc.stateful)
 

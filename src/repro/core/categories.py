@@ -99,6 +99,8 @@ class Request:
     arrival_s: float
     frames: int = 1                  # 1 for latency tasks
     duration_s: float = 0.0          # stream duration for frequency tasks
+    prompt_tokens: int = 0           # prompt length (chunked-prefill cost
+    #                                  model; 0 = prefill not modeled)
     deadline_s: float = 0.0          # arrival + SLO (latency tasks)
     path: Tuple[int, ...] = ()       # servers traversed (loop prevention)
     offload_count: int = 0

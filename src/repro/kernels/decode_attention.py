@@ -146,6 +146,236 @@ def decode_attention_pallas(q, k_cache, v_cache, cache_len, *, window=None,
 
 
 # ---------------------------------------------------------------------------
+# chunked prefill: a block of T query positions vs the (partial) cache
+# ---------------------------------------------------------------------------
+
+def _chunk_tile(start, end, ki, q, k, v, m_ref, l_ref, acc_ref,
+                *, scale: float, prefix_len: int, k_block: int, Tp: int):
+    """Shared online-softmax tile for the chunk-prefill kernels: query row
+    i sits at absolute position ``start + i``; ``end`` = start + chunk_len
+    bounds the valid cache (rows past chunk_len are padding and masked)."""
+    q = q.astype(jnp.float32)                       # (Tp, D)
+    k = k.astype(jnp.float32)                       # (k_block, D)
+    v = v.astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    k_lo = ki * k_block
+    kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (Tp, k_block), 1)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (Tp, k_block), 0)
+    ok = kpos <= start + rows                       # causal over the cache
+    if prefix_len:
+        ok = jnp.logical_or(ok, kpos < prefix_len)  # bidirectional prefix
+    ok = jnp.logical_and(ok, kpos < end)            # valid cache only
+    ok = jnp.logical_and(ok, rows < end - start)    # padded q rows dead
+    s = jnp.where(ok, s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, :1]) * ok.astype(jnp.float32)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+    m_ref[...] = m_new
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha[:, :1] + pv
+
+
+def _chunk_kernel(start_ref, end_ref, q_ref, k_ref, v_ref, o_ref, m_ref,
+                  l_ref, acc_ref, *, scale: float, prefix_len: int,
+                  k_block: int, nk: int, Tp: int):
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    start, end = start_ref[0, 0], end_ref[0, 0]
+
+    @pl.when(ki * k_block < end)
+    def _compute():
+        _chunk_tile(start, end, ki, q_ref[0], k_ref[0], v_ref[0],
+                    m_ref, l_ref, acc_ref, scale=scale,
+                    prefix_len=prefix_len, k_block=k_block, Tp=Tp)
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_ref[...][:, :1]
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l, 1e-37)).astype(o_ref.dtype)
+
+
+def chunk_prefill_attention_pallas(q, k_cache, v_cache, start, chunk_len, *,
+                                   prefix_len: int = 0, softmax_scale=None,
+                                   k_block=DEFAULT_KV_BLOCK,
+                                   interpret=False):
+    """q: (B, T, Hq, D) chunk queries; caches: (B, S, Hkv, D) already
+    holding the chunk's own K/V at positions [start, start+chunk_len);
+    start/chunk_len: scalar or (B,) int.  Returns (B, T, Hq, D); rows past
+    ``chunk_len`` are zeros.
+    """
+    B, T, Hq, D = q.shape
+    _, S, Hkv, _ = k_cache.shape
+    group = Hq // Hkv
+    scale = softmax_scale if softmax_scale is not None else D ** -0.5
+    start = jnp.asarray(start, jnp.int32)
+    if start.ndim == 0:
+        start = jnp.full((B,), start, jnp.int32)
+    chunk_len = jnp.asarray(chunk_len, jnp.int32)
+    if chunk_len.ndim == 0:
+        chunk_len = jnp.full((B,), chunk_len, jnp.int32)
+
+    Tp = -(-T // _SUB) * _SUB                       # sublane-align q rows
+    k_block = min(k_block, max(8, S))
+    S_p = -(-S // k_block) * k_block
+    kt = jnp.pad(k_cache, ((0, 0), (0, S_p - S), (0, 0), (0, 0)))
+    vt = jnp.pad(v_cache, ((0, 0), (0, S_p - S), (0, 0), (0, 0)))
+    kt = kt.transpose(0, 2, 1, 3).reshape(B * Hkv, S_p, D)
+    vt = vt.transpose(0, 2, 1, 3).reshape(B * Hkv, S_p, D)
+    qt = q.transpose(0, 2, 1, 3)                    # (B, Hq, T, D)
+    qt = jnp.pad(qt, ((0, 0), (0, 0), (0, Tp - T), (0, 0)))
+    qt = qt.reshape(B * Hq, Tp, D)
+    starts = jnp.repeat(start, Hq).reshape(B * Hq, 1)
+    ends = jnp.repeat(start + chunk_len, Hq).reshape(B * Hq, 1)
+
+    nk = S_p // k_block
+    grid = (B * Hq, nk)
+    kernel = functools.partial(_chunk_kernel, scale=scale,
+                               prefix_len=prefix_len, k_block=k_block,
+                               nk=nk, Tp=Tp)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda bh, ki: (bh, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1), lambda bh, ki: (bh, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, Tp, D), lambda bh, ki: (bh, 0, 0)),
+            pl.BlockSpec((1, k_block, D),
+                         lambda bh, ki, group=group: (bh // group, ki, 0)),
+            pl.BlockSpec((1, k_block, D),
+                         lambda bh, ki, group=group: (bh // group, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Tp, D), lambda bh, ki: (bh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Tp, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((Tp, 128), jnp.float32),
+            pltpu.VMEM((Tp, 128), jnp.float32),
+            pltpu.VMEM((Tp, D), jnp.float32),
+        ],
+        compiler_params=compat.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(starts, ends, qt, kt, vt)
+
+    out = out.reshape(B, Hq, Tp, D)[:, :, :T]
+    return out.transpose(0, 2, 1, 3)
+
+
+def _paged_chunk_kernel(bt_ref, start_ref, end_ref, q_ref, k_ref, v_ref,
+                        o_ref, m_ref, l_ref, acc_ref, *, scale: float,
+                        prefix_len: int, k_block: int, nk: int, Tp: int,
+                        q_heads: int):
+    bh = pl.program_id(0)
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    start = start_ref[bh // q_heads]
+    end = end_ref[bh // q_heads]
+
+    # a logical block at or past the valid cache maps to the trash page
+    @pl.when(ki * k_block < end)
+    def _compute():
+        _chunk_tile(start, end, ki, q_ref[0], k_ref[0, 0],
+                    v_ref[0, 0], m_ref, l_ref, acc_ref, scale=scale,
+                    prefix_len=prefix_len, k_block=k_block, Tp=Tp)
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_ref[...][:, :1]
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l, 1e-37)).astype(o_ref.dtype)
+
+
+def paged_chunk_prefill_attention_pallas(q, k_pages, v_pages, block_tables,
+                                         start, chunk_len, *,
+                                         prefix_len: int = 0,
+                                         softmax_scale=None,
+                                         interpret=False):
+    """Chunked-prefill attention straight through the serving arena's block
+    table: q (B, T, Hq, D) chunk queries; pages (P, block_size, Hkv, D);
+    block_tables (B, blocks_per_slot) int32; start/chunk_len (B,) int32.
+    The chunk's own K/V must already be scattered into the pages (the
+    engine writes pages before attending).  Returns (B, T, Hq, D).
+
+    Like ``paged_decode_attention_pallas``, the table rides in scalar-
+    prefetch SMEM so the K/V BlockSpec index maps stream physical pages in
+    logical order; ``ops.paged_chunk_attention`` provides the dense-gather
+    CPU fallback.
+    """
+    B, T, Hq, D = q.shape
+    P, k_block, Hkv, _ = k_pages.shape
+    nk = block_tables.shape[1]
+    group = Hq // Hkv
+    scale = softmax_scale if softmax_scale is not None else D ** -0.5
+    start = jnp.asarray(start, jnp.int32)
+    if start.ndim == 0:
+        start = jnp.full((B,), start, jnp.int32)
+    chunk_len = jnp.asarray(chunk_len, jnp.int32)
+    if chunk_len.ndim == 0:
+        chunk_len = jnp.full((B,), chunk_len, jnp.int32)
+    tables = jnp.asarray(block_tables, jnp.int32)
+
+    Tp = -(-T // _SUB) * _SUB
+    kp = k_pages.transpose(2, 0, 1, 3)             # (Hkv, P, bs, D)
+    vp = v_pages.transpose(2, 0, 1, 3)
+    qt = q.transpose(0, 2, 1, 3)
+    qt = jnp.pad(qt, ((0, 0), (0, 0), (0, Tp - T), (0, 0)))
+    qt = qt.reshape(B * Hq, Tp, D)
+
+    def kv_index(bh, ki, bt_ref, s_ref, e_ref):
+        b = bh // Hq
+        kvh = (bh % Hq) // group
+        return (kvh, bt_ref[b, ki], 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,                     # table + start + end
+        grid=(B * Hq, nk),
+        in_specs=[
+            pl.BlockSpec((1, Tp, D),
+                         lambda bh, ki, bt, s, e: (bh, 0, 0)),
+            pl.BlockSpec((1, 1, k_block, D), kv_index),
+            pl.BlockSpec((1, 1, k_block, D), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, Tp, D),
+                               lambda bh, ki, bt, s, e: (bh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Tp, 128), jnp.float32),
+            pltpu.VMEM((Tp, 128), jnp.float32),
+            pltpu.VMEM((Tp, D), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_paged_chunk_kernel, scale=scale,
+                               prefix_len=prefix_len, k_block=k_block,
+                               nk=nk, Tp=Tp, q_heads=Hq)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Tp, D), q.dtype),
+        compiler_params=compat.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(tables, start, start + chunk_len, qt, kp, vp)
+
+    out = out.reshape(B, Hq, Tp, D)[:, :, :T]
+    return out.transpose(0, 2, 1, 3)
+
+
+# ---------------------------------------------------------------------------
 # paged layout: K/V read through a block table (serving arena fast path)
 # ---------------------------------------------------------------------------
 

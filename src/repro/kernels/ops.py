@@ -18,7 +18,9 @@ from typing import Optional
 import jax.numpy as jnp
 
 from . import ref
-from .decode_attention import (decode_attention_pallas, paged_gather_ref,
+from .decode_attention import (chunk_prefill_attention_pallas,
+                               decode_attention_pallas, paged_gather_ref,
+                               paged_chunk_prefill_attention_pallas,
                                paged_decode_attention_pallas)
 from .flash_attention import flash_attention_pallas
 from .moe_gemm import grouped_matmul_pallas
@@ -119,6 +121,47 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, cache_len, *,
     return paged_decode_attention_pallas(
         q, k_pages, v_pages, block_tables, cache_len,
         softmax_scale=softmax_scale, interpret=(impl == "pallas_interpret"))
+
+
+def chunk_attention(q, k_cache, v_cache, start, chunk_len, *,
+                    prefix_len: int = 0, softmax_scale=None,
+                    impl: Optional[str] = None):
+    """Chunked-prefill attention: T query rows at absolute positions
+    ``start + i`` against a dense (B, S, Hkv, D) cache that already holds
+    the chunk's own K/V (the piggybacked-prefill step writes the cache
+    first, then attends).  ``start``/``chunk_len`` may be traced scalars or
+    (B,) vectors — unlike ``flash_attention``'s static ``q_offset``, so one
+    trace serves every chunk of a bucket size."""
+    impl = impl or default_impl()
+    if impl == "ref":
+        return ref.chunk_attention_ref(q, k_cache, v_cache, start, chunk_len,
+                                       prefix_len=prefix_len,
+                                       softmax_scale=softmax_scale)
+    return chunk_prefill_attention_pallas(
+        q, k_cache, v_cache, start, chunk_len, prefix_len=prefix_len,
+        softmax_scale=softmax_scale, interpret=(impl == "pallas_interpret"))
+
+
+def paged_chunk_attention(q, k_pages, v_pages, block_tables, start,
+                          chunk_len, *, prefix_len: int = 0,
+                          softmax_scale=None, impl: Optional[str] = None):
+    """Chunk-prefill attention against the serving arena's paged KV layout.
+
+    ``"ref"`` gathers the pages densely through the block table and runs
+    the jnp chunk oracle (the CPU fallback the slot engine uses); the
+    Pallas path streams K/V through the table via scalar prefetch.
+    """
+    impl = impl or default_impl()
+    if impl == "ref":
+        k = paged_gather_ref(k_pages, block_tables)
+        v = paged_gather_ref(v_pages, block_tables)
+        return ref.chunk_attention_ref(q, k, v, start, chunk_len,
+                                       prefix_len=prefix_len,
+                                       softmax_scale=softmax_scale)
+    return paged_chunk_prefill_attention_pallas(
+        q, k_pages, v_pages, block_tables, start, chunk_len,
+        prefix_len=prefix_len, softmax_scale=softmax_scale,
+        interpret=(impl == "pallas_interpret"))
 
 
 def ssd_scan(x, dt, A, B, C, D=None, *, chunk: int = 128,

@@ -186,6 +186,54 @@ def decode_attention_ref(q, k_cache, v_cache, cache_len, *, window=None,
     return out.reshape(B, Hq, D).astype(q.dtype)
 
 
+def chunk_attention_ref(q, k_cache, v_cache, start, chunk_len, *,
+                        prefix_len=0, softmax_scale=None):
+    """Chunked-prefill attention: a block of T query positions against a
+    (B, S, Hkv, D) cache that already holds the earlier context AND the
+    chunk's own freshly written K/V.
+
+    ``start`` (scalar or (B,)) counts cache tokens present BEFORE the
+    chunk; query row i sits at absolute position ``start + i``.  Only the
+    first ``chunk_len`` rows are real (the chunk is right-padded to a
+    static bucket size); a key at position kp is visible to query row i iff
+        kp <= start + i  and  i < chunk_len        # causal over the cache
+     or kp < prefix_len                            # bidirectional prefix
+    and always kp < start + chunk_len (padding rows past the chunk hold
+    garbage).  Rows i >= chunk_len produce zeros — callers discard them.
+
+    q: (B, T, Hq, D) -> (B, T, Hq, D).  Transients are (T, S): bounded by
+    the serving arena's per-slot budget, so this stays materialized (it is
+    the CPU/XLA twin of ``chunk_prefill_attention_pallas``).
+    """
+    B, T, Hq, D = q.shape
+    _, S, Hkv, _ = k_cache.shape
+    G = Hq // Hkv
+    scale = softmax_scale if softmax_scale is not None else D ** -0.5
+    start = jnp.asarray(start, jnp.int32)
+    if start.ndim == 0:
+        start = jnp.full((B,), start)
+    chunk_len = jnp.asarray(chunk_len, jnp.int32)
+    if chunk_len.ndim == 0:
+        chunk_len = jnp.full((B,), chunk_len)
+    qpos = start[:, None] + jnp.arange(T)[None]          # (B, T)
+    kpos = jnp.arange(S)[None, None]                     # (1, 1, S)
+    ok = kpos <= qpos[..., None]
+    if prefix_len:
+        ok = ok | (kpos < prefix_len)
+    ok = ok & (kpos < (start + chunk_len)[:, None, None])
+    ok = ok & (jnp.arange(T)[None, :, None] < chunk_len[:, None, None])
+    qg = q.reshape(B, T, Hkv, G, D).astype(jnp.float32)
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    s = jnp.einsum("blhgd,bshd->bhgls", qg, kf) * scale
+    s = jnp.where(ok[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgls,bshd->blhgd", p, vf)
+    any_visible = ok.any(axis=-1)[:, :, None, None, None]
+    out = jnp.where(any_visible, out, 0.0)
+    return out.reshape(B, T, Hq, D).astype(q.dtype)
+
+
 def flash_attention_fwd_ref(q, k, v, *, causal=True, window=None,
                             prefix_len=0, q_offset=0, kv_len=None,
                             softmax_scale=None, q_chunk=512, k_chunk=512):

@@ -57,6 +57,15 @@ def main(argv=None) -> int:
     ap.add_argument("--max-seq-len", type=int, default=256,
                     help="per-slot token budget the paged arena is sized "
                          "for (prompt + max_new_tokens)")
+    ap.add_argument("--no-chunked-prefill", action="store_true",
+                    help="disable chunked piggybacked prefill (prompts "
+                         "then prefill in one shot at admission, stalling "
+                         "live decode slots and retracing per prompt "
+                         "length)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunk bucket size in tokens (0 = the plan's "
+                         "category-derived default: small for latency "
+                         "services, large for frequency services)")
     args = ap.parse_args(argv)
 
     arch_ids = [a.strip() for a in args.archs.split(",")]
@@ -89,9 +98,12 @@ def main(argv=None) -> int:
         cfg = cfgs[svc]
         params = model_api(cfg).init(jax.random.PRNGKey(hash(svc) % 2**31),
                                      cfg)
+        chunked = (None if not args.no_chunked_prefill else False)
         rt = ServiceRuntime(cfg, params, cp.plans[svc], mode=args.mode,
                             kvcache_impl=args.kvcache_impl,
-                            max_seq_len=args.max_seq_len)
+                            max_seq_len=args.max_seq_len,
+                            chunked_prefill=chunked,
+                            prefill_chunk=(args.prefill_chunk or None))
         engines[sid].deploy(svc, rt)
 
     # drive requests through handler -> engine
@@ -145,7 +157,12 @@ def main(argv=None) -> int:
           f"in {dt:.2f}s ({toks/dt:.1f} tok/s, {steps} fused decode steps, "
           f"mode={args.mode}, kvcache={args.kvcache_impl})  "
           f"outcomes={outcomes}")
-    print(f"data plane: {traces} decode compiles, {copies} whole-cache "
+    chunk_calls = sum(rt.prefill_chunk_calls for eng in engines.values()
+                      for rt in eng.runtimes.values())
+    pf_traces = sum(rt.prefill_traces for eng in engines.values()
+                    for rt in eng.runtimes.values())
+    print(f"data plane: {traces} decode compiles, {pf_traces} prefill "
+          f"compiles, {chunk_calls} prefill chunks, {copies} whole-cache "
           f"admission copies, {copy_mb:.2f} MB admission-copy bytes")
     return 0 if len(results) == args.requests else 1
 

@@ -172,6 +172,72 @@ def prefill(params, cfg: ModelConfig, batch: Dict[str, Any], *,
     return logits, cache
 
 
+def prefill_chunk(params, cfg: ModelConfig, batch, cache, *, chunk_len,
+                  impl=None):
+    """Chunked decoder prefill.  The FIRST chunk carries
+    ``batch["embeddings"]``: it runs the encoder once and projects the
+    cross-attention K/V into the cache's ``cross_k``/``cross_v`` rows;
+    later chunks reuse them (the encoder never re-runs).  Decoder self-
+    attention appends the chunk like ``transformer.prefill_chunk`` (no
+    rope — sinusoidal positions ride on the embeddings at the chunk's
+    absolute offset)."""
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    window = cfg.sliding_window
+    start = cache["len"]
+    startv = jnp.asarray(start, jnp.int32).reshape(-1) * jnp.ones(
+        (B,), jnp.int32)
+    h = layers.embed(params["embed"], cfg, tokens).astype(cfg.compute_dtype)
+    pos = (startv[:, None] + jnp.arange(T)[None]).reshape(-1)
+    h = h + layers.sinusoid_at(pos, cfg.d_model).reshape(
+        B, T, cfg.d_model).astype(h.dtype)
+    first = "embeddings" in batch
+    memory = (encode(params, cfg, batch["embeddings"], impl=impl)
+              if first else None)
+
+    def body(carry, xs):
+        x, k_all, v_all = carry
+        lp, i, ck, cv = xs
+        x = constrain_activation(x)
+        if first:                   # project this layer's cross K/V once
+            Lk = memory.shape[1]
+            ck = layers.linear(memory, lp["cross_attn"]["wk"],
+                               lp["cross_attn"].get("bk")).reshape(
+                B, Lk, cfg.num_kv_heads, cfg.head_dim).astype(ck.dtype)
+            cv = layers.linear(memory, lp["cross_attn"]["wv"],
+                               lp["cross_attn"].get("bv")).reshape(
+                B, Lk, cfg.num_kv_heads, cfg.head_dim).astype(cv.dtype)
+        kc = jax.lax.dynamic_index_in_dim(k_all, i, 0, keepdims=False)
+        vc = jax.lax.dynamic_index_in_dim(v_all, i, 0, keepdims=False)
+        xn = layers.apply_norm(lp["ln1"], cfg, x)
+        a, kc, vc = layers.attention_chunk(lp["self_attn"], cfg, xn, kc, vc,
+                                           startv, chunk_len, window=window,
+                                           use_rope=False, impl=impl)
+        x = x + a
+        xn = layers.apply_norm(lp["ln_x"], cfg, x)
+        q = layers.linear(xn, lp["cross_attn"]["wq"],
+                          lp["cross_attn"].get("bq")).reshape(
+            B, T, cfg.num_heads, cfg.head_dim)
+        c = ops.flash_attention(q, ck, cv, causal=False, impl=impl)
+        c = layers.linear(c.reshape(B, T, -1), lp["cross_attn"]["wo"])
+        x = x + c
+        x = x + layers.mlp(lp["mlp"], cfg,
+                           layers.apply_norm(lp["ln2"], cfg, x))
+        k_all = jax.lax.dynamic_update_index_in_dim(k_all, kc, i, 0)
+        v_all = jax.lax.dynamic_update_index_in_dim(v_all, vc, i, 0)
+        return (x, k_all, v_all), (ck, cv)
+
+    (h, k, v), (ck_all, cv_all) = jax.lax.scan(
+        body, (h, cache["k"], cache["v"]),
+        (params["dec_blocks"], jnp.arange(cfg.num_layers),
+         cache["cross_k"], cache["cross_v"]))
+    h = layers.take_chunk_last(h, chunk_len)
+    h = layers.apply_norm(params["ln_f"], cfg, h[:, None])[:, 0]
+    logits = logits_fn(params, cfg, h)
+    return logits, {"k": k, "v": v, "cross_k": ck_all, "cross_v": cv_all,
+                    "len": cache["len"] + chunk_len}
+
+
 def decode_step(params, cfg: ModelConfig, token, cache, impl=None):
     B = token.shape[0]
     window = cfg.sliding_window

@@ -95,6 +95,22 @@ def _shared_decode(shared, cfg: ModelConfig, h_t, h0_t, k_cache, v_cache,
     return h_t, k_cache, v_cache
 
 
+def _shared_chunk(shared, cfg: ModelConfig, h, h0, k_cache, v_cache,
+                  cache_len, chunk_len, *, window, impl=None):
+    """Chunked-prefill pass through the shared attention block (multi-token
+    sibling of ``_shared_decode``)."""
+    h = constrain_activation(h)
+    xcat = jnp.concatenate([h, h0], axis=-1)
+    xn = layers.apply_norm(shared["ln_a"], cfg, xcat)
+    a, k_cache, v_cache = layers.attention_chunk(
+        shared["attn"], cfg, xn, k_cache, v_cache, cache_len, chunk_len,
+        window=window, impl=impl)
+    h = h + a
+    h = h + layers.mlp(shared["mlp"], cfg,
+                       layers.apply_norm(shared["ln_m"], cfg, h))
+    return h, k_cache, v_cache
+
+
 # ---------------------------------------------------------------------------
 # model API
 # ---------------------------------------------------------------------------
@@ -181,6 +197,63 @@ def prefill(params, cfg: ModelConfig, batch: Dict[str, Any], *,
     cache = {"conv": conv, "ssd": ssd, "attn_k": ak, "attn_v": av,
              "len": jnp.asarray(L, jnp.int32)}
     return logits, cache
+
+
+def prefill_chunk(params, cfg: ModelConfig, batch, cache, *, chunk_len,
+                  impl=None):
+    """Chunked prefill: mamba layers advance their recurrent state via
+    ``ssm.mamba_block_chunk``; each shared-attention application appends
+    the chunk's K/V to its own cache row (same carry-DUS layout as
+    ``decode_step``, with a T-token block instead of one token)."""
+    tokens = batch["tokens"]
+    window = cfg.sliding_window
+    h0 = layers.embed(params["embed"], cfg, tokens).astype(cfg.compute_dtype)
+    napps, every = _n_apps(cfg), cfg.attn_every
+    n_head = napps * every
+    head, tail = _split_groups(cfg, params["mamba"])
+    start = cache["len"]
+
+    def mamba_body(carry, xs):
+        h, conv_all, ssd_all = carry
+        lp, i = xs
+        conv = jax.lax.dynamic_index_in_dim(conv_all, i, 0, keepdims=False)
+        ssd = jax.lax.dynamic_index_in_dim(ssd_all, i, 0, keepdims=False)
+        h, conv, ssd = ssm.mamba_block_chunk(lp, cfg, h, conv, ssd,
+                                             chunk_len, impl=impl)
+        conv_all = jax.lax.dynamic_update_index_in_dim(
+            conv_all, conv.astype(conv_all.dtype), i, 0)
+        ssd_all = jax.lax.dynamic_update_index_in_dim(
+            ssd_all, ssd.astype(ssd_all.dtype), i, 0)
+        return (h, conv_all, ssd_all), None
+
+    def group_body(carry, xs):
+        h, conv_all, ssd_all, k_all, v_all = carry
+        gp, g = xs
+        idx = g * every + jnp.arange(every)
+        (h, conv_all, ssd_all), _ = jax.lax.scan(
+            mamba_body, (h, conv_all, ssd_all), (gp, idx))
+        kc = jax.lax.dynamic_index_in_dim(k_all, g, 0, keepdims=False)
+        vc = jax.lax.dynamic_index_in_dim(v_all, g, 0, keepdims=False)
+        h, kc, vc = _shared_chunk(params["shared"], cfg, h, h0, kc, vc,
+                                  start, chunk_len, window=window,
+                                  impl=impl)
+        k_all = jax.lax.dynamic_update_index_in_dim(k_all, kc, g, 0)
+        v_all = jax.lax.dynamic_update_index_in_dim(v_all, vc, g, 0)
+        return (h, conv_all, ssd_all, k_all, v_all), None
+
+    carry0 = (h0, cache["conv"], cache["ssd"], cache["attn_k"],
+              cache["attn_v"])
+    (h, conv, ssd, ak, av), _ = jax.lax.scan(
+        group_body, carry0, (head, jnp.arange(napps)))
+    if _tail_layers(cfg):
+        tail_idx = n_head + jnp.arange(_tail_layers(cfg))
+        (h, conv, ssd), _ = jax.lax.scan(
+            mamba_body, (h, conv, ssd), (tail, tail_idx))
+    h = layers.take_chunk_last(h, chunk_len)
+    h = layers.apply_norm(params["ln_f"], cfg, h[:, None])[:, 0]
+    logits = logits_fn(params, cfg, h)
+    return logits, {"conv": conv, "ssd": ssd, "attn_k": ak, "attn_v": av,
+                    "len": cache["len"] + chunk_len}
 
 
 def decode_step(params, cfg: ModelConfig, token, cache, impl=None):

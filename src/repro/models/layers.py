@@ -214,12 +214,72 @@ def attention_decode(p, cfg: ModelConfig, x_t, k_cache, v_cache, cache_len, *,
     return linear(out, p["wo"]), k_cache, v_cache
 
 
+def attention_chunk(p, cfg: ModelConfig, x, k_cache, v_cache, cache_len,
+                    chunk_len, *, window=None, prefix_len=0, use_rope=True,
+                    impl=None):
+    """Chunked-prefill attention: append a block of T tokens to a cache
+    that already holds ``cache_len`` tokens (the piggybacked-prefill path).
+
+    x: (B, T, d) right-padded to the static bucket size T; only the first
+    ``chunk_len`` rows are real.  The chunk's K/V are written at positions
+    ``cache_len + i`` for i < chunk_len (padding rows target index S, which
+    the scatter drops), then the chunk queries attend causally over the
+    whole cache via ``ops.chunk_attention`` — so one trace serves every
+    (start, chunk_len) at a given bucket size.  Returns (out (B, T, d),
+    k_cache, v_cache); rows past ``chunk_len`` are garbage the caller
+    discards.
+    """
+    B, T, _ = x.shape
+    S = k_cache.shape[1]
+    if window is not None and S > window:
+        raise NotImplementedError(
+            "chunked prefill does not support ring (sliding-window) cache "
+            "layouts; the engine gates those to one-shot prefill")
+    q, k_t, v_t = _project_qkv(p, cfg, x)
+    cache_len = jnp.asarray(cache_len, jnp.int32)
+    if cache_len.ndim == 0:
+        cache_len = jnp.full((B,), cache_len)
+    chunk_len = jnp.asarray(chunk_len, jnp.int32)
+    if chunk_len.ndim == 0:
+        chunk_len = jnp.full((B,), chunk_len)
+    positions = cache_len[:, None] + jnp.arange(T)[None]      # (B, T)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k_t = rope(k_t, positions, cfg.rope_theta)
+    # scatter the chunk's K/V rows; padded rows index S and are dropped
+    idx = jnp.where(jnp.arange(T)[None] < chunk_len[:, None],
+                    positions, S)
+
+    def _insert(cache, i, t):
+        return cache.at[i].set(t)
+
+    k_cache = jax.vmap(_insert)(k_cache, idx, k_t.astype(k_cache.dtype))
+    v_cache = jax.vmap(_insert)(v_cache, idx, v_t.astype(v_cache.dtype))
+    out = ops.chunk_attention(q, k_cache, v_cache, cache_len, chunk_len,
+                              prefix_len=prefix_len, impl=impl)
+    out = out.reshape(B, T, cfg.num_heads * cfg.head_dim)
+    return linear(out, p["wo"]), k_cache, v_cache
+
+
 def cross_attention_decode(p, cfg: ModelConfig, x_t, memory, impl=None):
     """Decode-time cross attention against a fixed encoder memory."""
     B = x_t.shape[0]
     out, _ = attention(p, cfg, x_t[:, None], kv_x=memory, causal=False,
                        use_rope=False, impl=impl)
     return out[:, 0]
+
+
+def take_chunk_last(x, chunk_len):
+    """x: (B, T, ...) right-padded chunk activations -> the row at
+    ``chunk_len - 1`` per batch (the last REAL token's hidden state, whose
+    logits seed sampling when the chunk completes a prompt)."""
+    B, T = x.shape[:2]
+    cl = jnp.asarray(chunk_len, jnp.int32)
+    if cl.ndim == 0:
+        cl = jnp.full((B,), cl)
+    idx = jnp.clip(cl - 1, 0, T - 1).reshape(
+        (B, 1) + (1,) * (x.ndim - 2))
+    return jnp.take_along_axis(x, idx, axis=1)[:, 0]
 
 
 # ---------------------------------------------------------------------------

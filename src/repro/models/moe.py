@@ -200,6 +200,45 @@ def prefill(params, cfg: ModelConfig, batch: Dict[str, Any], *,
     return logits, {"k": k, "v": v, "len": jnp.asarray(L, jnp.int32)}
 
 
+def prefill_chunk(params, cfg: ModelConfig, batch, cache, *, chunk_len,
+                  impl=None):
+    """Chunked prefill (see ``transformer.prefill_chunk``).  The chunk is
+    its own MoE routing group: expert capacity scales with the bucket, not
+    the prompt, so per-token outputs match one-shot prefill exactly
+    whenever capacity is not binding (padding rows past ``chunk_len`` do
+    compete for capacity at tight ``moe_capacity_factor``)."""
+    tokens = batch["tokens"]
+    window = cfg.sliding_window
+    x = layers.embed(params["embed"], cfg, tokens).astype(cfg.compute_dtype)
+    start = cache["len"]
+
+    def body(carry, xs):
+        x, k_all, v_all = carry
+        lp, i = xs
+        x = constrain_activation(x)
+        kc = jax.lax.dynamic_index_in_dim(k_all, i, 0, keepdims=False)
+        vc = jax.lax.dynamic_index_in_dim(v_all, i, 0, keepdims=False)
+        xn = layers.apply_norm(lp["ln1"], cfg, x)
+        a, kc, vc = layers.attention_chunk(lp["attn"], cfg, xn, kc, vc,
+                                           start, chunk_len, window=window,
+                                           impl=impl)
+        x = x + a
+        m, _ = moe_mlp(lp["moe"], cfg,
+                       layers.apply_norm(lp["ln2"], cfg, x), impl=impl)
+        x = x + m
+        k_all = jax.lax.dynamic_update_index_in_dim(k_all, kc, i, 0)
+        v_all = jax.lax.dynamic_update_index_in_dim(v_all, vc, i, 0)
+        return (x, k_all, v_all), None
+
+    (x, k, v), _ = jax.lax.scan(
+        body, (x, cache["k"], cache["v"]),
+        (params["blocks"], jnp.arange(cfg.num_layers)))
+    h = layers.take_chunk_last(x, chunk_len)
+    h = layers.apply_norm(params["ln_f"], cfg, h[:, None])[:, 0]
+    logits = logits_fn(params, cfg, h)
+    return logits, {"k": k, "v": v, "len": cache["len"] + chunk_len}
+
+
 def _moe_mlp_single(p, cfg: ModelConfig, x_t, *, impl=None):
     """Decode-time MoE for a (B, d) token batch.
 

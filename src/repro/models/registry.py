@@ -19,22 +19,31 @@ class ModelApi:
     init_cache: Callable
     prefill: Callable
     decode_step: Callable
+    # chunked (piggybacked) prefill: append a right-padded token chunk to
+    # an existing cache — one trace per chunk bucket, not per prompt length
+    prefill_chunk: Callable
 
 
 _FAMILIES: Dict[str, ModelApi] = {
     "dense": ModelApi(transformer.init, transformer.forward_hidden,
                       transformer.logits_fn, transformer.init_cache,
-                      transformer.prefill, transformer.decode_step),
+                      transformer.prefill, transformer.decode_step,
+                      transformer.prefill_chunk),
     "moe": ModelApi(moe.init, moe.forward_hidden, moe.logits_fn,
-                    moe.init_cache, moe.prefill, moe.decode_step),
+                    moe.init_cache, moe.prefill, moe.decode_step,
+                    moe.prefill_chunk),
     "ssm": ModelApi(ssm.init, ssm.forward_hidden, ssm.logits_fn,
-                    ssm.init_cache, ssm.prefill, ssm.decode_step),
+                    ssm.init_cache, ssm.prefill, ssm.decode_step,
+                    ssm.prefill_chunk),
     "hybrid": ModelApi(hybrid.init, hybrid.forward_hidden, hybrid.logits_fn,
-                       hybrid.init_cache, hybrid.prefill, hybrid.decode_step),
+                       hybrid.init_cache, hybrid.prefill, hybrid.decode_step,
+                       hybrid.prefill_chunk),
     "audio": ModelApi(encdec.init, encdec.forward_hidden, encdec.logits_fn,
-                      encdec.init_cache, encdec.prefill, encdec.decode_step),
+                      encdec.init_cache, encdec.prefill, encdec.decode_step,
+                      encdec.prefill_chunk),
     "vlm": ModelApi(vlm.init, vlm.forward_hidden, vlm.logits_fn,
-                    vlm.init_cache, vlm.prefill, vlm.decode_step),
+                    vlm.init_cache, vlm.prefill, vlm.decode_step,
+                    vlm.prefill_chunk),
 }
 
 

@@ -106,6 +106,55 @@ def mamba_block(p, cfg: ModelConfig, x, *, initial_state=None,
     return x + out
 
 
+def mamba_block_chunk(p, cfg: ModelConfig, x, conv_state, ssd_state,
+                      chunk_len, *, impl=None):
+    """Chunked-prefill mamba block: advance one layer's recurrent state by
+    a right-padded chunk of ``chunk_len`` <= T tokens.
+
+    x: (B, T, d); conv_state: (B, k-1, ch) raw pre-conv tail; ssd_state:
+    (B, H, P, N).  Padding rows past ``chunk_len`` are made IDENTITY steps
+    by zeroing their dt (exp(A*0) = 1 keeps the SSD state, dt*x = 0 adds
+    nothing), and the new conv tail is gathered ending at the last REAL
+    token — so the returned state equals running exactly ``chunk_len``
+    steps.  Returns (out (B, T, d), conv_tail, ssd_state).
+    """
+    x = constrain_activation(x)
+    B, T, d = x.shape
+    di, G, N, H, P = (cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state,
+                      cfg.ssm_nheads, cfg.ssm_headdim)
+    k = cfg.ssm_conv_kernel
+    xn = layers.apply_norm(p["ln"], cfg, x)
+    zxbcdt = layers.linear(xn, p["in_proj"])
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    cl = jnp.asarray(chunk_len, jnp.int32)
+    if cl.ndim == 0:
+        cl = jnp.full((B,), cl)
+    # causal conv primed with the carried (k-1)-deep raw tail
+    padded = jnp.concatenate([conv_state.astype(xBC.dtype), xBC], axis=1)
+    y = sum(padded[:, i:i + T] * p["conv_w"][i][None, None]
+            for i in range(k))
+    xBC_conv = jax.nn.silu((y + p["conv_b"][None, None])
+                           .astype(jnp.float32)).astype(xBC.dtype)
+    xs = xBC_conv[..., :di].reshape(B, T, H, P)
+    Bm = xBC_conv[..., di:di + G * N].reshape(B, T, G, N)
+    Cm = xBC_conv[..., di + G * N:].reshape(B, T, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None])
+    valid = jnp.arange(T)[None] < cl[:, None]                 # (B, T)
+    dt = jnp.where(valid[..., None], dt, 0.0)
+    A = -jnp.exp(p["A_log"])
+    y, state = ops.ssd_scan(xs, dt, A, Bm, Cm, p["D"], chunk=cfg.ssm_chunk,
+                            initial_state=ssd_state, impl=impl)
+    y = y.reshape(B, T, di)
+    y = layers.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                        p["gate_ln"]["w"], cfg.rms_eps)
+    out = x + layers.linear(y, p["out_proj"])
+    # new raw tail: the k-1 positions ending at the last real token (the
+    # conv_state prefix covers chunks shorter than the kernel)
+    idx = cl[:, None] + jnp.arange(k - 1)[None]               # (B, k-1)
+    tail = jnp.take_along_axis(padded, idx[..., None], axis=1)
+    return out, tail, state
+
+
 def mamba_block_decode(p, cfg: ModelConfig, x_t, conv_state, ssd_state, *,
                        impl=None):
     """x_t: (B, d); conv_state: (B, k-1, ch); ssd_state: (B, H, P, N)."""
@@ -189,6 +238,37 @@ def prefill(params, cfg: ModelConfig, batch: Dict[str, Any], *,
     logits = logits_fn(params, cfg, h[:, 0])
     cache = {"conv": conv, "ssd": ssd, "len": jnp.asarray(L, jnp.int32)}
     return logits, cache
+
+
+def prefill_chunk(params, cfg: ModelConfig, batch, cache, *, chunk_len,
+                  impl=None):
+    """Chunked prefill: advance the conv/SSD state by one right-padded
+    chunk (see ``mamba_block_chunk``); chaining chunks matches one-shot
+    ``prefill`` because the recurrence is exact — padding steps are
+    identity and the conv tail tracks the last real token."""
+    tokens = batch["tokens"]
+    x = layers.embed(params["embed"], cfg, tokens).astype(cfg.compute_dtype)
+
+    def body(carry, xs):
+        x, conv_all, ssd_all = carry
+        lp, i = xs
+        conv = jax.lax.dynamic_index_in_dim(conv_all, i, 0, keepdims=False)
+        ssd = jax.lax.dynamic_index_in_dim(ssd_all, i, 0, keepdims=False)
+        x, conv, ssd = mamba_block_chunk(lp, cfg, x, conv, ssd, chunk_len,
+                                         impl=impl)
+        conv_all = jax.lax.dynamic_update_index_in_dim(
+            conv_all, conv.astype(conv_all.dtype), i, 0)
+        ssd_all = jax.lax.dynamic_update_index_in_dim(
+            ssd_all, ssd.astype(ssd_all.dtype), i, 0)
+        return (x, conv_all, ssd_all), None
+
+    (x, conv, ssd), _ = jax.lax.scan(
+        body, (x, cache["conv"], cache["ssd"]),
+        (params["blocks"], jnp.arange(cfg.num_layers)))
+    h = layers.take_chunk_last(x, chunk_len)
+    h = layers.apply_norm(params["ln_f"], cfg, h[:, None])[:, 0]
+    logits = logits_fn(params, cfg, h)
+    return logits, {"conv": conv, "ssd": ssd, "len": cache["len"] + chunk_len}
 
 
 def decode_step(params, cfg: ModelConfig, token, cache, impl=None):

@@ -68,6 +68,21 @@ def block_prefill(p, cfg: ModelConfig, x, *, positions, window, prefix_len,
     return x, (k, v)
 
 
+def block_prefill_chunk(p, cfg: ModelConfig, x, k_cache, v_cache, cache_len,
+                        chunk_len, *, window, prefix_len=0, impl=None):
+    """Chunked-prefill block: append a T-token chunk to one layer's cache
+    (per-slot ``cache_len``) and attend causally over everything written so
+    far.  The multi-token sibling of ``block_decode``."""
+    x = constrain_activation(x)
+    xn = layers.apply_norm(p["ln1"], cfg, x)
+    h, k_cache, v_cache = layers.attention_chunk(
+        p["attn"], cfg, xn, k_cache, v_cache, cache_len, chunk_len,
+        window=window, prefix_len=prefix_len, impl=impl)
+    x = x + h
+    x = x + layers.mlp(p["mlp"], cfg, layers.apply_norm(p["ln2"], cfg, x))
+    return x, k_cache, v_cache
+
+
 def block_decode(p, cfg: ModelConfig, x_t, k_cache, v_cache, cache_len, *,
                  window, impl=None):
     x_t = constrain_activation(x_t)
@@ -158,6 +173,44 @@ def prefill(params, cfg: ModelConfig, batch: Dict[str, Any], *,
     logits = logits_fn(params, cfg, h[:, 0])
     cache = {"k": k, "v": v, "len": jnp.asarray(L, jnp.int32)}
     return logits, cache
+
+
+def prefill_chunk(params, cfg: ModelConfig, batch, cache, *, chunk_len,
+                  impl=None):
+    """Chunked (piggybacked) prefill: append a right-padded chunk of
+    ``chunk_len`` <= T prompt tokens to an existing cache whose ``len``
+    counts tokens already written (0 for the first chunk).
+
+    Chaining chunks over a prompt is numerically equivalent to one-shot
+    ``prefill`` — same absolute rope positions, same causal visibility —
+    but every call runs at the STATIC bucket shape (B, T), so the serving
+    engine compiles one trace per chunk bucket instead of one per prompt
+    length.  Returns (logits at the chunk's last real token, new cache);
+    ``chunk_len`` may be a traced scalar.
+    """
+    tokens = batch["tokens"]
+    window = _window(cfg)
+    x = layers.embed(params["embed"], cfg, tokens).astype(cfg.compute_dtype)
+    start = cache["len"]
+
+    def body(carry, xs):
+        x, k_all, v_all = carry
+        lp, i = xs
+        kc = jax.lax.dynamic_index_in_dim(k_all, i, 0, keepdims=False)
+        vc = jax.lax.dynamic_index_in_dim(v_all, i, 0, keepdims=False)
+        x, kc, vc = block_prefill_chunk(lp, cfg, x, kc, vc, start,
+                                        chunk_len, window=window, impl=impl)
+        k_all = jax.lax.dynamic_update_index_in_dim(k_all, kc, i, 0)
+        v_all = jax.lax.dynamic_update_index_in_dim(v_all, vc, i, 0)
+        return (x, k_all, v_all), None
+
+    (x, k, v), _ = jax.lax.scan(
+        body, (x, cache["k"], cache["v"]),
+        (params["blocks"], jnp.arange(cfg.num_layers)))
+    h = layers.take_chunk_last(x, chunk_len)
+    h = layers.apply_norm(params["ln_f"], cfg, h[:, None])[:, 0]
+    logits = logits_fn(params, cfg, h)
+    return logits, {"k": k, "v": v, "len": cache["len"] + chunk_len}
 
 
 def decode_step(params, cfg: ModelConfig, token, cache, impl=None):

@@ -77,6 +77,47 @@ def prefill(params, cfg: ModelConfig, batch: Dict[str, Any], *,
     return logits, {"k": k, "v": v, "len": jnp.asarray(L, jnp.int32)}
 
 
+def prefill_chunk(params, cfg: ModelConfig, batch, cache, *, chunk_len,
+                  impl=None):
+    """Chunked prefill.  The FIRST chunk carries ``batch["embeddings"]``
+    and processes the whole image prefix together with the first text
+    bucket (prefix-LM bidirectionality makes the prefix indivisible:
+    prefix rows attend to later prefix rows, so the prefix cannot span a
+    chunk boundary).  Later chunks are plain causal text appends — every
+    cached position (prefix included) is attendable, as in decode."""
+    first = "embeddings" in batch
+    if first:
+        h = _concat_inputs(params, cfg, batch)     # (B, P + T, d)
+        prefix = cfg.prefix_len
+    else:
+        h = layers.embed(params["embed"], cfg,
+                         batch["tokens"]).astype(cfg.compute_dtype)
+        prefix = 0
+    eff_chunk = chunk_len + prefix                 # cache rows written
+    window = cfg.sliding_window
+    start = cache["len"]
+
+    def body(carry, xs):
+        x, k_all, v_all = carry
+        lp, i = xs
+        kc = jax.lax.dynamic_index_in_dim(k_all, i, 0, keepdims=False)
+        vc = jax.lax.dynamic_index_in_dim(v_all, i, 0, keepdims=False)
+        x, kc, vc = transformer.block_prefill_chunk(
+            lp, cfg, x, kc, vc, start, eff_chunk, window=window,
+            prefix_len=prefix, impl=impl)
+        k_all = jax.lax.dynamic_update_index_in_dim(k_all, kc, i, 0)
+        v_all = jax.lax.dynamic_update_index_in_dim(v_all, vc, i, 0)
+        return (x, k_all, v_all), None
+
+    (h, k, v), _ = jax.lax.scan(
+        body, (h, cache["k"], cache["v"]),
+        (params["blocks"], jnp.arange(cfg.num_layers)))
+    h = layers.take_chunk_last(h, eff_chunk)
+    h = layers.apply_norm(params["ln_f"], cfg, h[:, None])[:, 0]
+    logits = logits_fn(params, cfg, h)
+    return logits, {"k": k, "v": v, "len": cache["len"] + eff_chunk}
+
+
 # decode: after prefill every cached position is attendable by new tokens
 # (prefix bidirectionality only affects prefix-internal rows, which are
 # already baked into the cache), so dense decode semantics apply directly.

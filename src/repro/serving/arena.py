@@ -189,6 +189,14 @@ class KVArena:
         self._tables_dev = self._occ_dev = None
         return slot
 
+    def reset_len(self, slot: int) -> None:
+        """Zero a slot's device-side length.  Chunked admissions must call
+        this after ``alloc``: the first chunk reads its start offset from
+        ``lens`` (one-shot ``write_prefill`` overwrites it, chunk writes
+        only advance it — a recycled slot would otherwise resume at the
+        previous tenant's length)."""
+        self.lens = self.lens.at[slot].set(0)
+
     def free(self, slot: int) -> None:
         """Release a slot: pure free-list bookkeeping, zero device work."""
         if not self._occ[slot]:
@@ -229,6 +237,12 @@ class KVArena:
         blocks = self.blocks_for(max(1, prompt_len))
         return (blocks * self.block_size * self.token_bytes
                 + self.state_slot_bytes)
+
+    def chunk_bytes(self, n_tokens: int) -> int:
+        """Bytes one chunked-prefill call writes: exactly the chunk's
+        token rows (the multi-token ``append_rows`` scatter is row-
+        granular, not block-granular) plus the slot's fixed state row."""
+        return n_tokens * self.token_bytes + self.state_slot_bytes
 
     # ------------------------------------------------------------------
     # admission write path
@@ -295,19 +309,22 @@ class KVArena:
     def dense_view(self, pages: Sequence[jnp.ndarray],
                    block_tables: jnp.ndarray) -> List[jnp.ndarray]:
         """Gather each page pool through the block table into a contiguous
-        ``(layers, capacity, slot_tokens, ...)`` view — the dense-gather
-        path the engine currently uses on every backend.  The scalar-
-        prefetch Pallas kernel that reads K/V through the block table
-        WITHOUT materializing this view exists and is validated
-        (``kernels.decode_attention.paged_decode_attention_pallas``);
-        threading it through the families' decode steps is the ROADMAP
-        follow-up that makes this gather CPU-only."""
+        ``(layers, B, slot_tokens, ...)`` view (``B`` = the table's row
+        count: the full capacity for the fused decode step, a single row
+        for a chunked-prefill call) — the dense-gather path the engine
+        currently uses on every backend.  The scalar-prefetch Pallas
+        kernels that read K/V through the block table WITHOUT materializing
+        this view exist and are validated
+        (``kernels.decode_attention.paged_decode_attention_pallas`` /
+        ``paged_chunk_prefill_attention_pallas``); threading them through
+        the families' decode/chunk steps is the ROADMAP follow-up that
+        makes this gather CPU-only."""
+        B = block_tables.shape[0]
         out = []
         for p in pages:
             A0, _, bs, *rest = p.shape
-            g = p[:, block_tables]        # (A0, cap, nblk, bs, *rest)
-            out.append(g.reshape(A0, self.capacity, self.slot_tokens,
-                                 *rest))
+            g = p[:, block_tables]        # (A0, B, nblk, bs, *rest)
+            out.append(g.reshape(A0, B, self.slot_tokens, *rest))
         return out
 
     def assemble(self, dense: Sequence[jnp.ndarray],
@@ -336,25 +353,42 @@ class KVArena:
 
     def append_rows(self, pages: Sequence[jnp.ndarray],
                     dense_new: Sequence[jnp.ndarray], lens: jnp.ndarray,
-                    live: jnp.ndarray,
-                    block_tables: jnp.ndarray) -> List[jnp.ndarray]:
+                    live: jnp.ndarray, block_tables: jnp.ndarray, *,
+                    n_tokens: int = 1,
+                    valid_tokens: Optional[jnp.ndarray] = None
+                    ) -> List[jnp.ndarray]:
         """``arena.append``: write each live slot's newly produced cache
-        token back to its physical page (one row per slot, in place).
-        Dead/unoccupied slots route to the trash block, so the scatter is
-        branch-free and shape-stable."""
-        cap, bs = self.capacity, self.block_size
-        pos = jnp.clip(lens, 0, self.slot_tokens - 1)
-        blk = jnp.take_along_axis(block_tables, (pos // bs)[:, None],
-                                  axis=1)[:, 0]
+        tokens back to its physical pages, in place.
+
+        Generalizes from the fused decode step's single-token append
+        (``n_tokens=1``: one row per slot at position ``lens``) to the
+        chunked-prefill multi-token append: ``n_tokens`` consecutive rows
+        per slot starting at ``lens``, of which only the first
+        ``valid_tokens`` (per slot, defaults to all) are real — this is
+        ``write_prefill``'s offset/partial mode, keyed off the block table
+        so chunk starts need no block alignment.  Rows of dead slots and
+        padding rows past ``valid_tokens`` route to the trash block, so
+        the scatter stays branch-free and shape-stable.
+        """
+        cap = lens.shape[0]
+        bs = self.block_size
+        offs = jnp.arange(n_tokens)                       # (T,)
+        pos = jnp.clip(lens[:, None] + offs[None], 0,
+                       self.slot_tokens - 1)              # (cap, T)
+        blk = jnp.take_along_axis(block_tables, pos // bs, axis=1)
         flat = blk * bs + pos % bs
-        flat = jnp.where(live, flat, self.trash_block * bs)
+        ok = live[:, None]
+        if valid_tokens is not None:
+            ok = ok & (offs[None] < valid_tokens[:, None])
+        flat = jnp.where(ok, flat, self.trash_block * bs).reshape(-1)
         out = []
         for p, d in zip(pages, dense_new):
             A0, P1, _, *rest = p.shape
-            idx = pos.reshape(1, cap, 1, *([1] * len(rest)))
-            row = jnp.take_along_axis(d, idx, axis=2)[:, :, 0]
+            idx = pos.reshape(1, cap, n_tokens, *([1] * len(rest)))
+            row = jnp.take_along_axis(d, idx, axis=2)     # (A0, cap, T, ...)
             pf = p.reshape(A0, P1 * bs, *rest)
-            pf = pf.at[:, flat].set(row.astype(p.dtype))
+            pf = pf.at[:, flat].set(
+                row.reshape(A0, cap * n_tokens, *rest).astype(p.dtype))
             out.append(pf.reshape(p.shape))
         return out
 

@@ -34,6 +34,13 @@ class QueuedItem:
     rid: int = 0
 
 
+def _prefill_cost(item: QueuedItem) -> int:
+    """Prompt tokens one queued item brings to the chunked-prefill phase
+    (0 for payloads without a token prompt, e.g. simulator stand-ins)."""
+    toks = getattr(item.payload, "tokens", None)
+    return 0 if toks is None else len(toks)
+
+
 @dataclasses.dataclass
 class ComposedBatch:
     items: List[QueuedItem]
@@ -63,6 +70,8 @@ class Composer(Protocol):
                 max_wait_s: float = float("inf")
                 ) -> Optional[ComposedBatch]: ...
 
+    def pending_prefill_tokens(self) -> int: ...
+
 
 def _frame_counts(items: List[QueuedItem]) -> Dict[int, int]:
     counts: Dict[int, int] = {}
@@ -86,6 +95,11 @@ class BSComposer:
 
     def __len__(self) -> int:
         return len(self.queue)
+
+    def pending_prefill_tokens(self) -> int:
+        """Queued prompt tokens — the chunked-prefill backlog the engine
+        folds into its queue-time estimate."""
+        return sum(_prefill_cost(it) for it in self.queue)
 
     def compose(self, *, limit: Optional[int] = None, now: float = 0.0,
                 max_wait_s: float = float("inf")
@@ -123,6 +137,10 @@ class MFComposer:
 
     def __len__(self) -> int:
         return sum(len(q) for q in self.streams.values())
+
+    def pending_prefill_tokens(self) -> int:
+        return sum(_prefill_cost(it) for q in self.streams.values()
+                   for it in q)
 
     def compose(self, *, limit: Optional[int] = None, now: float = 0.0,
                 max_wait_s: float = float("inf")

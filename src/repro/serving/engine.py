@@ -7,9 +7,14 @@ decode slots per group; each ``step()``:
 
   (a) **evicts** slots whose request hit EOS or its own ``max_new_tokens``,
   (b) **admits** queued requests from the BS/MF composer into the freed
-      slots (``compose(limit=free)``), prefilling each admission on its
-      own — no cross-request padding,
-  (c) runs **one fused decode step** for every occupied slot, with
+      slots (``compose(limit=free)``),
+  (b2) advances **chunked prefill**: in-progress prompts are split into
+      fixed bucket-sized chunks written straight through the arena's block
+      tables, at most ``prefill_chunk`` tokens per group per step — so a
+      long prompt never stalls live decode slots for more than one chunk
+      (head-of-line isolation), and prefill compiles once per chunk
+      BUCKET instead of once per prompt length,
+  (c) runs **one fused decode step** for every decoding slot, with
       per-slot ``len`` vectors (the decode kernels mask per-batch
       ``cache_len``) and sampling masked by occupancy.
 
@@ -105,34 +110,61 @@ class StepStats:
     whole_cache_copies: int = 0      # live-batch copies this step (dense
     #                                  merge or select_slots compaction)
     decode_steps: int = 0            # fused decode invocations this step
+    prefill_chunk_tokens: int = 0    # prompt tokens prefilled this step by
+    #                                  the piggybacked chunk phase
 
 
 class _Slot:
     """One in-flight request occupying a decode slot.  Under the paged
     arena, ``slot_id`` is the request's arena slot handle (its row in the
     block table); under the dense impl it is the position in the group's
-    compacted cache batch axis."""
+    compacted cache batch axis.
+
+    A slot admitted through the chunked-prefill path starts with
+    ``first_token=None``: it holds its arena slot while ``consumed``
+    prompt tokens are written chunk by chunk, and flips into decoding via
+    ``begin_decode`` when the final chunk's logits yield the first token.
+    """
     __slots__ = ("req", "emitted", "done", "prefill_s", "admit_wall",
                  "decode_start_wall", "finish_wall", "admitted_s", "steps",
-                 "slot_id")
+                 "slot_id", "prefilling", "consumed")
 
-    def __init__(self, req: GenerationRequest, first_token: int,
+    def __init__(self, req: GenerationRequest, first_token: Optional[int],
                  prefill_s: float, admit_wall: float, admitted_s: float,
-                 slot_id: int = -1):
+                 slot_id: int = -1,
+                 decode_start_wall: Optional[float] = None):
         self.req = req
-        self.emitted: List[int] = [first_token]
         self.prefill_s = prefill_s
         self.admit_wall = admit_wall
-        self.decode_start_wall = admit_wall + prefill_s
         self.finish_wall = 0.0
         self.admitted_s = admitted_s
         self.steps = 0
         self.slot_id = slot_id
-        self.done = (len(self.emitted) >= req.max_new_tokens
-                     or (req.eos_token is not None
-                         and first_token == req.eos_token))
+        self.consumed = 0                   # prompt tokens prefilled so far
+        if first_token is None:             # chunked prefill in progress
+            self.prefilling = True
+            self.emitted: List[int] = []
+            self.done = False
+            self.decode_start_wall = admit_wall
+        else:
+            self.begin_decode(first_token,
+                              admit_wall + prefill_s
+                              if decode_start_wall is None
+                              else decode_start_wall)
+
+    def begin_decode(self, first_token: int, wall: float) -> None:
+        """First token sampled: prefill COMPLETED at ``wall``.  Decode
+        timing starts here — under chunking that is several steps after
+        admission, so ``GenerationResult.decode_s`` stays truthful instead
+        of silently absorbing the chunked prefill's wall time."""
+        self.prefilling = False
+        self.emitted = [first_token]
+        self.decode_start_wall = wall
+        self.done = (len(self.emitted) >= self.req.max_new_tokens
+                     or (self.req.eos_token is not None
+                         and first_token == self.req.eos_token))
         if self.done:
-            self.finish_wall = self.decode_start_wall
+            self.finish_wall = wall
 
     def push(self, token: int) -> None:
         self.emitted.append(token)
@@ -171,6 +203,8 @@ class ServiceRuntime:
                  max_seq_len: int = DEFAULT_MAX_SEQ_LEN,
                  block_size: int = DEFAULT_BLOCK_SIZE,
                  pool_blocks: Optional[int] = None,
+                 chunked_prefill: Optional[bool] = None,
+                 prefill_chunk: Optional[int] = None,
                  on_evict: Optional[Callable] = None):
         if mode not in ("continuous", "sync"):
             raise ValueError(f"mode must be continuous|sync, got {mode!r}")
@@ -198,9 +232,36 @@ class ServiceRuntime:
         self.prefill_traces = 0
         self.admission_copy_bytes = 0
         self.whole_cache_copies = 0  # admissions that copied the live batch
+        self.prefill_chunk_calls = 0  # chunk invocations (all groups)
         self._session_refs: Dict[int, int] = {}
         self._service_ewma_s = 0.0   # EWMA of per-request service time
         self._paged_decode_fn = None
+        self._chunk_fns: Dict[Any, Callable] = {}
+
+        # -- chunked (piggybacked) prefill configuration ------------------
+        # ring (sliding-window) cache layouts wrap positions mod the
+        # window, which the linear chunk writes do not model — those
+        # configs keep the one-shot admission prefill
+        ring = (cfg.sliding_window is not None
+                and cfg.sliding_window < self.slot_token_budget)
+        if chunked_prefill is None:
+            chunked_prefill = (mode == "continuous"
+                               and kvcache_impl == "paged" and not ring)
+        elif chunked_prefill:
+            if mode != "continuous" or kvcache_impl != "paged":
+                raise ValueError("chunked_prefill requires "
+                                 "mode='continuous' + kvcache_impl='paged'")
+            if ring:
+                raise ValueError("chunked_prefill does not support ring "
+                                 "(sliding-window) cache layouts")
+        self.chunked_prefill = bool(chunked_prefill)
+        chunk = (prefill_chunk if prefill_chunk is not None
+                 else plan.prefill_chunk_tokens(block_size))
+        # per-step prefill token budget per group = the category's chunk
+        # size, rounded to blocks and capped by the slot budget
+        chunk = max(block_size, -(-int(chunk) // block_size) * block_size)
+        self.prefill_chunk_tokens = min(chunk, self.slot_token_budget)
+        self.chunk_buckets = self._derive_buckets(self.prefill_chunk_tokens)
         api = self.api
 
         if prefill_fn is None:
@@ -224,6 +285,35 @@ class ServiceRuntime:
         must fit."""
         blocks = max(1, -(-self.max_seq_len // self.block_size))
         return blocks * self.block_size
+
+    def _derive_buckets(self, chunk: int):
+        """Static chunk shapes the engine compiles: power-of-two multiples
+        of ``block_size`` up to the category's chunk size.  The smallest
+        bucket is always one block, so a final partial chunk never
+        overshoots the slot budget."""
+        buckets, b = [], self.block_size
+        while b < chunk:
+            buckets.append(b)
+            b *= 2
+        buckets.append(chunk)
+        return tuple(sorted(set(buckets)))
+
+    def _pick_bucket(self, remaining: int,
+                     budget: Optional[int] = None) -> Optional[int]:
+        """Largest bucket that fits the remaining prompt, else the
+        smallest (one-block) bucket for the final partial chunk — never
+        exceeding the step's remaining token ``budget`` (None when the
+        budget cannot afford even the smallest bucket: the caller defers
+        the chunk to the next step, keeping the per-step prefill spend at
+        or under ``prefill_chunk`` tokens)."""
+        affordable = (self.chunk_buckets if budget is None else
+                      [b for b in self.chunk_buckets if b <= budget])
+        if not affordable:
+            return None
+        for b in reversed(affordable):
+            if b <= remaining:
+                return b
+        return affordable[0]
 
     # -- queue ------------------------------------------------------------
     def submit(self, req: GenerationRequest, now: float = 0.0) -> None:
@@ -303,11 +393,29 @@ class ServiceRuntime:
     def queue_time_estimate(self) -> float:
         """Expected wait before a newly queued request starts decoding —
         the handler's queue-time feedback signal (Eq. 1 exclusion uses
-        it to skip backlogged peers)."""
+        it to skip backlogged peers).  Under chunked prefill the queued
+        PROMPT TOKENS matter too: the (b2) phase drains at most one chunk
+        budget per group per step, so a prompt-heavy queue is priced as
+        the extra request-waves those chunks occupy."""
         if self._service_ewma_s <= 0.0:
             return 0.0
         waves = self.pending() / max(1, self.total_slots())
+        if self.chunked_prefill and self.prefill_chunk_tokens > 0:
+            # queued prompts PLUS admitted-but-unconsumed ones: a long
+            # prompt leaves the composer at alloc time but keeps eating
+            # (b2) budget until its last chunk lands
+            backlog = (self.composer.pending_prefill_tokens()
+                       + self._unconsumed_prompt_tokens())
+            chunk_steps = backlog / (self.prefill_chunk_tokens
+                                     * max(1, len(self.groups)))
+            waves += chunk_steps / max(1, self.total_slots())
         return waves * self._service_ewma_s
+
+    def _unconsumed_prompt_tokens(self) -> int:
+        """Prompt tokens of in-flight slots still awaiting their chunks."""
+        return sum(len(s.req.tokens) - s.consumed
+                   for g in self.groups.values() for s in g.slots
+                   if s.prefilling)
 
     # ------------------------------------------------------------------
     # continuous mode: slot admit / fused decode / evict
@@ -361,11 +469,12 @@ class ServiceRuntime:
 
     def _admit_one(self, req: GenerationRequest, group: int,
                    state: _GroupState, now: float) -> bool:
-        """(b) Prefill one admission on its own (no cross-request padding)
-        and attach its cache to the group's live batch.  Paged: scatter
-        the request's pages into its arena slot — the live batch is
-        untouched.  Dense: kvcache.merge re-materializes everything.
-        Returns False when the arena is out of blocks (caller requeues)."""
+        """(b) Claim a slot for one admission.  Chunked paged: just an
+        arena ``alloc`` — the prompt is prefilled chunk by chunk in the
+        (b2) phase, so admission itself never stalls the step.  Unchunked
+        paged: one-shot prefill + page scatter.  Dense: one-shot prefill +
+        kvcache.merge (re-materializes everything).  Returns False when
+        the arena is out of blocks (caller requeues)."""
         extra = self._extra_cache_tokens()
         if self.kvcache_impl == "paged":
             arena = self._ensure_arena(state)
@@ -376,6 +485,13 @@ class ServiceRuntime:
                     f"budget {arena.slot_tokens}; raise max_seq_len")
             if not arena.can_alloc(total):
                 return False
+            if self.chunked_prefill:
+                slot_id = arena.alloc(total)
+                arena.reset_len(slot_id)
+                state.slots.append(_Slot(req, None, prefill_s=0.0,
+                                         admit_wall=time.perf_counter(),
+                                         admitted_s=now, slot_id=slot_id))
+                return True
             # cache_size is budgeted in text tokens; family extras (VLM
             # prefix) ride along so the model-built cache lands exactly on
             # the arena's slot_tokens sequence axis
@@ -408,7 +524,7 @@ class ServiceRuntime:
                 state.cache = kvcache.merge([state.cache, cache])
         state.slots.append(_Slot(req, first, prefill_s=t1 - t0,
                                  admit_wall=t0, admitted_s=now,
-                                 slot_id=slot_id))
+                                 slot_id=slot_id, decode_start_wall=t1))
         return True
 
     def _route_admission(self, item: QueuedItem) -> Optional[int]:
@@ -445,6 +561,111 @@ class ServiceRuntime:
             self.composer.push_front(item)
         return admitted
 
+    # -- chunked piggybacked prefill (paged arena only) -----------------
+    def _build_chunk_fn(self, arena: KVArena, T: int, with_emb: bool):
+        """One jitted chunk step per (bucket, first-chunk) shape: gather
+        the slot's dense cache view through its block-table row, run the
+        family's ``prefill_chunk`` at the static bucket width, and scatter
+        exactly the written token rows back into the pages (the multi-
+        token ``append_rows`` — ``write_prefill``'s offset/partial mode)."""
+        api, cfg, impl = self.api, self.cfg, self._impl
+        # cache rows one call writes: the text bucket, plus the VLM image
+        # prefix that rides along with the first chunk
+        n_rows = T + (cfg.prefix_len
+                      if with_emb and cfg.family == "vlm" else 0)
+
+        def _chunk(params, tokens, emb, pages, state, lens, slot, bt_row,
+                   n_valid):
+            self.prefill_traces += 1     # runs at trace time only
+            dense = arena.dense_view(pages, bt_row[None])
+            start = lens[slot]
+            # a FIRST chunk (start == 0, set by reset_len at admission)
+            # must see freshly initialized per-slot state, not the slot's
+            # previous tenant's conv/SSD/cross leftovers
+            slot_state = [jnp.where(start > 0, s[:, slot],
+                                    jnp.zeros_like(s[:, slot]))[:, None]
+                          for s in state]
+            cache = arena.assemble(dense, slot_state, start[None])
+            batch = {"tokens": tokens}
+            if emb is not None:
+                batch["embeddings"] = emb
+            logits, new_cache = api.prefill_chunk(params, cfg, batch, cache,
+                                                  chunk_len=n_valid,
+                                                  impl=impl)
+            new_dense, new_state = arena.disassemble(new_cache)
+            new_len = jnp.asarray(kvcache.lens(new_cache),
+                                  jnp.int32).reshape(-1)[0]
+            pages = arena.append_rows(
+                pages, new_dense, start[None], jnp.ones((1,), bool),
+                bt_row[None], n_tokens=n_rows,
+                valid_tokens=(new_len - start)[None])
+            state = [s.at[:, slot].set(ns[:, 0].astype(s.dtype))
+                     for s, ns in zip(state, new_state)]
+            return logits, pages, state, lens.at[slot].set(new_len)
+
+        return jax.jit(_chunk, donate_argnums=arena._donate_argnums((3, 4,
+                                                                     5)))
+
+    def _run_chunk(self, arena: KVArena, s: _Slot, T: int) -> Any:
+        """Advance one slot's prefill by one ``T``-bucket chunk; returns
+        the chunk's logits (only the final chunk's are consumed)."""
+        rem = len(s.req.tokens) - s.consumed
+        n_valid = min(rem, T)
+        toks = np.zeros((1, T), np.int32)
+        toks[0, :n_valid] = s.req.tokens[s.consumed:s.consumed + n_valid]
+        with_emb = (s.consumed == 0
+                    and self.cfg.family in ("audio", "vlm"))
+        emb = None
+        if with_emb:
+            emb = jnp.asarray(np.asarray(s.req.extras["embeddings"])[None])
+        fn = self._chunk_fns.get((T, with_emb))
+        if fn is None:
+            fn = self._build_chunk_fn(arena, T, with_emb)
+            self._chunk_fns[(T, with_emb)] = fn
+        logits, arena.pages, arena.state, arena.lens = fn(
+            self.params, jnp.asarray(toks), emb, arena.pages, arena.state,
+            arena.lens, jnp.asarray(s.slot_id, jnp.int32),
+            jnp.asarray(arena._block_tables[s.slot_id], jnp.int32),
+            jnp.asarray(n_valid, jnp.int32))
+        s.consumed += n_valid
+        self.prefill_chunk_calls += 1
+        rows = n_valid + (self.cfg.prefix_len
+                          if with_emb and self.cfg.family == "vlm" else 0)
+        self.admission_copy_bytes += arena.chunk_bytes(rows)
+        return logits, n_valid, T
+
+    def _prefill_chunks(self, state: _GroupState) -> int:
+        """(b2) Advance in-progress prefills, at most ``prefill_chunk``
+        tokens per group per step — the piggyback budget that bounds how
+        long the step's fused decode can be delayed by prompt work.  The
+        final chunk's logits seed the request's first sampled token."""
+        if state.arena is None or not self.chunked_prefill:
+            return 0
+        budget = self.prefill_chunk_tokens
+        done_tokens = 0
+        for s in state.slots:
+            if budget <= 0:
+                break
+            while s.prefilling and budget > 0:
+                T = self._pick_bucket(len(s.req.tokens) - s.consumed,
+                                      budget)
+                if T is None:        # budget can't afford another bucket
+                    budget = 0
+                    break
+                t0 = time.perf_counter()
+                logits, n_valid, T = self._run_chunk(state.arena, s, T)
+                budget -= T
+                done_tokens += n_valid
+                if s.consumed >= len(s.req.tokens):
+                    first = int(np.asarray(self._sample(logits))[0])
+                    t1 = time.perf_counter()
+                    s.prefill_s += t1 - t0
+                    s.begin_decode(first, t1)
+                else:
+                    jax.block_until_ready(logits)
+                    s.prefill_s += time.perf_counter() - t0
+        return done_tokens
+
     # -- fused decode: paged arena path ---------------------------------
     def _build_paged_decode_fn(self, arena: KVArena):
         api, cfg, impl = self.api, self.cfg, self._impl
@@ -473,11 +694,11 @@ class ServiceRuntime:
         tokens = np.zeros((cap,), np.int32)
         live = np.zeros((cap,), bool)
         for s in state.slots:
-            if not s.done:
+            if not s.done and not s.prefilling:
                 tokens[s.slot_id] = s.emitted[-1]
                 live[s.slot_id] = True
         if not live.any():
-            return               # everything awaits eviction
+            return               # everything awaits eviction or prefill
         if self._paged_decode_fn is None:
             self._paged_decode_fn = self._build_paged_decode_fn(arena)
         live_dev = jnp.asarray(live)
@@ -489,7 +710,7 @@ class ServiceRuntime:
                                        occupancy=arena.device_occupancy()))
         self.decode_steps += 1
         for slot in state.slots:
-            if slot.done:
+            if slot.done or slot.prefilling:
                 continue
             slot.steps += 1
             slot.push(int(toks[slot.slot_id]))
@@ -526,7 +747,9 @@ class ServiceRuntime:
         for group, state in self.groups.items():
             results.extend(self._evict(group, state, now))
         admitted = self._admit(now, max_wait_s)
+        chunk_tokens = 0
         for state in self.groups.values():
+            chunk_tokens += self._prefill_chunks(state)
             self._decode_group(state)
         return StepStats(
             results=results, now=now, admitted=admitted,
@@ -535,7 +758,8 @@ class ServiceRuntime:
             queue_time_s=self.queue_time_estimate(),
             admission_copy_bytes=self.admission_copy_bytes - copy0,
             whole_cache_copies=self.whole_cache_copies - whole0,
-            decode_steps=self.decode_steps - steps0)
+            decode_steps=self.decode_steps - steps0,
+            prefill_chunk_tokens=chunk_tokens)
 
     # ------------------------------------------------------------------
     # sync mode: run-to-completion batches (the pre-slot baseline)
@@ -605,11 +829,13 @@ class ServiceRuntime:
         """Step until queue and slots are empty; returns all results."""
         out: List[GenerationResult] = []
         while self.pending() or self.in_flight():
-            before = (self.pending(), self.in_flight(), self.decode_steps)
+            before = (self.pending(), self.in_flight(), self.decode_steps,
+                      self.prefill_chunk_calls)
             stats = self.step(now=now, max_wait_s=max_wait_s)
             out.extend(stats.results)
-            if (self.pending(), self.in_flight(),
-                    self.decode_steps) == before and not stats.results:
+            if (self.pending(), self.in_flight(), self.decode_steps,
+                    self.prefill_chunk_calls) == before \
+                    and not stats.results:
                 break            # no progress possible (e.g. empty compose)
         return out
 
@@ -666,7 +892,8 @@ class EparaServingEngine:
                 out.extend(stats.results)
                 if on_stats is not None:
                     on_stats(name, stats)
-                if stats.results or stats.admitted or stats.decode_steps:
+                if (stats.results or stats.admitted or stats.decode_steps
+                        or stats.prefill_chunk_tokens):
                     progress = True
         self._results.extend(out)
         return out

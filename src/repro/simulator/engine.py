@@ -53,6 +53,18 @@ class SimConfig:
     serving_mode: str = "paged"
     sync_flush_s: float = 0.05
     admission_copy_s: float = 0.0
+    # chunked-prefill cost model (paged/continuous latency service): an
+    # admission's prompt costs ``prompt_tokens * prefill_token_s`` of
+    # serial prefill work.  Unchunked (prefill_chunk_tokens = 0) the WHOLE
+    # prompt stalls the service's virtual queue in one piece — every live
+    # request behind it waits (head-of-line blocking).  Chunked, the stall
+    # imposed on the shared queue is capped at one chunk
+    # (``min(prompt, chunk) * prefill_token_s``): the remaining chunks
+    # interleave with decode steps, so only the arriving request itself
+    # pays for them.  Placement sees the effect through goodput/queue
+    # delay; ``SimResult.max_prefill_stall_s`` reports the worst stall.
+    prefill_chunk_tokens: int = 0
+    prefill_token_s: float = 0.0
 
 
 @dataclasses.dataclass
@@ -66,6 +78,8 @@ class SimResult:
     handled: int
 
     first_hops: int = 1
+    max_prefill_stall_s: float = 0.0   # worst single-admission prefill
+    #                                    stall imposed on live requests
 
     @property
     def mean_offloads(self) -> float:
@@ -115,6 +129,7 @@ class Simulation:
         self._offload_counts: List[int] = []
         self._handled = 0
         self._first_hops = 0
+        self._max_prefill_stall = 0.0
         self.placements: List[Tuple[str, int]] = []
 
     # ------------------------------------------------------------------
@@ -211,7 +226,8 @@ class Simulation:
             fulfillment=self.meter.fulfillment_ratio,
             violations=self.meter.violations,
             offload_counts=self._offload_counts,
-            handled=self._handled, first_hops=max(1, self._first_hops))
+            handled=self._handled, first_hops=max(1, self._first_hops),
+            max_prefill_stall_s=self._max_prefill_stall)
 
     # ------------------------------------------------------------------
     def _handle(self, req: Request, sid: int, now: float, push) -> None:
@@ -287,11 +303,27 @@ class Simulation:
             vf += 1.0 / eff_cap
             if self.cfg.serving_mode == "continuous":
                 vf += self.cfg.admission_copy_s
+            # chunked-prefill model: the prompt's prefill is serial work.
+            # Unchunked it lands on the SHARED virtual queue in one piece
+            # (head-of-line blocking: every later finish waits); chunked,
+            # only one chunk's worth stalls the queue — the rest
+            # interleaves with decode, so only this request's own finish
+            # pays for it.
+            prefill_s = req.prompt_tokens * self.cfg.prefill_token_s
+            stall = prefill_s
+            if prefill_s > 0:
+                chunk = self.cfg.prefill_chunk_tokens
+                if chunk > 0:
+                    stall = (min(req.prompt_tokens, chunk)
+                             * self.cfg.prefill_token_s)
+                vf += stall
+                self._max_prefill_stall = max(self._max_prefill_stall,
+                                              stall)
             st.vf[req.service] = vf
             base = cm.effective_latency(svc, self.servers[0].gpu,
                                         batch=plan.bs, mp=plan.mp,
                                         mt=plan.mt, mf=plan.mf) / plan.bs
-            finish = vf + base
+            finish = vf + base + (prefill_s - stall)
             push(finish, "done", (req, finish))
 
     def _dispatch_batch(self, sid: int, service: str, now: float,

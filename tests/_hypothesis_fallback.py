@@ -68,11 +68,34 @@ def just(value):
     return _Strategy(lambda rng: value)
 
 
-def settings(max_examples=_DEFAULT_MAX_EXAMPLES, **_kw):
+_PROFILES = {}
+_ACTIVE_PROFILE = {}
+
+
+def settings(max_examples=None, **_kw):
     def deco(fn):
-        fn._fallback_max_examples = max_examples
+        n = max_examples
+        if n is None:
+            n = _ACTIVE_PROFILE.get("max_examples", _DEFAULT_MAX_EXAMPLES)
+        fn._fallback_max_examples = n
         return fn
     return deco
+
+
+def _register_profile(name, max_examples=_DEFAULT_MAX_EXAMPLES, **kw):
+    """Shim twin of ``hypothesis.settings.register_profile`` — only
+    ``max_examples`` is honored (the shim is already deterministic, so
+    ``derandomize``/``print_blob`` are no-ops)."""
+    _PROFILES[name] = dict(max_examples=max_examples, **kw)
+
+
+def _load_profile(name):
+    _ACTIVE_PROFILE.clear()
+    _ACTIVE_PROFILE.update(_PROFILES.get(name, {}))
+
+
+settings.register_profile = _register_profile
+settings.load_profile = _load_profile
 
 
 def given(*args, **strategies):

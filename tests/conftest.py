@@ -1,6 +1,8 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here on purpose — tests and benches
 run with the real single CPU device; only launch/dryrun.py forces 512
 placeholder devices (and only in its own process)."""
+import os
+
 import jax
 import numpy as np
 import pytest
@@ -10,6 +12,19 @@ try:  # hypothesis is optional: fall back to a deterministic shim so the
 except ImportError:
     from _hypothesis_fallback import install as _install_hypothesis_fallback
     _install_hypothesis_fallback()
+
+# property-test profiles: "ci" = more examples on a fixed seed (the CI
+# hypothesis job), "dev" = the default budget.  Select via
+# HYPOTHESIS_PROFILE; tests that hardcode max_examples keep their own
+# budget (hypothesis semantics), so the long-running engine property
+# tests read CHUNKED_PREFILL_EXAMPLES directly.
+from hypothesis import settings as _hsettings
+
+_hsettings.register_profile("ci", max_examples=25, deadline=None,
+                            derandomize=True)
+_hsettings.register_profile("dev", max_examples=10, deadline=None)
+if os.environ.get("HYPOTHESIS_PROFILE"):
+    _hsettings.load_profile(os.environ["HYPOTHESIS_PROFILE"])
 
 jax.config.update("jax_enable_x64", False)
 

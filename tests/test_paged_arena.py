@@ -136,6 +136,34 @@ def test_retrace_regression_paged_compiles_once(dense_cfg):
     assert rt.whole_cache_copies == 0
 
 
+def test_chunked_prefill_bounded_compiles(dense_cfg):
+    """Retrace regression: submitting prompts of MANY distinct lengths
+    triggers at most ``len(chunk_buckets)`` prefill compiles and exactly 1
+    decode compile — the unchunked path would trace one prefill per padded
+    prompt length."""
+    params = T.init(jax.random.PRNGKey(0), dense_cfg)
+    rt = _runtime(dense_cfg, params, bs=2)
+    assert rt.chunked_prefill
+    for i, plen in enumerate(range(1, 21)):     # 20 distinct prompt lengths
+        rt.submit(GenerationRequest(
+            rid=i, tokens=np.arange(1, plen + 1, dtype=np.int32),
+            max_new_tokens=2))
+    res = rt.drain()
+    assert len(res) == 20
+    assert rt.prefill_traces <= len(rt.chunk_buckets), \
+        (rt.prefill_traces, rt.chunk_buckets)
+    assert rt.decode_traces == 1, rt.decode_traces
+
+    # the unchunked baseline really does retrace per prompt length
+    rt2 = _runtime(dense_cfg, params, bs=2, chunked_prefill=False)
+    for i, plen in enumerate(range(1, 21)):
+        rt2.submit(GenerationRequest(
+            rid=i, tokens=np.arange(1, plen + 1, dtype=np.int32),
+            max_new_tokens=2))
+    rt2.drain()
+    assert rt2.prefill_traces > len(rt.chunk_buckets)
+
+
 def test_dense_impl_retraces_on_batch_change(dense_cfg):
     """The documented cost the arena removes: the dense path compiles a
     new decode step per live batch shape."""
@@ -263,7 +291,13 @@ def test_moe_decode_rows_are_batch_independent():
         return toks
 
     for impl in ("paged", "dense"):
-        rt = _runtime(cfg, params, impl=impl, bs=2)
+        # one-shot prefill: this test pins decode-time routing semantics
+        # against the raw model at TIGHT expert capacity, where chunked
+        # prefill legitimately differs (capacity scales with the routing
+        # group, and chunking changes the group from prompt to bucket —
+        # tests/test_chunked_prefill.py covers chunked MoE parity at
+        # non-binding capacity)
+        rt = _runtime(cfg, params, impl=impl, bs=2, chunked_prefill=False)
         got = _serve(rt, reqs)
         for i, (p, n) in enumerate(reqs):
             assert got[i] == direct(p, n), (impl, i)
