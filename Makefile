@@ -1,7 +1,8 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test smoke bench bench-paged bench-chunked serve quickstart
+.PHONY: test smoke bench bench-paged bench-chunked bench-prefix serve \
+	quickstart
 
 test:                ## tier-1 suite
 	python -m pytest -x -q
@@ -19,6 +20,10 @@ bench-paged:         ## paged KV arena vs dense merge vs sync data planes
 bench-chunked:       ## chunked vs unchunked prefill (head-of-line stall)
 	REPRO_BENCH_SMOKE=$${REPRO_BENCH_SMOKE:-0} PYTHONHASHSEED=0 \
 	REPRO_BENCH_SECTION=chunked python -m benchmarks.continuous_batching
+
+bench-prefix:        ## radix prefix cache vs cold prefill (token reuse)
+	REPRO_BENCH_SMOKE=$${REPRO_BENCH_SMOKE:-0} PYTHONHASHSEED=0 \
+	REPRO_BENCH_SECTION=prefix python -m benchmarks.continuous_batching
 
 serve:               ## end-to-end serving driver
 	python -m repro.launch.serve

@@ -224,6 +224,84 @@ def _chunked_prefill_rows() -> list:
     ]
 
 
+def _prefix_cache_rows() -> list:
+    """Radix prefix cache on a repeated-prefix workload (the frequency-
+    category shape: templated prompts sharing a long system prefix).
+
+    Acceptance (asserted):
+      * identical greedy tokens with the cache on vs off;
+      * prefill tokens computed reduced by >= 50% at 75% prefix overlap;
+      * exactly 1 decode compile per service preserved;
+      * zero reduction when the cache is disabled (no silent behaviour
+        change behind the knob).
+    """
+    import jax
+
+    from repro.core.allocator import ParallelPlan
+    from repro.core.categories import Sensitivity, TaskCategory
+    from repro.models import transformer as T
+    from repro.models.config import ModelConfig
+    from repro.serving.engine import GenerationRequest, ServiceRuntime
+
+    cfg = ModelConfig(name="bench", family="dense", num_layers=2,
+                      d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+                      d_ff=128, vocab_size=257, dtype="float32",
+                      param_dtype="float32")
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    # frequency category: the plan's prefix_cache knob derives aggressive
+    # retention (mf=1 keeps the BS composer semantics)
+    plan = ParallelPlan(service="bench",
+                        category=TaskCategory(Sensitivity.FREQUENCY, False),
+                        bs=4)
+    prefix_len, tail_len, n = 96, 32, (4 if _smoke() else 8)
+    rng = np.random.default_rng(11)
+    prefix = rng.integers(1, cfg.vocab_size, prefix_len).astype(np.int32)
+    tails = [rng.integers(1, cfg.vocab_size, tail_len).astype(np.int32)
+             for _ in range(n + 1)]
+
+    def _serve(enabled):
+        rt = ServiceRuntime(cfg, params, plan, kvcache_impl="paged",
+                            max_seq_len=160, block_size=16,
+                            prefix_cache=(None if enabled else 0))
+        tokens = {}
+        # warm request populates the cache, then the repeated-prefix wave
+        rt.submit(GenerationRequest(
+            rid=0, tokens=np.concatenate([prefix, tails[0]]),
+            max_new_tokens=4))
+        tokens.update({r.rid: tuple(r.tokens) for r in rt.drain()})
+        for i in range(1, n + 1):
+            rt.submit(GenerationRequest(
+                rid=i, tokens=np.concatenate([prefix, tails[i]]),
+                max_new_tokens=4))
+        tokens.update({r.rid: tuple(r.tokens) for r in rt.drain()})
+        return rt, tokens
+
+    (rt_on, toks_on), us_on = timed(_serve, True)
+    (rt_off, toks_off), us_off = timed(_serve, False)
+    total = (n + 1) * (prefix_len + tail_len)
+    reduction = 1.0 - rt_on.prefill_tokens_computed / total
+    # acceptance gates
+    assert toks_on == toks_off          # byte-identical greedy tokens
+    assert reduction >= 0.5, (rt_on.prefill_tokens_computed, total)
+    assert rt_on.decode_traces <= 1 and rt_off.decode_traces <= 1
+    assert rt_off.prefill_tokens_computed == total  # disabled: no reuse
+    assert rt_on.prefix_hits >= n       # every wave member hit
+    return [
+        ("serve_prefix_cache", us_on,
+         f"prefill_reduction={reduction:.0%};hits={rt_on.prefix_hits};"
+         f"hit_tokens={rt_on.prefix_hit_tokens};"
+         f"cow_blocks={rt_on.prefix_cow_copies};"
+         f"lru_evictions={rt_on.prefix_evictions};"
+         f"decode_compiles={rt_on.decode_traces}"),
+        ("serve_prefix_cache_off", us_off,
+         f"prefill_tokens={rt_off.prefill_tokens_computed};"
+         f"decode_compiles={rt_off.decode_traces}"),
+        ("serve_prefix_token_saving", 0.0,
+         f"{total - rt_on.prefill_tokens_computed}/{total}"
+         f"_prompt_tokens_not_recomputed"),
+    ]
+
+
 def _simulator_rows() -> list:
     import dataclasses
 
@@ -256,9 +334,10 @@ def _simulator_rows() -> list:
 
 def run() -> list:
     """REPRO_BENCH_SECTION selects sections (comma list of
-    live|chunked|sim); unset runs them all.  ``make bench-paged`` pins
-    ``live,sim`` and ``make bench-chunked`` pins ``chunked`` so the two
-    targets do not re-run each other's workloads."""
+    live|chunked|prefix|sim); unset runs them all.  ``make bench-paged``
+    pins ``live,sim``, ``make bench-chunked`` pins ``chunked`` and
+    ``make bench-prefix`` pins ``prefix`` so the targets do not re-run
+    each other's workloads."""
     sections = [s for s in os.environ.get("REPRO_BENCH_SECTION",
                                           "").split(",") if s]
     rows: list = []
@@ -266,6 +345,8 @@ def run() -> list:
         rows.extend(_live_engine_rows())
     if not sections or "chunked" in sections:
         rows.extend(_chunked_prefill_rows())
+    if not sections or "prefix" in sections:
+        rows.extend(_prefix_cache_rows())
     if not sections or "sim" in sections:
         rows.extend(_simulator_rows())
     return rows

@@ -26,8 +26,9 @@ from typing import Optional
 
 from . import costmodel as cm
 from .categories import (CAT_FREQ_MULTI, CAT_FREQ_SINGLE, CAT_LAT_MULTI,
-                         CAT_LAT_SINGLE, GPUSpec, Operator, Sensitivity,
-                         ServiceSpec, TaskCategory, operators_for)
+                         CAT_LAT_SINGLE, PREFIX_RETENTION_FRACTION, GPUSpec,
+                         Operator, Sensitivity, ServiceSpec, TaskCategory,
+                         operators_for)
 
 BS_CANDIDATES = tuple(2 ** i for i in range(10))     # 2^0 .. 2^9  (§4.1)
 MT_CANDIDATES = tuple(2 ** i for i in range(5))      # 2^0 .. 2^4  (§4.1)
@@ -47,6 +48,31 @@ class ParallelPlan:
     sticky: bool = False  # session-sticky DP routing (stateful archs)
     prefill_chunk: int = 0  # chunked-prefill bucket size in tokens
     #                         (0 = derive from the task category)
+    prefix_cache: int = -1  # shared-prefix KV retention knob: -1 = derive
+    #                         from the task category (frequency retains
+    #                         aggressively, latency bounded), 0 = disabled,
+    #                         >0 = max idle cached blocks retained
+
+    def __post_init__(self):
+        for field in ("mp", "bs", "mt", "mf", "dp"):
+            v = getattr(self, field)
+            if not isinstance(v, int) or isinstance(v, bool) or v < 1:
+                raise ValueError(
+                    f"ParallelPlan.{field} must be a positive int, got "
+                    f"{v!r}")
+        pc = self.prefill_chunk
+        if not isinstance(pc, int) or isinstance(pc, bool) or pc < 0:
+            raise ValueError(
+                f"ParallelPlan.prefill_chunk must be 0 (category default) "
+                f"or a positive token count, got {pc!r}; the serving "
+                f"engine additionally requires a multiple of its block "
+                f"size")
+        px = self.prefix_cache
+        if not isinstance(px, int) or isinstance(px, bool) or px < -1:
+            raise ValueError(
+                f"ParallelPlan.prefix_cache must be -1 (category default), "
+                f"0 (disabled) or a positive retention block count, got "
+                f"{px!r}")
 
     @property
     def gpus(self) -> int:
@@ -83,6 +109,22 @@ class ParallelPlan:
             return self.prefill_chunk
         mult = 2 if self.category.sensitivity == Sensitivity.LATENCY else 4
         return mult * block_size
+
+    def prefix_cache_blocks(self, pool_blocks: int,
+                            override: Optional[int] = None) -> int:
+        """Idle-retention bound for the serving engine's radix prefix
+        cache, in arena blocks.  0 disables; otherwise the task category
+        decides how aggressively unreferenced-but-cached blocks are
+        retained before LRU reclaim: frequency categories (periodic
+        repeats of the same prompt prefix) keep the whole reclaimable
+        pool, latency categories a bounded fraction."""
+        knob = self.prefix_cache if override is None else override
+        if knob == 0:
+            return 0
+        if knob > 0:
+            return min(knob, pool_blocks)
+        frac = PREFIX_RETENTION_FRACTION[self.category.sensitivity]
+        return max(1, int(pool_blocks * frac))
 
     def operators(self):
         ops = set()

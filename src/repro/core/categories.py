@@ -67,6 +67,19 @@ def operators_for(category: TaskCategory) -> FrozenSet[Operator]:
     return OPERATORS_BY_CATEGORY[category.key]
 
 
+# Prefix-cache retention by sensitivity (§3.1 applied to KV reuse):
+# frequency tasks are periodic repeats of the same system/prompt prefix
+# (sensor pipelines, templated LLM calls), so their serving plans retain
+# cached prefix blocks aggressively — every reclaimable block stays until
+# arena pressure forces LRU eviction.  Latency tasks see mostly one-off
+# prompts; holding a large idle cache only delays block reuse, so their
+# retention is bounded to a fraction of the pool.
+PREFIX_RETENTION_FRACTION = {
+    Sensitivity.FREQUENCY: 1.0,
+    Sensitivity.LATENCY: 0.25,
+}
+
+
 # ---------------------------------------------------------------------------
 # services & requests (shared by live engine + simulator)
 # ---------------------------------------------------------------------------
@@ -85,6 +98,11 @@ class ServiceSpec:
     arch: Optional[str] = None        # assigned-architecture id, if any
     stateful: bool = False            # SSM/hybrid decode: sticky DP routing
     priority: bool = False            # S1 priority placement list member
+    prefix_cacheable: bool = True     # paged KV is a pure function of the
+    #                                   prompt tokens (dense/MoE) — the
+    #                                   serving engine's prefix-cache gate;
+    #                                   the simulator's hit-rate discount
+    #                                   applies only when True
 
     @property
     def is_frequency(self) -> bool:

@@ -22,7 +22,8 @@ from repro.configs import ARCH_IDS, get_config, reduced
 from repro.core import (EdgeCloudControlPlane, GPUSpec, Outcome, Request,
                         ServerSpec, ServiceSpec, Sensitivity, allocate)
 from repro.models.registry import model_api
-from repro.serving.engine import (EparaServingEngine, GenerationRequest,
+from repro.serving.engine import (PREFIX_CACHEABLE_FAMILIES,
+                                  EparaServingEngine, GenerationRequest,
                                   ServiceRuntime)
 
 
@@ -35,7 +36,8 @@ def service_spec_for(cfg) -> ServiceSpec:
         sensitivity=Sensitivity(cfg.epara_sensitivity),
         slo_latency_s=2.0, slo_fps=20.0 if
         cfg.epara_sensitivity == "frequency" else 0.0,
-        arch=cfg.name, stateful=cfg.family in ("ssm", "hybrid"))
+        arch=cfg.name, stateful=cfg.family in ("ssm", "hybrid"),
+        prefix_cacheable=cfg.family in PREFIX_CACHEABLE_FAMILIES)
 
 
 def main(argv=None) -> int:
@@ -66,7 +68,29 @@ def main(argv=None) -> int:
                     help="chunk bucket size in tokens (0 = the plan's "
                          "category-derived default: small for latency "
                          "services, large for frequency services)")
+    ap.add_argument("--block-size", type=int, default=32,
+                    help="paged-arena block size in tokens (the prefix "
+                         "cache's sharing granularity)")
+    ap.add_argument("--prefix-cache", type=int, default=-1,
+                    help="radix prefix-cache retention: -1 = the plan's "
+                         "category-derived bound (frequency retains "
+                         "aggressively, latency bounded), 0 = disabled, "
+                         ">0 = max idle cached blocks")
     args = ap.parse_args(argv)
+
+    # mirror the engine's knob validation at the flag boundary so a bad
+    # value fails with a usage error instead of a deep ValueError
+    if args.block_size < 1:
+        ap.error(f"--block-size must be positive, got {args.block_size}")
+    if args.prefill_chunk < 0 or (args.prefill_chunk
+                                  and args.prefill_chunk % args.block_size):
+        ap.error(f"--prefill-chunk must be 0 (category default) or a "
+                 f"positive multiple of --block-size={args.block_size}, "
+                 f"got {args.prefill_chunk}")
+    if args.prefix_cache < -1:
+        ap.error(f"--prefix-cache must be -1 (category default), 0 "
+                 f"(disabled) or a positive block count, got "
+                 f"{args.prefix_cache}")
 
     arch_ids = [a.strip() for a in args.archs.split(",")]
     for a in arch_ids:
@@ -92,6 +116,7 @@ def main(argv=None) -> int:
     # data plane: one engine per server, reduced models
     engines = {s.sid: EparaServingEngine() for s in servers}
     rng = np.random.default_rng(args.seed)
+    import dataclasses as _dc
     for svc, sid in placements:
         if sid < 0:
             continue
@@ -99,9 +124,11 @@ def main(argv=None) -> int:
         params = model_api(cfg).init(jax.random.PRNGKey(hash(svc) % 2**31),
                                      cfg)
         chunked = (None if not args.no_chunked_prefill else False)
-        rt = ServiceRuntime(cfg, params, cp.plans[svc], mode=args.mode,
+        plan = _dc.replace(cp.plans[svc], prefix_cache=args.prefix_cache)
+        rt = ServiceRuntime(cfg, params, plan, mode=args.mode,
                             kvcache_impl=args.kvcache_impl,
                             max_seq_len=args.max_seq_len,
+                            block_size=args.block_size,
                             chunked_prefill=chunked,
                             prefill_chunk=(args.prefill_chunk or None))
         engines[sid].deploy(svc, rt)
@@ -164,6 +191,14 @@ def main(argv=None) -> int:
     print(f"data plane: {traces} decode compiles, {pf_traces} prefill "
           f"compiles, {chunk_calls} prefill chunks, {copies} whole-cache "
           f"admission copies, {copy_mb:.2f} MB admission-copy bytes")
+    rts = [rt for eng in engines.values() for rt in eng.runtimes.values()]
+    hit_toks = sum(rt.prefix_hit_tokens for rt in rts)
+    computed = sum(rt.prefill_tokens_computed for rt in rts)
+    print(f"prefix cache: {sum(rt.prefix_hits for rt in rts)} hits, "
+          f"{hit_toks} prompt tokens reused, {computed} computed, "
+          f"{sum(rt.prefix_cow_copies for rt in rts)} COW copies, "
+          f"{sum(rt.prefix_evictions for rt in rts)} LRU evictions, "
+          f"{sum(rt.oneshot_prefills for rt in rts)} one-shot prefills")
     return 0 if len(results) == args.requests else 1
 
 

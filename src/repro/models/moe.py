@@ -38,9 +38,10 @@ def init_moe_mlp(key, cfg: ModelConfig):
 
 
 def _top_k_dispatch(router_probs, k: int, capacity: int):
-    """router_probs: (G, S, E).  Returns combine (G, S, E, C) fp32 and the
-    aux load-balance loss.  Capacity-dropped tokens get zero combine weight
-    (residual passes them through)."""
+    """router_probs: (G, S, E).  Returns combine (G, S, E, C) fp32, the
+    aux load-balance loss and the number of token→expert assignments
+    dropped by the capacity limit.  Capacity-dropped tokens get zero
+    combine weight (residual passes them through)."""
     G, S, E = router_probs.shape
     combine = jnp.zeros((G, S, E, capacity), jnp.float32)
     probs = router_probs
@@ -51,6 +52,7 @@ def _top_k_dispatch(router_probs, k: int, capacity: int):
     aux = jnp.mean(jnp.sum(me * ce, axis=-1)) * (E ** 2) / (E * 1.0)
 
     occupancy = jnp.zeros((G, E), jnp.int32)
+    dropped = jnp.zeros((), jnp.float32)
     for _ in range(k):
         idx = jnp.argmax(probs, axis=-1)                  # (G, S)
         gate = jnp.take_along_axis(probs, idx[..., None], -1)[..., 0]
@@ -58,6 +60,7 @@ def _top_k_dispatch(router_probs, k: int, capacity: int):
         pos = jnp.cumsum(mask, axis=1) - mask + occupancy[:, None]
         pos = jnp.sum(pos * mask, axis=-1)                # (G, S)
         keep = pos < capacity
+        dropped = dropped + jnp.sum((~keep).astype(jnp.float32))
         onehot_c = jax.nn.one_hot(pos, capacity, dtype=jnp.float32)
         contrib = (gate * keep)[..., None, None] \
             * mask[..., None].astype(jnp.float32) * onehot_c[..., None, :]
@@ -67,7 +70,55 @@ def _top_k_dispatch(router_probs, k: int, capacity: int):
     # renormalize the kept gates so the k gates sum to 1 (mixtral semantics)
     denom = jnp.sum(combine, axis=(-2, -1), keepdims=True)
     combine = combine / jnp.maximum(denom, 1e-9)
-    return combine, aux
+    return combine, aux, dropped
+
+
+# ---------------------------------------------------------------------------
+# expert-capacity drop counter (ROADMAP PR 3 follow-up): chunked prefill
+# changes the routing-group granularity, so outputs can diverge from
+# one-shot prefill exactly when the capacity limit is BINDING — i.e. when
+# tokens are dropped.  The counter makes that observable: the serving
+# engine enables it for MoE services and reports per-step drop deltas in
+# ``StepStats.moe_dropped_tokens``.  It is a process-global accumulator
+# fed by ``jax.debug.callback`` (the only host-side channel out of a
+# jitted step); the flag is checked at TRACE time, so training and other
+# disabled paths pay nothing.  Per-step attribution is exact in the
+# single-threaded serving loop (every step blocks on its sampled tokens,
+# flushing the callbacks, before the next runtime steps) but only
+# approximate if several MoE runtimes ever step concurrently; counts also
+# include padding/garbage rows of masked serving batches — it is an
+# observability signal, not an exact per-request audit.
+# ---------------------------------------------------------------------------
+
+class _MoeDropStats:
+    __slots__ = ("dropped", "assigned")
+
+    def __init__(self):
+        self.reset()
+
+    def reset(self) -> None:
+        self.dropped = 0.0
+        self.assigned = 0.0
+
+    @property
+    def drop_rate(self) -> float:
+        return self.dropped / self.assigned if self.assigned else 0.0
+
+
+MOE_DROP_STATS = _MoeDropStats()
+_DROP_COUNTER_ENABLED = False
+
+
+def enable_drop_counter(on: bool = True) -> None:
+    """Toggle drop accounting for traces built AFTER the call (already
+    compiled functions keep their behaviour)."""
+    global _DROP_COUNTER_ENABLED
+    _DROP_COUNTER_ENABLED = bool(on)
+
+
+def _note_drops(dropped, assigned) -> None:
+    MOE_DROP_STATS.dropped += float(dropped)
+    MOE_DROP_STATS.assigned += float(assigned)
 
 
 MAX_ROUTING_GROUP = 2048
@@ -91,8 +142,11 @@ def moe_mlp(p, cfg: ModelConfig, x, *, impl=None):
     logits = layers.linear(xg.astype(jnp.float32),
                            p["router"].astype(jnp.float32))
     probs = jax.nn.softmax(logits, axis=-1)               # (BG, seg, E)
-    combine, aux = _top_k_dispatch(probs, k, capacity)    # (BG, seg, E, C)
-    dispatch = (combine > 0).astype(x.dtype)
+    combine, aux, dropped = _top_k_dispatch(probs, k, capacity)
+    if _DROP_COUNTER_ENABLED:                             # trace-time gate
+        jax.debug.callback(_note_drops, dropped,
+                           jnp.asarray(float(k * B * G * seg), jnp.float32))
+    dispatch = (combine > 0).astype(x.dtype)              # (BG, seg, E, C)
     # (BG, S, E, C) x (BG, S, d) -> (E, BG*C, d)
     expert_in = jnp.einsum("blec,bld->ebcd", dispatch, xg)
     expert_in = expert_in.reshape(E, B * G * capacity, d)

@@ -18,6 +18,13 @@ bytes and each batch-size change retraces the fused decode step under XLA.
   batch is never touched);
 * **eviction is a free-list operation** (``free`` returns the slot's
   blocks; no device work at all);
+* **blocks are shareable across slots** (prefix cache): ``alloc`` can
+  stitch already-resident blocks into a new slot's table
+  (``shared=...``), per-block refcounts keep them alive across source
+  evictions, ``register``/``unregister`` let a prefix index freeze
+  blocks (writers ``cow_block`` first — copy-on-write on divergence),
+  and ref-0 cached blocks park on an LRU the allocator reclaims before
+  ever failing;
 * the decode step always runs at the full static shape ``(capacity, ...)``
   with an occupancy mask, so it compiles exactly once per service.
 
@@ -35,6 +42,7 @@ from __future__ import annotations
 
 import functools
 import math
+from collections import OrderedDict
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -140,6 +148,24 @@ class KVArena:
         self._tables_dev: Optional[jnp.ndarray] = None
         self._occ_dev: Optional[jnp.ndarray] = None
 
+        # -- cross-slot block sharing (prefix cache) -----------------------
+        # A physical block may back several slots' block-table rows (shared
+        # prompt prefixes) and/or be retained by a prefix index after every
+        # referencing slot died.  ``_block_refs`` counts live slot
+        # references; ``_cached`` marks blocks registered by a prefix index
+        # (their content is immutable — any write COWs first); ref-0 cached
+        # blocks park in ``_idle_cached`` (an LRU by last release) and are
+        # reclaimed before the allocator ever fails, via ``evict_hook`` so
+        # the index drops its entries.
+        self._block_refs = np.zeros((self.pool_blocks,), np.int32)
+        self._cached: set = set()
+        self._idle_cached: "OrderedDict[int, None]" = OrderedDict()
+        self.evict_hook: Optional[Callable[[int], None]] = None
+        self.cache_retention: Optional[int] = None  # max idle cached blocks
+        self.cached_evictions = 0     # idle cached blocks reclaimed
+        self.cow_copies = 0           # copy-on-write block copies
+        self._cow_fn: Optional[Callable] = None
+
         # bytes one cache token occupies across all paged leaves, and the
         # fixed per-slot state footprint (allocator-style accounting)
         self.token_bytes = sum(
@@ -159,28 +185,92 @@ class KVArena:
     def blocks_for(self, total_tokens: int) -> int:
         return max(1, math.ceil(total_tokens / self.block_size))
 
-    def can_alloc(self, total_tokens: int) -> bool:
+    @property
+    def free_capacity(self) -> int:
+        """Blocks the allocator can hand out without failing: the free
+        list plus every reclaimable (ref-0 cached) block."""
+        return len(self._free_blocks) + len(self._idle_cached)
+
+    def can_alloc(self, total_tokens: int, *, shared: Sequence[int] = (),
+                  reserve: int = 0) -> bool:
+        """Admission feasibility.  ``shared`` lists the cached blocks a
+        prefix hit would stitch in (they reduce the fresh-block demand,
+        but idle ones must be EXCLUDED from the reclaimable supply — the
+        hit revives them); ``reserve`` asks for extra claimable headroom
+        (e.g. the divergence-COW copy a partial-tail share will need)."""
+        shared = list(shared)
+        idle_shared = sum(1 for b in shared if b in self._idle_cached)
+        claimable = (len(self._free_blocks) + len(self._idle_cached)
+                     - idle_shared)
         return (bool(self._free_slots)
-                and self.blocks_for(total_tokens) <= len(self._free_blocks)
+                and (self.blocks_for(total_tokens) - len(shared) + reserve
+                     <= claimable)
                 and total_tokens <= self.slot_tokens)
 
-    def alloc(self, total_tokens: int, slot: Optional[int] = None) -> int:
+    def _reclaim_lru_block(self) -> None:
+        """Evict the least-recently-released idle cached block back to the
+        free list.  The append happens BEFORE the hook fires: the hook's
+        ``unregister`` calls (subtree drops) must see this block as
+        already freed, or they would double-append it."""
+        blk, _ = self._idle_cached.popitem(last=False)
+        self._cached.discard(blk)
+        self.cached_evictions += 1
+        self._free_blocks.append(blk)
+        if self.evict_hook is not None:
+            self.evict_hook(blk)
+
+    def _claim_blocks(self, n: int) -> List[int]:
+        """Pop ``n`` blocks from the free list, reclaiming idle cached
+        blocks in LRU order when it runs short (``evict_hook`` lets the
+        prefix index drop the evicted block's entries first)."""
+        while len(self._free_blocks) < n and self._idle_cached:
+            self._reclaim_lru_block()
+        if len(self._free_blocks) < n:
+            raise RuntimeError("arena out of blocks")
+        return [self._free_blocks.pop(0) for _ in range(n)]
+
+    def alloc(self, total_tokens: int, slot: Optional[int] = None, *,
+              shared: Sequence[int] = ()) -> int:
         """Claim a slot and its token blocks for a request whose lifetime
-        needs ``total_tokens`` (prompt + generation budget)."""
+        needs ``total_tokens`` (prompt + generation budget).  ``shared``
+        stitches already-resident physical blocks (a cached prompt prefix)
+        into the FRONT of the slot's block table instead of claiming fresh
+        blocks for those positions — each one's refcount rises and idle
+        cached blocks are revived off the LRU."""
         if total_tokens > self.slot_tokens:
             raise ValueError(
                 f"request needs {total_tokens} tokens > arena slot budget "
                 f"{self.slot_tokens} (raise max_seq_len)")
         n = self.blocks_for(total_tokens)
-        if n > len(self._free_blocks):
-            raise RuntimeError("arena out of blocks")
+        shared = list(shared)
+        if len(shared) > n:
+            raise ValueError(
+                f"{len(shared)} shared prefix blocks exceed the request's "
+                f"{n}-block budget")
+        # incref the shared prefix FIRST so a same-call reclaim sweep can
+        # never evict a block the hit is about to use
+        for b in shared:
+            if self._block_refs[b] == 0:
+                self._idle_cached.pop(b, None)
+            self._block_refs[b] += 1
+        try:
+            fresh = self._claim_blocks(n - len(shared))
+        except RuntimeError:
+            for b in shared:          # undo the increfs; caller requeues
+                self._release_block(b)
+            raise
         if slot is None:
             if not self._free_slots:
+                for b in shared:
+                    self._release_block(b)
+                self._free_blocks.extend(fresh)
                 raise RuntimeError("arena out of slots")
             slot = self._free_slots.pop(0)
         else:
             self._free_slots.remove(slot)
-        blocks = [self._free_blocks.pop(0) for _ in range(n)]
+        for b in fresh:
+            self._block_refs[b] = 1
+        blocks = shared + fresh
         self._slot_blocks[slot] = blocks
         row = np.full((self.blocks_per_slot,), self.trash_block, np.int32)
         row[:n] = blocks
@@ -195,17 +285,125 @@ class KVArena:
         ``lens`` (one-shot ``write_prefill`` overwrites it, chunk writes
         only advance it — a recycled slot would otherwise resume at the
         previous tenant's length)."""
-        self.lens = self.lens.at[slot].set(0)
+        self.set_len(slot, 0)
+
+    def set_len(self, slot: int, n: int) -> None:
+        """Set a slot's device-side length — a prefix-cache hit admits with
+        ``lens[slot] = hit_tokens`` so chunked prefill resumes past the
+        shared prefix."""
+        self.lens = self.lens.at[slot].set(n)
+
+    def _release_block(self, block: int) -> None:
+        """Drop one slot reference; a ref-0 block parks on the cached LRU
+        if a prefix index still wants it, else returns to the free list."""
+        self._block_refs[block] -= 1
+        if self._block_refs[block] > 0:
+            return
+        self._block_refs[block] = 0
+        if block in self._cached:
+            self._idle_cached.pop(block, None)
+            self._idle_cached[block] = None       # most-recently released
+        else:
+            self._free_blocks.append(block)
 
     def free(self, slot: int) -> None:
-        """Release a slot: pure free-list bookkeeping, zero device work."""
+        """Release a slot: pure free-list bookkeeping, zero device work.
+        Blocks shared with other slots (or retained by a prefix index)
+        survive; only the last reference returns a block to circulation."""
         if not self._occ[slot]:
             return
-        self._free_blocks.extend(self._slot_blocks.pop(slot))
+        for b in self._slot_blocks.pop(slot):
+            self._release_block(b)
         self._block_tables[slot] = self.trash_block
         self._occ[slot] = False
         self._free_slots.append(slot)
         self._tables_dev = self._occ_dev = None
+        self._enforce_retention()
+
+    # ------------------------------------------------------------------
+    # prefix-cache surface: registration, retention, copy-on-write
+    # ------------------------------------------------------------------
+    def register(self, block: int) -> None:
+        """Mark a block as held by a prefix index: its content is frozen
+        (writers COW) and it outlives its slots, parked on the LRU until
+        reclaimed or re-shared."""
+        self._cached.add(block)
+
+    def unregister(self, block: int) -> None:
+        """Prefix index dropped its entry: an idle block goes straight
+        back to the free list, a live one merely loses immutability once
+        its refs drain.  (Every indexed ref-0 block is on the idle list —
+        a ref-0 uncached block is already free — so this is O(1).)"""
+        self._cached.discard(block)
+        if block in self._idle_cached:
+            del self._idle_cached[block]
+            self._free_blocks.append(block)
+
+    def _enforce_retention(self) -> None:
+        """Cap the idle cached pool at ``cache_retention`` blocks (the
+        category knob: latency plans keep a bounded prefix cache,
+        frequency plans retain aggressively)."""
+        if self.cache_retention is None:
+            return
+        while len(self._idle_cached) > self.cache_retention:
+            self._reclaim_lru_block()
+
+    def block_ref(self, block: int) -> int:
+        return int(self._block_refs[block])
+
+    def is_cached(self, block: int) -> bool:
+        return block in self._cached
+
+    def _cow_copy_fn(self):
+        if self._cow_fn is None:
+            def _copy(pages, src, dst):
+                return [p.at[:, dst].set(p[:, src]) for p in pages]
+            self._cow_fn = jax.jit(
+                _copy, donate_argnums=self._donate_argnums((0,)))
+        return self._cow_fn
+
+    def cow_block(self, slot: int, logical: int) -> bool:
+        """Copy-on-write: give ``slot`` a private copy of its ``logical``-th
+        block if the physical block is shared with another slot or frozen
+        by a prefix index.  Returns True when a copy happened (one block of
+        device copy; the table row changes, so the device table re-uploads
+        on next use)."""
+        phys = int(self._block_tables[slot][logical])
+        if phys == self.trash_block:
+            raise ValueError(f"slot {slot} logical block {logical} is "
+                             f"unallocated")
+        if self._block_refs[phys] <= 1 and phys not in self._cached:
+            return False
+        fresh = self._claim_blocks(1)[0]
+        self.pages = self._cow_copy_fn()(
+            self.pages, jnp.asarray(phys, jnp.int32),
+            jnp.asarray(fresh, jnp.int32))
+        self._block_refs[fresh] = 1
+        blocks = self._slot_blocks[slot]
+        blocks[blocks.index(phys)] = fresh
+        self._block_tables[slot][logical] = fresh
+        self._tables_dev = None
+        self._release_block(phys)   # a sole-ref cached source goes idle...
+        self._enforce_retention()   # ...so the knob's bound applies here too
+        self.cow_copies += 1
+        return True
+
+    def ensure_writable(self, slot: int, start: int, n_tokens: int = 1
+                        ) -> int:
+        """COW every block the write ``[start, start + n_tokens)`` touches
+        that the slot does not exclusively own.  Cheap host check in the
+        common case; returns the number of blocks copied."""
+        if not self._cached and not (self._block_refs > 1).any():
+            return 0
+        lo = max(0, start) // self.block_size
+        hi = max(0, start + n_tokens - 1) // self.block_size
+        copied = 0
+        for logical in range(lo, min(hi, self.blocks_per_slot - 1) + 1):
+            if self._block_tables[slot][logical] == self.trash_block:
+                continue
+            if self.cow_block(slot, logical):
+                copied += 1
+        return copied
 
     def block_tables(self) -> np.ndarray:
         """(capacity, blocks_per_slot) logical->physical block map."""

@@ -14,6 +14,14 @@ decode slots per group; each ``step()``:
       long prompt never stalls live decode slots for more than one chunk
       (head-of-line isolation), and prefill compiles once per chunk
       BUCKET instead of once per prompt length,
+
+with a **radix prefix cache** (``serving/prefix_cache.py``) in front of
+(b): admissions of prefix-cacheable families look up the longest cached
+prompt prefix and stitch its blocks into the new slot's table
+(``arena.alloc(shared=...)``) so (b2) starts after the hit boundary;
+divergence inside a shared block copies-on-write, retention follows the
+task category (``ParallelPlan.prefix_cache``), and hit/COW/eviction
+counts land in ``StepStats``,
   (c) runs **one fused decode step** for every decoding slot, with
       per-slot ``len`` vectors (the decode kernels mask per-batch
       ``cache_len``) and sampling masked by occupancy.
@@ -62,10 +70,18 @@ from repro.models.registry import ModelApi, model_api
 from . import kvcache
 from .arena import KVArena
 from .batching import ComposedBatch, QueuedItem, make_composer
+from .prefix_cache import PrefixHit, RadixPrefixCache
 from .sampler import SamplerConfig, sample
 
 DEFAULT_MAX_SEQ_LEN = 256
 DEFAULT_BLOCK_SIZE = 32
+
+# Families whose paged KV content is a pure function of the prompt token
+# ids — the prerequisite for cross-request block sharing.  SSM/hybrid carry
+# per-slot recurrent state a shared prefix cannot reconstruct, and
+# enc-dec/VLM cache content depends on non-token inputs (audio embeddings,
+# image prefixes), so sharing by token hash would alias distinct requests.
+PREFIX_CACHEABLE_FAMILIES = ("dense", "moe")
 
 
 @dataclasses.dataclass
@@ -112,6 +128,20 @@ class StepStats:
     decode_steps: int = 0            # fused decode invocations this step
     prefill_chunk_tokens: int = 0    # prompt tokens prefilled this step by
     #                                  the piggybacked chunk phase
+    oneshot_prefills: int = 0        # admissions that took the one-shot
+    #                                  prefill path this step (ring/sliding-
+    #                                  window layouts and chunking-disabled
+    #                                  configs — the documented fallback,
+    #                                  now observable instead of silent)
+    prefix_lookups: int = 0          # prefix-cache lookups this step
+    prefix_hits: int = 0             # admissions that reused cached blocks
+    prefix_hit_tokens: int = 0       # prompt tokens served from the cache
+    prefix_evicted_blocks: int = 0   # cached blocks reclaimed (LRU) this step
+    prefix_cow_blocks: int = 0       # copy-on-write block copies this step
+    moe_dropped_tokens: float = 0.0  # MoE expert-capacity drops this step
+    #                                  (token-assignments past capacity;
+    #                                  nonzero under binding capacity, where
+    #                                  chunked prefill may diverge)
 
 
 class _Slot:
@@ -141,6 +171,7 @@ class _Slot:
         self.steps = 0
         self.slot_id = slot_id
         self.consumed = 0                   # prompt tokens prefilled so far
+        #                                     (a prefix hit starts past 0)
         if first_token is None:             # chunked prefill in progress
             self.prefilling = True
             self.emitted: List[int] = []
@@ -179,11 +210,12 @@ class _GroupState:
     """Persistent in-flight state of one DP replica group: the slot
     handles plus either a ``KVArena`` (paged) or a compacted cache pytree
     (dense)."""
-    __slots__ = ("cache", "slots", "arena")
+    __slots__ = ("cache", "slots", "arena", "prefix")
 
     def __init__(self):
         self.cache = None            # dense impl only
         self.arena: Optional[KVArena] = None
+        self.prefix: Optional[RadixPrefixCache] = None
         self.slots: List[_Slot] = []
 
     @property
@@ -205,6 +237,7 @@ class ServiceRuntime:
                  pool_blocks: Optional[int] = None,
                  chunked_prefill: Optional[bool] = None,
                  prefill_chunk: Optional[int] = None,
+                 prefix_cache: Optional[Any] = None,
                  on_evict: Optional[Callable] = None):
         if mode not in ("continuous", "sync"):
             raise ValueError(f"mode must be continuous|sync, got {mode!r}")
@@ -233,10 +266,24 @@ class ServiceRuntime:
         self.admission_copy_bytes = 0
         self.whole_cache_copies = 0  # admissions that copied the live batch
         self.prefill_chunk_calls = 0  # chunk invocations (all groups)
+        self.prefill_tokens_computed = 0  # prompt tokens actually run
+        #                                   through prefill compute (cache
+        #                                   hits skip theirs)
+        self.oneshot_prefills = 0    # admissions via one-shot prefill
         self._session_refs: Dict[int, int] = {}
         self._service_ewma_s = 0.0   # EWMA of per-request service time
+        self._prefix_hit_ewma = 0.0  # EWMA of cached-prompt-token fraction
         self._paged_decode_fn = None
         self._chunk_fns: Dict[Any, Callable] = {}
+        self._moe_stats = None
+        if cfg.family == "moe":
+            # expert-capacity drop observability: chunked prefill changes
+            # the routing-group granularity, so divergence under binding
+            # capacity shows up as a nonzero drop counter (global per
+            # process; documented in models/moe.py)
+            from repro.models import moe as _moe
+            _moe.enable_drop_counter(True)
+            self._moe_stats = _moe.MOE_DROP_STATS
 
         # -- chunked (piggybacked) prefill configuration ------------------
         # ring (sliding-window) cache layouts wrap positions mod the
@@ -255,13 +302,54 @@ class ServiceRuntime:
                 raise ValueError("chunked_prefill does not support ring "
                                  "(sliding-window) cache layouts")
         self.chunked_prefill = bool(chunked_prefill)
-        chunk = (prefill_chunk if prefill_chunk is not None
-                 else plan.prefill_chunk_tokens(block_size))
-        # per-step prefill token budget per group = the category's chunk
-        # size, rounded to blocks and capped by the slot budget
-        chunk = max(block_size, -(-int(chunk) // block_size) * block_size)
+        # ring layouts silently took the one-shot path before; the fallback
+        # is now an explicit, counted state (StepStats.oneshot_prefills)
+        self.ring_fallback = bool(ring and mode == "continuous"
+                                  and kvcache_impl == "paged"
+                                  and not self.chunked_prefill)
+        # explicit chunk sizes are validated, not silently rounded: the
+        # chunk is the arena's scatter unit, so it must be a positive
+        # multiple of the block size (mirrored by launch/serve.py's flags)
+        explicit_chunk = (prefill_chunk if prefill_chunk is not None
+                          else (plan.prefill_chunk or None))
+        if explicit_chunk is not None:
+            chunk = int(explicit_chunk)
+            if chunk <= 0 or chunk % block_size:
+                raise ValueError(
+                    f"prefill_chunk must be a positive multiple of "
+                    f"block_size={block_size}, got {chunk}")
+        else:
+            chunk = plan.prefill_chunk_tokens(block_size)
         self.prefill_chunk_tokens = min(chunk, self.slot_token_budget)
         self.chunk_buckets = self._derive_buckets(self.prefill_chunk_tokens)
+
+        # -- prefix cache (radix shared-prefix KV reuse) ------------------
+        if prefix_cache is None:
+            knob = plan.prefix_cache
+            explicit_prefix = False
+        else:
+            knob = (-1 if prefix_cache is True
+                    else 0 if prefix_cache is False else int(prefix_cache))
+            if knob < -1:
+                raise ValueError(
+                    f"prefix_cache must be -1 (category default), 0 "
+                    f"(disabled) or a positive retention block count; got "
+                    f"{knob}")
+            explicit_prefix = knob != 0
+        cacheable = (mode == "continuous" and kvcache_impl == "paged"
+                     and self.chunked_prefill
+                     and cfg.family in PREFIX_CACHEABLE_FAMILIES)
+        if explicit_prefix and not cacheable:
+            raise ValueError(
+                "prefix_cache requires mode='continuous', "
+                "kvcache_impl='paged', chunked prefill (so hits resume "
+                f"mid-prompt) and a family in {PREFIX_CACHEABLE_FAMILIES} "
+                "(paged KV must be a pure function of prompt tokens); got "
+                f"family={cfg.family!r}, mode={mode!r}, "
+                f"kvcache_impl={kvcache_impl!r}, "
+                f"chunked_prefill={self.chunked_prefill}")
+        self._prefix_knob = knob
+        self.prefix_cache_enabled = bool(cacheable and knob != 0)
         api = self.api
 
         if prefill_fn is None:
@@ -404,8 +492,17 @@ class ServiceRuntime:
             # queued prompts PLUS admitted-but-unconsumed ones: a long
             # prompt leaves the composer at alloc time but keeps eating
             # (b2) budget until its last chunk lands
-            backlog = (self.composer.pending_prefill_tokens()
-                       + self._unconsumed_prompt_tokens())
+            queued = self.composer.pending_prefill_tokens()
+            if self.prefix_cache_enabled:
+                # cached-token term: the observed hit-rate EWMA predicts
+                # the fraction of QUEUED prompt tokens the prefix cache
+                # will serve without compute, so the handler's queue-time
+                # signal doesn't overprice repeated-prefix (frequency)
+                # traffic.  In-flight unconsumed tokens are already
+                # post-hit (slots admit with consumed = hit_tokens), so
+                # they are not discounted again.
+                queued *= max(0.0, 1.0 - self._prefix_hit_ewma)
+            backlog = queued + self._unconsumed_prompt_tokens()
             chunk_steps = backlog / (self.prefill_chunk_tokens
                                      * max(1, len(self.groups)))
             waves += chunk_steps / max(1, self.total_slots())
@@ -447,6 +544,14 @@ class ServiceRuntime:
             results.append(res)
             self._note_service_time(res)
             if state.arena is not None:
+                if state.prefix is not None and not s.prefilling:
+                    # the slot will never write again: its partial tail
+                    # block's prompt content is final, so it can join the
+                    # index (sharers mask the generated tokens past the
+                    # entry's valid count and COW before writing)
+                    state.prefix.insert(
+                        s.req.tokens,
+                        state.arena._block_tables[s.slot_id])
                 state.arena.free(s.slot_id)
             self._finish_request(s.req, group)
         state.slots = [state.slots[i] for i in keep]
@@ -465,6 +570,11 @@ class ServiceRuntime:
                 capacity=self.plan.max_in_flight,
                 max_seq_len=self.max_seq_len, block_size=self.block_size,
                 pool_blocks=self.pool_blocks)
+            if self.prefix_cache_enabled:
+                state.prefix = RadixPrefixCache(
+                    state.arena,
+                    retention_blocks=self.plan.prefix_cache_blocks(
+                        state.arena.pool_blocks, override=self._prefix_knob))
         return state.arena
 
     def _admit_one(self, req: GenerationRequest, group: int,
@@ -483,15 +593,64 @@ class ServiceRuntime:
                 raise ValueError(
                     f"request {req.rid} needs {total} tokens > per-slot "
                     f"budget {arena.slot_tokens}; raise max_seq_len")
+            if self.chunked_prefill:
+                # prefix-cache lookup: stitch the longest cached prefix
+                # into the new slot's block table; chunked prefill then
+                # starts AFTER the hit boundary
+                hit: Optional[PrefixHit] = None
+                pc = state.prefix
+                looked = pc is not None and len(req.tokens) > 1
+                if looked:
+                    h = pc.lookup(req.tokens)
+                    if h.tokens > 0:
+                        hit = h
+                if hit is not None and hit.partial_valid:
+                    # a partial-tail share ALWAYS needs its divergence COW
+                    # (the first computed token lands inside that block),
+                    # so admit only with headroom for the copy; under a
+                    # tight pool degrade to the full-block hit instead of
+                    # failing mid-step
+                    if not arena.can_alloc(total, shared=hit.blocks,
+                                           reserve=1):
+                        hit = (PrefixHit(blocks=hit.blocks[:-1],
+                                         tokens=hit.full_blocks
+                                         * arena.block_size,
+                                         full_blocks=hit.full_blocks,
+                                         partial_valid=0)
+                               if hit.full_blocks else None)
+                shared = hit.blocks if hit is not None else ()
+                if not arena.can_alloc(total, shared=shared):
+                    return False
+                slot_id = arena.alloc(total, shared=shared)
+                if hit is not None:
+                    arena.set_len(slot_id, hit.tokens)
+                    if hit.partial_valid:
+                        # eager divergence copy (guaranteed headroom was
+                        # just checked; ensure_writable in the chunk and
+                        # decode paths stays as an invariant guard)
+                        arena.cow_block(slot_id, hit.full_blocks)
+                        self.admission_copy_bytes += (arena.block_size
+                                                      * arena.token_bytes)
+                else:
+                    arena.reset_len(slot_id)
+                slot = _Slot(req, None, prefill_s=0.0,
+                             admit_wall=time.perf_counter(),
+                             admitted_s=now, slot_id=slot_id)
+                if hit is not None:
+                    slot.consumed = hit.tokens
+                if looked:
+                    pc.record(hit, len(req.tokens))
+                if pc is not None:
+                    # EWMA over ALL admissions (1-token prompts count as
+                    # misses) so the queue-time discount stays honest
+                    frac = ((hit.tokens / len(req.tokens))
+                            if hit is not None else 0.0)
+                    self._prefix_hit_ewma = (0.8 * self._prefix_hit_ewma
+                                             + 0.2 * frac)
+                state.slots.append(slot)
+                return True
             if not arena.can_alloc(total):
                 return False
-            if self.chunked_prefill:
-                slot_id = arena.alloc(total)
-                arena.reset_len(slot_id)
-                state.slots.append(_Slot(req, None, prefill_s=0.0,
-                                         admit_wall=time.perf_counter(),
-                                         admitted_s=now, slot_id=slot_id))
-                return True
             # cache_size is budgeted in text tokens; family extras (VLM
             # prefix) ride along so the model-built cache lands exactly on
             # the arena's slot_tokens sequence axis
@@ -506,6 +665,8 @@ class ServiceRuntime:
         first = int(np.asarray(self._sample(logits))[0])
         jax.block_until_ready(logits)
         t1 = time.perf_counter()
+        self.oneshot_prefills += 1
+        self.prefill_tokens_computed += len(req.tokens)
 
         if self.kvcache_impl == "paged":
             slot_id = arena.alloc(total)
@@ -622,6 +783,14 @@ class ServiceRuntime:
         if fn is None:
             fn = self._build_chunk_fn(arena, T, with_emb)
             self._chunk_fns[(T, with_emb)] = fn
+        # copy-on-write before the chunk lands: a prefix-cache hit into a
+        # PARTIAL block shares it read-only; our first write past the
+        # divergence point forks a private copy (other slots and the
+        # frozen index entry keep reading the original)
+        copied = arena.ensure_writable(s.slot_id, s.consumed, n_valid)
+        if copied:
+            self.admission_copy_bytes += (copied * arena.block_size
+                                          * arena.token_bytes)
         logits, arena.pages, arena.state, arena.lens = fn(
             self.params, jnp.asarray(toks), emb, arena.pages, arena.state,
             arena.lens, jnp.asarray(s.slot_id, jnp.int32),
@@ -629,6 +798,7 @@ class ServiceRuntime:
             jnp.asarray(n_valid, jnp.int32))
         s.consumed += n_valid
         self.prefill_chunk_calls += 1
+        self.prefill_tokens_computed += n_valid
         rows = n_valid + (self.cfg.prefix_len
                           if with_emb and self.cfg.family == "vlm" else 0)
         self.admission_copy_bytes += arena.chunk_bytes(rows)
@@ -661,6 +831,18 @@ class ServiceRuntime:
                     t1 = time.perf_counter()
                     s.prefill_s += t1 - t0
                     s.begin_decode(first, t1)
+                    if state.prefix is not None:
+                        # every FULL prompt block is now written and
+                        # frozen: index the chain (hits extend existing
+                        # paths; duplicated content keeps the first
+                        # copy).  The partial tail block is deliberately
+                        # NOT indexed yet — generation still appends into
+                        # it, so freezing it now would make the owner COW
+                        # its own tail; eviction indexes it once final.
+                        state.prefix.insert(
+                            s.req.tokens,
+                            state.arena._block_tables[s.slot_id],
+                            include_partial=False)
                 else:
                     jax.block_until_ready(logits)
                     s.prefill_s += time.perf_counter() - t0
@@ -697,6 +879,17 @@ class ServiceRuntime:
             if not s.done and not s.prefilling:
                 tokens[s.slot_id] = s.emitted[-1]
                 live[s.slot_id] = True
+                if state.prefix is not None:
+                    # the append position can sit inside a block the
+                    # prefix index froze (this slot's own registered
+                    # partial tail, or a block-aligned shared prefix whose
+                    # last block the generation now extends): COW first
+                    pos = (len(s.req.tokens) + self._extra_cache_tokens()
+                           + len(s.emitted) - 1)
+                    copied = arena.ensure_writable(s.slot_id, pos, 1)
+                    if copied:
+                        self.admission_copy_bytes += (
+                            copied * arena.block_size * arena.token_bytes)
         if not live.any():
             return               # everything awaits eviction or prefill
         if self._paged_decode_fn is None:
@@ -740,9 +933,40 @@ class ServiceRuntime:
         else:
             self._decode_group_dense(state)
 
+    # -- prefix-cache telemetry (summed across DP groups) ---------------
+    def _prefix_totals(self):
+        lk = ht = hits = ev = cow = 0
+        for g in self.groups.values():
+            if g.prefix is not None:
+                lk += g.prefix.lookups
+                hits += g.prefix.hits
+                ht += g.prefix.hit_tokens
+            if g.arena is not None:
+                ev += g.arena.cached_evictions
+                cow += g.arena.cow_copies
+        return lk, hits, ht, ev, cow
+
+    @property
+    def prefix_hit_tokens(self) -> int:
+        return self._prefix_totals()[2]
+
+    @property
+    def prefix_hits(self) -> int:
+        return self._prefix_totals()[1]
+
+    @property
+    def prefix_evictions(self) -> int:
+        return self._prefix_totals()[3]
+
+    @property
+    def prefix_cow_copies(self) -> int:
+        return self._prefix_totals()[4]
+
     def _step_continuous(self, now: float, max_wait_s: float) -> StepStats:
         copy0, whole0 = self.admission_copy_bytes, self.whole_cache_copies
-        steps0 = self.decode_steps
+        steps0, one0 = self.decode_steps, self.oneshot_prefills
+        pfx0 = self._prefix_totals()
+        moe0 = self._moe_stats.dropped if self._moe_stats else 0.0
         results: List[GenerationResult] = []
         for group, state in self.groups.items():
             results.extend(self._evict(group, state, now))
@@ -751,6 +975,7 @@ class ServiceRuntime:
         for state in self.groups.values():
             chunk_tokens += self._prefill_chunks(state)
             self._decode_group(state)
+        pfx1 = self._prefix_totals()
         return StepStats(
             results=results, now=now, admitted=admitted,
             evicted=len(results), in_flight=self.in_flight(),
@@ -759,7 +984,15 @@ class ServiceRuntime:
             admission_copy_bytes=self.admission_copy_bytes - copy0,
             whole_cache_copies=self.whole_cache_copies - whole0,
             decode_steps=self.decode_steps - steps0,
-            prefill_chunk_tokens=chunk_tokens)
+            prefill_chunk_tokens=chunk_tokens,
+            oneshot_prefills=self.oneshot_prefills - one0,
+            prefix_lookups=pfx1[0] - pfx0[0],
+            prefix_hits=pfx1[1] - pfx0[1],
+            prefix_hit_tokens=pfx1[2] - pfx0[2],
+            prefix_evicted_blocks=pfx1[3] - pfx0[3],
+            prefix_cow_blocks=pfx1[4] - pfx0[4],
+            moe_dropped_tokens=((self._moe_stats.dropped - moe0)
+                                if self._moe_stats else 0.0))
 
     # ------------------------------------------------------------------
     # sync mode: run-to-completion batches (the pre-slot baseline)
@@ -777,6 +1010,8 @@ class ServiceRuntime:
         logits, cache = self.prefill_fn(self.params, batch, cache_size)
         logits = jax.block_until_ready(logits)
         t1 = time.perf_counter()
+        self.oneshot_prefills += len(reqs)
+        self.prefill_tokens_computed += sum(len(r.tokens) for r in reqs)
 
         outs = []
         cur = self._sample(logits)

@@ -65,6 +65,15 @@ class SimConfig:
     # delay; ``SimResult.max_prefill_stall_s`` reports the worst stall.
     prefill_chunk_tokens: int = 0
     prefill_token_s: float = 0.0
+    # radix prefix cache (live engine's shared-prefix KV reuse): the
+    # expected fraction of an admission's prompt tokens served from cached
+    # blocks instead of prefill compute.  Applied only to services whose
+    # plan enables the cache (``ParallelPlan.prefix_cache != 0``), so SSSP
+    # placement prices repeated-prefix (frequency) workloads at their
+    # post-reuse prefill cost — reuse-aware capacity feeds placement
+    # quality.  ``SimResult.cached_prefill_s`` reports the total prefill
+    # seconds the cache removed.
+    prefix_hit_rate: float = 0.0
 
 
 @dataclasses.dataclass
@@ -80,6 +89,8 @@ class SimResult:
     first_hops: int = 1
     max_prefill_stall_s: float = 0.0   # worst single-admission prefill
     #                                    stall imposed on live requests
+    cached_prefill_s: float = 0.0      # prefill seconds removed by the
+    #                                    prefix cache (hit-rate model)
 
     @property
     def mean_offloads(self) -> float:
@@ -113,6 +124,10 @@ class Simulation:
             raise ValueError(
                 f"serving_mode must be paged|continuous|sync, got "
                 f"{cfg.serving_mode!r}")
+        if not 0.0 <= cfg.prefix_hit_rate < 1.0:
+            raise ValueError(
+                f"prefix_hit_rate must be in [0, 1), got "
+                f"{cfg.prefix_hit_rate!r}")
         self.meter = GoodputMeter()
         self.server_ids = [s.sid for s in self.servers]
         self.state: Dict[int, _ServerState] = {
@@ -130,6 +145,7 @@ class Simulation:
         self._handled = 0
         self._first_hops = 0
         self._max_prefill_stall = 0.0
+        self._cached_prefill_s = 0.0
         self.placements: List[Tuple[str, int]] = []
 
     # ------------------------------------------------------------------
@@ -227,7 +243,8 @@ class Simulation:
             violations=self.meter.violations,
             offload_counts=self._offload_counts,
             handled=self._handled, first_hops=max(1, self._first_hops),
-            max_prefill_stall_s=self._max_prefill_stall)
+            max_prefill_stall_s=self._max_prefill_stall,
+            cached_prefill_s=self._cached_prefill_s)
 
     # ------------------------------------------------------------------
     def _handle(self, req: Request, sid: int, now: float, push) -> None:
@@ -310,6 +327,21 @@ class Simulation:
             # interleaves with decode, so only this request's own finish
             # pays for it.
             prefill_s = req.prompt_tokens * self.cfg.prefill_token_s
+            # the discount mirrors the live gate exactly: paged data plane
+            # + chunked prefill + token-pure family + plan knob on —
+            # configurations where the real engine cannot reuse must not
+            # be priced as if they could
+            if (self.cfg.prefix_hit_rate > 0 and prefill_s > 0
+                    and self.cfg.serving_mode == "paged"
+                    and self.cfg.prefill_chunk_tokens > 0
+                    and svc.prefix_cacheable
+                    and getattr(plan, "prefix_cache", 0) != 0):
+                # hit-rate-aware prefill: cached prefix tokens skip
+                # compute, so the shared queue (and with it goodput /
+                # placement quality) sees the post-reuse cost
+                saved = prefill_s * self.cfg.prefix_hit_rate
+                prefill_s -= saved
+                self._cached_prefill_s += saved
             stall = prefill_s
             if prefill_s > 0:
                 chunk = self.cfg.prefill_chunk_tokens

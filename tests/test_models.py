@@ -150,8 +150,9 @@ def test_moe_aux_loss_balanced_router():
     from repro.models import moe
     cfg = _reduced("mixtral-8x7b")
     probs = jnp.full((4, 32, cfg.num_experts), 1.0 / cfg.num_experts)
-    combine, aux = moe._top_k_dispatch(probs, 2, capacity=32)
+    combine, aux, dropped = moe._top_k_dispatch(probs, 2, capacity=32)
     assert combine.shape == (4, 32, cfg.num_experts, 32)
+    assert float(dropped) == 0.0      # capacity 32 is never binding here
     # every token keeps exactly k gates (sum of combine weights == 1)
     sums = combine.sum(axis=(-2, -1))
     np.testing.assert_allclose(sums, 1.0, rtol=1e-5)
@@ -195,9 +196,12 @@ def test_moe_dispatch_conservation(seed, L, capacity):
     E, k = 4, 2
     probs = jax.nn.softmax(
         jax.random.normal(jax.random.PRNGKey(seed), (2, L, E)), -1)
-    combine, aux = moe._top_k_dispatch(probs, k, capacity)
+    combine, aux, dropped = moe._top_k_dispatch(probs, k, capacity)
     sums = np.asarray(combine.sum(axis=(-2, -1)))
     assert np.all((np.abs(sums - 1.0) < 1e-4) | (np.abs(sums) < 1e-6))
+    # the drop counter counts exactly the assignments past capacity
+    kept = int((np.asarray(combine) > 0).sum())
+    assert int(dropped) == 2 * L * k - kept
     # capacity: each (group, expert, slot) holds at most one token
     slot_occupancy = np.asarray((combine > 0).sum(axis=1))  # (G, E, C)
     assert slot_occupancy.max() <= 1

@@ -1,0 +1,531 @@
+"""Radix prefix cache: shared-prefix KV reuse over the paged arena.
+
+Covers the arena's refcount lifecycle (share survives source eviction,
+copy-on-write on divergence, LRU reclaim of cached-but-unreferenced
+blocks first), the radix index (block-aligned chains, partial tails,
+subtree eviction), engine-level reuse (identical greedy tokens with the
+cache on vs off, hit/COW/eviction telemetry, cached-token queue-time
+discount), the satellite knob validation, the ring one-shot-fallback
+counter, the MoE expert-capacity drop counter and the simulator's
+hit-rate-aware prefill cost.
+
+``PREFIX_CACHE_EXAMPLES`` scales the property-test budget (the CI
+hypothesis job raises it on a fixed seed)."""
+import os
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.allocator import ParallelPlan
+from repro.core.categories import Sensitivity, TaskCategory
+from repro.models import transformer as T
+from repro.serving.arena import KVArena
+from repro.serving.engine import GenerationRequest, ServiceRuntime
+from repro.serving.prefix_cache import RadixPrefixCache
+
+from conftest import toy_config
+
+LAT = TaskCategory(Sensitivity.LATENCY, False)
+FREQ = TaskCategory(Sensitivity.FREQUENCY, False)
+_EXAMPLES = int(os.environ.get("PREFIX_CACHE_EXAMPLES", "6"))
+
+_CFG = toy_config(num_layers=1, d_model=32, num_heads=2, num_kv_heads=2,
+                  head_dim=16, d_ff=64)
+_PARAMS = None
+
+
+def _params():
+    global _PARAMS
+    if _PARAMS is None:
+        _PARAMS = T.init(jax.random.PRNGKey(7), _CFG)
+    return _PARAMS
+
+
+def _plan(bs=2, category=LAT, **kw):
+    return ParallelPlan(service="t", category=category, bs=bs, **kw)
+
+
+def _arena(capacity=3, max_seq_len=32, block_size=8, **kw):
+    return KVArena(_CFG, T.init_cache, capacity=capacity,
+                   max_seq_len=max_seq_len, block_size=block_size, **kw)
+
+
+def _prefilled(arena, n_tokens, seed=0):
+    rng = np.random.default_rng(seed)
+    prompt = rng.integers(1, _CFG.vocab_size, n_tokens).astype(np.int32)
+    _, cache = T.prefill(_params(), _CFG, {"tokens": prompt[None]},
+                         cache_size=arena.slot_tokens)
+    return prompt, cache
+
+
+# ---------------------------------------------------------------------------
+# arena refcount lifecycle
+# ---------------------------------------------------------------------------
+
+def test_shared_block_survives_source_slot_eviction():
+    """A prefix shared into a second slot must outlive the slot that
+    wrote it: freeing the source only drops its reference."""
+    a = _arena()
+    prompt, cache = _prefilled(a, 16)               # 2 full blocks
+    sA = a.alloc(24)
+    a.write_prefill(sA, cache, prompt_len=16)
+    rowA = a.block_tables()[sA][:2]
+    want = np.asarray(
+        a.dense_view(a.pages, a.block_tables()[sA][None])[0])[:, :, :16]
+    sB = a.alloc(24, shared=list(rowA))
+    assert all(a.block_ref(int(b)) == 2 for b in rowA)
+    a.free(sA)                                      # source evicted
+    assert all(a.block_ref(int(b)) == 1 for b in rowA)
+    rowB = a.block_tables()[sB][:2]
+    np.testing.assert_array_equal(rowB, rowA)       # stitched, not copied
+    got = np.asarray(
+        a.dense_view(a.pages, a.block_tables()[sB][None])[0])[:, :, :16]
+    np.testing.assert_allclose(got, want)
+    a.free(sB)                                      # last ref: blocks free
+    assert len(a._free_blocks) == a.pool_blocks
+
+
+def test_cow_on_divergence_isolates_writers():
+    """cow_block forks a private copy: the sharer's writes land in its
+    copy while the original block (still referenced elsewhere) is
+    untouched."""
+    import jax.numpy as jnp
+    a = _arena()
+    _, cache = _prefilled(a, 16)
+    sA = a.alloc(24)
+    a.write_prefill(sA, cache, prompt_len=16)
+    rowA = a.block_tables()[sA][:2]
+    sB = a.alloc(24, shared=list(rowA))
+    assert a.cow_block(sB, 0)                       # shared -> must copy
+    assert a.cow_copies == 1
+    rowB = a.block_tables()[sB]
+    assert rowB[0] != rowA[0] and rowB[1] == rowA[1]
+    assert a.block_ref(int(rowA[0])) == 1           # back to A alone
+    # the copy starts as an exact clone...
+    rowA_full = a.block_tables()[sA][None]
+    rowB_full = a.block_tables()[sB][None]
+    va = np.asarray(a.dense_view(a.pages, rowA_full)[0])
+    vb = np.asarray(a.dense_view(a.pages, rowB_full)[0])
+    np.testing.assert_allclose(vb[:, :, :8], va[:, :, :8])
+    # ...and diverging writes stay private to B
+    dense_new = [jnp.ones((leaf.shape[0], 1, a.slot_tokens,
+                           *leaf.shape[3:]), leaf.dtype)
+                 for leaf in (cache["k"], cache["v"])]
+    a.pages = a.append_rows(a.pages, dense_new, jnp.zeros((1,), jnp.int32),
+                            jnp.ones((1,), bool), jnp.asarray(rowB_full))
+    va2 = np.asarray(a.dense_view(a.pages, rowA_full)[0])
+    np.testing.assert_allclose(va2, va)             # A unchanged
+    # an exclusively owned, uncached block needs no copy
+    assert not a.cow_block(sB, 0)
+
+
+def test_lru_eviction_reclaims_cached_unreferenced_first():
+    """Under pressure the allocator consumes the free list first, then
+    idle-but-cached blocks in LRU order (firing the evict hook); blocks
+    still referenced by live slots are never reclaimed."""
+    a = _arena(capacity=3, max_seq_len=16, block_size=8)   # pool = 6
+    evicted = []
+    a.evict_hook = evicted.append
+    s0 = a.alloc(16)
+    first = list(a._slot_blocks[s0])
+    for b in first:
+        a.register(b)
+    a.free(s0)                                      # -> idle cached (LRU)
+    s1 = a.alloc(16)
+    second = list(a._slot_blocks[s1])
+    for b in second:
+        a.register(b)
+    a.free(s1)
+    assert list(a._idle_cached) == first + second
+    a.alloc(16)                  # 2 fresh blocks still on the free list
+    assert evicted == [] and a.cached_evictions == 0
+    a.alloc(16)                  # free list empty: reclaim LRU cached
+    assert evicted == first      # oldest released first
+    assert a.cached_evictions == 2
+    hit_capable = set(a._idle_cached)
+    assert hit_capable == set(second)               # MRU half survives
+
+
+def test_retention_bound_caps_idle_cache():
+    """The category knob: a bounded retention evicts LRU idle blocks as
+    soon as the bound is exceeded, without allocator pressure."""
+    a = _arena(capacity=3, max_seq_len=16, block_size=8)
+    a.cache_retention = 2
+    s0 = a.alloc(16)
+    blocks = list(a._slot_blocks[s0])
+    for b in blocks:
+        a.register(b)
+    s1 = a.alloc(16)
+    more = list(a._slot_blocks[s1])
+    for b in more:
+        a.register(b)
+    a.free(s0)
+    assert len(a._idle_cached) == 2
+    a.free(s1)                   # 4 idle > bound 2: evict 2 oldest
+    assert len(a._idle_cached) == 2
+    assert list(a._idle_cached) == more
+    assert a.cached_evictions == 2
+
+
+# ---------------------------------------------------------------------------
+# radix index
+# ---------------------------------------------------------------------------
+
+def test_radix_lookup_full_blocks_partial_tail_and_cap():
+    a = _arena(capacity=2, max_seq_len=48, block_size=8)
+    pc = RadixPrefixCache(a)
+    s0 = a.alloc(24)
+    tokens = np.arange(1, 21, dtype=np.int32)        # 20: 2 full + 4 tail
+    pc.insert(tokens, a.block_tables()[s0])
+    row = a.block_tables()[s0]
+    assert all(a.is_cached(int(b)) for b in row[:3])
+
+    hit = pc.lookup(tokens)                          # identical prompt
+    assert hit.tokens == 19                          # capped at len - 1
+    assert hit.full_blocks == 2 and hit.partial_valid == 3
+    assert hit.blocks == [int(row[0]), int(row[1]), int(row[2])]
+
+    longer = np.concatenate([tokens, [77, 78]]).astype(np.int32)
+    hit = pc.lookup(longer)                          # full partial usable
+    assert hit.tokens == 20 and hit.partial_valid == 4
+
+    fork = np.concatenate([tokens[:12], [99, 98, 97, 96]]).astype(np.int32)
+    hit = pc.lookup(fork)                            # diverges mid-block 2
+    assert hit.tokens == 8 and hit.full_blocks == 1
+    assert hit.partial_valid == 0                    # no partials at depth 1
+
+    assert pc.lookup(tokens[:5]).tokens == 0         # sub-block prompt
+
+
+def test_radix_eviction_drops_subtree_and_frees_blocks():
+    """Reclaiming a chain's root block must unregister its whole subtree
+    (descendants are unreachable without the root) and return idle ones
+    to the free list."""
+    a = _arena(capacity=2, max_seq_len=48, block_size=8)
+    pc = RadixPrefixCache(a)
+    s0 = a.alloc(24)
+    tokens = np.arange(1, 21, dtype=np.int32)
+    pc.insert(tokens, a.block_tables()[s0])
+    assert len(pc) == 3
+    a.free(s0)                    # 3 idle cached, 9 on the free list
+    a.alloc(48, slot=0)           # 6 blocks off the free list
+    assert a.cached_evictions == 0
+    a.alloc(48, slot=1)           # 3 free left: reclaim the cached chain
+    assert a.cached_evictions >= 1
+    assert len(pc) == 0           # root eviction dropped child + partial
+    assert pc.lookup(tokens).tokens == 0
+
+
+def test_insert_dedupes_onto_existing_chain():
+    """Two identical prompts prefilled independently: the second insert
+    reuses the first chain; its own blocks stay private and return to the
+    free list on eviction."""
+    a = _arena(capacity=2, max_seq_len=32, block_size=8)
+    pc = RadixPrefixCache(a)
+    tokens = np.arange(1, 17, dtype=np.int32)        # exactly 2 blocks
+    s0, s1 = a.alloc(24), a.alloc(24)
+    assert pc.insert(tokens, a.block_tables()[s0]) == 2
+    assert pc.insert(tokens, a.block_tables()[s1]) == 0   # deduped
+    hit = pc.lookup(np.concatenate([tokens, [5]]).astype(np.int32))
+    assert hit.blocks == [int(b) for b in a.block_tables()[s0][:2]]
+    a.free(s1)
+    assert len(a._free_blocks) >= 3   # s1's blocks uncached -> free list
+
+
+# ---------------------------------------------------------------------------
+# engine-level reuse
+# ---------------------------------------------------------------------------
+
+def _serve(rt, reqs):
+    for r in reqs:
+        rt.submit(r)
+    return {r.rid: tuple(r.tokens) for r in rt.drain()}
+
+
+def _shared_prefix_reqs(rng, prefix, n, rid0=0, tail=6, max_new=3):
+    reqs = []
+    for i in range(n):
+        t = rng.integers(1, _CFG.vocab_size, tail).astype(np.int32)
+        reqs.append(GenerationRequest(
+            rid=rid0 + i, tokens=np.concatenate([prefix, t]),
+            max_new_tokens=max_new))
+    return reqs
+
+
+def test_repeated_prefix_identical_tokens_and_hit_telemetry():
+    rng = np.random.default_rng(3)
+    prefix = rng.integers(1, _CFG.vocab_size, 24).astype(np.int32)
+
+    def run(**kw):
+        rt = ServiceRuntime(_CFG, _params(), _plan(bs=2), max_seq_len=64,
+                            block_size=8, **kw)
+        r = np.random.default_rng(5)
+        toks = _serve(rt, _shared_prefix_reqs(r, prefix, 1))      # warm
+        toks.update(_serve(rt, _shared_prefix_reqs(r, prefix, 4, rid0=1)))
+        return rt, toks
+
+    rt_on, toks_on = run()
+    rt_off, toks_off = run(prefix_cache=0)
+    assert rt_on.prefix_cache_enabled and not rt_off.prefix_cache_enabled
+    assert toks_on == toks_off
+    assert rt_on.prefix_hits >= 3
+    assert rt_on.prefix_hit_tokens >= 3 * 24
+    assert rt_on.prefill_tokens_computed < rt_off.prefill_tokens_computed
+    assert rt_off.prefix_hits == 0
+    total = sum(24 + 6 for _ in range(5))
+    assert rt_off.prefill_tokens_computed == total    # no silent reuse
+
+
+def test_step_stats_report_prefix_counters():
+    rng = np.random.default_rng(4)
+    prefix = rng.integers(1, _CFG.vocab_size, 16).astype(np.int32)
+    rt = ServiceRuntime(_CFG, _params(), _plan(bs=2), max_seq_len=64,
+                        block_size=8)
+    _serve(rt, _shared_prefix_reqs(rng, prefix, 1))    # warm + insert
+    rt.submit(_shared_prefix_reqs(rng, prefix, 1, rid0=1)[0])
+    stats = rt.step()
+    assert stats.prefix_lookups == 1 and stats.prefix_hits == 1
+    assert stats.prefix_hit_tokens >= 16
+    assert stats.admitted == 1
+    rt.drain()
+    # cumulative counters stay consistent with per-step deltas
+    assert rt.prefix_hits == 1 and rt.prefix_hit_tokens == stats.prefix_hit_tokens
+
+
+def test_partial_tail_hit_triggers_cow_not_corruption():
+    """Prompts diverging mid-block share the partial tail block and COW
+    on first write; the warm prompt's later requests still hit its own
+    chain and decode identically to a cache-off run."""
+    rng = np.random.default_rng(9)
+    base = rng.integers(1, _CFG.vocab_size, 20).astype(np.int32)  # 2.5 blk
+
+    def run(**kw):
+        rt = ServiceRuntime(_CFG, _params(), _plan(bs=2), max_seq_len=64,
+                            block_size=8, **kw)
+        toks = _serve(rt, [GenerationRequest(rid=0, tokens=base,
+                                             max_new_tokens=3)])
+        wave = [GenerationRequest(                     # same 18, fork at 19
+            rid=1, tokens=np.concatenate([base[:18], [88, 87]])
+            .astype(np.int32), max_new_tokens=3),
+            GenerationRequest(rid=2, tokens=base.copy(), max_new_tokens=3)]
+        toks.update(_serve(rt, wave))
+        return rt, toks
+
+    rt_on, toks_on = run()
+    rt_off, toks_off = run(prefix_cache=0)
+    assert toks_on == toks_off
+    assert rt_on.prefix_cow_copies >= 1
+
+
+def test_tight_pool_degrades_partial_share_without_failure():
+    """When the pool cannot afford a partial-tail share's divergence-COW
+    block, admission degrades to the full-block hit instead of raising
+    mid-step — and tokens stay identical to a cache-off run."""
+    rng = np.random.default_rng(2)
+    base = rng.integers(1, _CFG.vocab_size, 20).astype(np.int32)
+    blocker_prompt = rng.integers(1, _CFG.vocab_size, 16).astype(np.int32)
+    member_prompt = np.concatenate([base[:19], [90]]).astype(np.int32)
+
+    def run(knob):
+        rt = ServiceRuntime(_CFG, _params(), _plan(bs=2), max_seq_len=48,
+                            block_size=8, pool_blocks=6, prefix_cache=knob)
+        toks = _serve(rt, [GenerationRequest(rid=0, tokens=base,
+                                             max_new_tokens=2)])
+        # blocker misses and pins the 3 remaining free blocks mid-decode
+        rt.submit(GenerationRequest(rid=1, tokens=blocker_prompt,
+                                    max_new_tokens=6))
+        rt.step(); rt.step()
+        # the member's partial-tail hit cannot afford its COW block now
+        rt.submit(GenerationRequest(rid=2, tokens=member_prompt,
+                                    max_new_tokens=2))
+        stats = rt.step()
+        toks.update({r.rid: tuple(r.tokens) for r in rt.drain()})
+        return rt, toks, stats
+
+    rt_on, toks_on, stats = run(6)   # retention = pool: never knob-evicted
+    _, toks_off, _ = run(0)
+    assert toks_on == toks_off and len(toks_on) == 3
+    assert stats.admitted == 1
+    assert stats.prefix_hit_tokens == 16     # degraded: 2 full blocks only
+    assert stats.prefix_cow_blocks == 0      # ...so no divergence copy
+
+
+def test_queue_time_estimate_discounts_cached_tokens():
+    rt = ServiceRuntime(_CFG, _params(), _plan(bs=1), max_seq_len=64,
+                        block_size=8)
+    assert rt.prefix_cache_enabled
+    rt._service_ewma_s = 1.0
+    rt.submit(GenerationRequest(rid=0,
+                                tokens=np.arange(1, 50, dtype=np.int32),
+                                max_new_tokens=1))
+    cold = rt.queue_time_estimate()
+    rt._prefix_hit_ewma = 0.9
+    warm = rt.queue_time_estimate()
+    assert 0.0 < warm < cold
+
+
+# ---------------------------------------------------------------------------
+# property test: random share/COW/evict interleavings never corrupt
+# another slot's decode output
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=_EXAMPLES, deadline=None, derandomize=True)
+@given(seed=st.integers(0, 2 ** 16), bs=st.integers(1, 3),
+       retention=st.integers(1, 6))
+def test_random_share_cow_evict_never_corrupts_neighbors(seed, bs,
+                                                         retention):
+    """Random admit schedules over prompts with shared, mid-block-diverging
+    prefixes — under a tight retention bound that forces LRU eviction mid-
+    flight — must produce byte-identical greedy tokens to a cache-off
+    run for EVERY request."""
+    rng = np.random.default_rng(seed)
+    bases = [rng.integers(1, _CFG.vocab_size, 24).astype(np.int32)
+             for _ in range(2)]
+    reqs = []
+    for i in range(6):
+        base = bases[int(rng.integers(0, 2))]
+        cut = int(rng.integers(4, 25))
+        tail = rng.integers(1, _CFG.vocab_size,
+                            int(rng.integers(0, 6))).astype(np.int32)
+        prompt = np.concatenate([base[:cut], tail]).astype(np.int32)
+        reqs.append((prompt, int(rng.integers(1, 5))))
+
+    def run(knob):
+        rt = ServiceRuntime(_CFG, _params(), _plan(bs=bs), max_seq_len=48,
+                            block_size=8, prefix_cache=knob)
+        for i, (p, n) in enumerate(reqs[:3]):
+            rt.submit(GenerationRequest(rid=i, tokens=p, max_new_tokens=n))
+        rt.step(); rt.step()                 # interleave mid-decode
+        for i, (p, n) in enumerate(reqs[3:], start=3):
+            rt.submit(GenerationRequest(rid=i, tokens=p, max_new_tokens=n))
+        return {r.rid: tuple(r.tokens) for r in rt.drain()}
+
+    assert run(retention) == run(0), (seed, bs, retention)
+
+
+# ---------------------------------------------------------------------------
+# satellites: knob validation, ring fallback counter, MoE drop counter,
+# simulator hit-rate model
+# ---------------------------------------------------------------------------
+
+def test_parallel_plan_validates_knobs_at_construction():
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        _plan(prefill_chunk=-8)
+    with pytest.raises(ValueError, match="prefix_cache"):
+        _plan(prefix_cache=-2)
+    with pytest.raises(ValueError, match="bs"):
+        ParallelPlan(service="t", category=LAT, bs=0)
+    # category-derived retention: frequency keeps the pool, latency a
+    # bounded fraction
+    assert _plan(category=FREQ).prefix_cache_blocks(32) == 32
+    assert _plan(category=LAT).prefix_cache_blocks(32) == 8
+    assert _plan(prefix_cache=0).prefix_cache_blocks(32) == 0
+    assert _plan(prefix_cache=5).prefix_cache_blocks(32) == 5
+
+
+def test_engine_validates_chunk_and_prefix_knobs():
+    with pytest.raises(ValueError, match="multiple of block_size"):
+        ServiceRuntime(_CFG, _params(), _plan(), max_seq_len=64,
+                       block_size=8, prefill_chunk=20)
+    with pytest.raises(ValueError, match="multiple of block_size"):
+        ServiceRuntime(_CFG, _params(), _plan(prefill_chunk=20),
+                       max_seq_len=64, block_size=8)
+    with pytest.raises(ValueError, match="prefix_cache"):
+        ServiceRuntime(_CFG, _params(), _plan(), max_seq_len=64,
+                       block_size=8, prefix_cache=-5)
+    # explicit prefix cache on a family whose KV is not a pure function
+    # of prompt tokens must fail loudly
+    ssm_cfg = toy_config(family="ssm", ssm_state=4, ssm_headdim=16)
+    from repro.models import ssm as S
+    with pytest.raises(ValueError, match="family"):
+        ServiceRuntime(ssm_cfg, S.init(jax.random.PRNGKey(0), ssm_cfg),
+                       _plan(), max_seq_len=64, block_size=8,
+                       prefix_cache=True)
+
+
+def test_ring_layout_falls_back_to_oneshot_with_counter():
+    """Sliding-window (ring) layouts cannot take chunked prefill; the
+    fallback is an explicit engine state plus a StepStats counter instead
+    of a silent slow path."""
+    cfg = toy_config(sliding_window=16)
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    rt = ServiceRuntime(cfg, params, _plan(bs=2), max_seq_len=64,
+                        block_size=8)
+    assert not rt.chunked_prefill and rt.ring_fallback
+    assert not rt.prefix_cache_enabled          # needs chunked prefill
+    rt.submit(GenerationRequest(rid=0, tokens=np.arange(1, 9,
+                                                        dtype=np.int32),
+                                max_new_tokens=2))
+    stats = rt.step()
+    assert stats.oneshot_prefills == 1
+    rt.drain()
+    assert rt.oneshot_prefills == 1
+    # non-ring chunked configs never take the one-shot path
+    rt2 = ServiceRuntime(_CFG, _params(), _plan(bs=2), max_seq_len=64,
+                         block_size=8)
+    rt2.submit(GenerationRequest(rid=0, tokens=np.arange(1, 9,
+                                                         dtype=np.int32),
+                                 max_new_tokens=2))
+    rt2.drain()
+    assert rt2.oneshot_prefills == 0 and not rt2.ring_fallback
+
+
+def test_moe_capacity_drop_counter_observes_binding_capacity():
+    from repro.models import moe as M
+    cfg = toy_config(family="moe", num_experts=4, experts_per_token=2,
+                     moe_capacity_factor=0.25)       # binding capacity
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    rt = ServiceRuntime(cfg, params, _plan(bs=2), max_seq_len=48,
+                        block_size=8)
+    assert rt._moe_stats is M.MOE_DROP_STATS
+    d0 = M.MOE_DROP_STATS.dropped
+    rng = np.random.default_rng(0)
+    dropped = 0.0
+    rt.submit(GenerationRequest(
+        rid=0, tokens=rng.integers(1, cfg.vocab_size, 12).astype(np.int32),
+        max_new_tokens=2))
+    while rt.pending() or rt.in_flight():
+        dropped += rt.step().moe_dropped_tokens
+    assert M.MOE_DROP_STATS.dropped > d0             # drops observed
+    assert dropped > 0.0                             # ...and attributed
+    assert 0.0 < M.MOE_DROP_STATS.drop_rate <= 1.0
+
+
+def test_simulator_prefix_hit_rate_prices_reuse():
+    import dataclasses as dc
+
+    from repro.core.categories import Request, ServerSpec, ServiceSpec
+    from repro.simulator.engine import SimConfig, run_comparison
+
+    servers = [ServerSpec(sid=0, num_gpus=2)]
+    services = {"chat": ServiceSpec("chat", flops_per_request=5e9,
+                                    weights_bytes=1e8, vram_bytes=3e8,
+                                    slo_latency_s=0.4)}
+    rng = np.random.default_rng(0)
+    events, t = [], 0.0
+    for i in range(50):
+        t += float(rng.exponential(0.05))
+        events.append((t, 0, Request(rid=i, service="chat", arrival_s=t,
+                                     deadline_s=t + 0.4,
+                                     prompt_tokens=400)))
+    base = SimConfig(horizon_s=10.0, sync_interval_s=1.0,
+                     prefill_token_s=2e-4, prefill_chunk_tokens=64)
+    cold = run_comparison(servers, services, events, ["EPARA"],
+                          base)["EPARA"]
+    warm = run_comparison(servers, services, events, ["EPARA"],
+                          dc.replace(base, prefix_hit_rate=0.75))["EPARA"]
+    assert warm.cached_prefill_s > 0.0 and cold.cached_prefill_s == 0.0
+    assert warm.goodput >= cold.goodput
+    # services the live engine cannot cache (SSM state, enc-dec/VLM
+    # embedding-dependent KV) never get the discount
+    uncached = {"chat": dc.replace(services["chat"],
+                                   prefix_cacheable=False)}
+    gated = run_comparison(servers, uncached, events, ["EPARA"],
+                           dc.replace(base, prefix_hit_rate=0.75))["EPARA"]
+    assert gated.cached_prefill_s == 0.0
+    with pytest.raises(ValueError, match="prefix_hit_rate"):
+        run_comparison(servers, services, events, ["EPARA"],
+                       dc.replace(base, prefix_hit_rate=1.5))
