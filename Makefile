@@ -1,8 +1,8 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test smoke bench bench-paged bench-chunked bench-prefix serve \
-	quickstart
+.PHONY: test smoke bench bench-paged bench-chunked bench-prefix \
+	bench-decode serve quickstart
 
 test:                ## tier-1 suite
 	python -m pytest -x -q
@@ -24,6 +24,10 @@ bench-chunked:       ## chunked vs unchunked prefill (head-of-line stall)
 bench-prefix:        ## radix prefix cache vs cold prefill (token reuse)
 	REPRO_BENCH_SMOKE=$${REPRO_BENCH_SMOKE:-0} PYTHONHASHSEED=0 \
 	REPRO_BENCH_SECTION=prefix python -m benchmarks.continuous_batching
+
+bench-decode:        ## zero-gather paged decode vs dense-gather oracle
+	REPRO_BENCH_SMOKE=$${REPRO_BENCH_SMOKE:-0} PYTHONHASHSEED=0 \
+	REPRO_BENCH_SECTION=decode python -m benchmarks.continuous_batching
 
 serve:               ## end-to-end serving driver
 	python -m repro.launch.serve

@@ -1,6 +1,7 @@
-"""Serving data planes compared: paged KV arena vs dense merge vs sync.
+"""Serving data planes compared: paged KV arena vs dense merge vs sync,
+plus the zero-gather decode telemetry (``BENCH_decode.json``).
 
-Three comparisons on the paper's bursty mixed-``max_new_tokens`` workloads:
+Comparisons on the paper's bursty mixed-``max_new_tokens`` workloads:
 
 1. **Live engine** (toy dense model on CPU): the same request set served
    by the paged arena (``kvcache_impl="paged"``), the dense merge path
@@ -302,6 +303,113 @@ def _prefix_cache_rows() -> list:
     ]
 
 
+def _decode_telemetry_rows() -> list:
+    """Zero-gather paged decode vs the dense-gather oracle, with a
+    machine-readable ``BENCH_decode.json`` so future PRs have a perf
+    trajectory to regress against: per-step decode latency, estimated
+    bytes/token from the compiled step's ``cost_analysis()``, compile
+    counts and prefill-token counts per variant.
+
+    Acceptance (asserted):
+      * identical greedy tokens native vs dense-gather oracle;
+      * exactly 1 decode compile per variant;
+      * the paged-native step's cost_analysis bytes accessed are LOWER
+        than the oracle's (no dense KV materialization on the hot path).
+    """
+    import json
+    import time
+
+    import jax
+
+    from repro.core.allocator import ParallelPlan
+    from repro.core.categories import Sensitivity, TaskCategory
+    from repro.models import transformer as T
+    from repro.models.config import ModelConfig
+    from repro.serving.engine import GenerationRequest, ServiceRuntime
+
+    # a slot budget large enough that the KV pool (the term the gather
+    # path round-trips per token) dominates the toy model's weights
+    cfg = ModelConfig(name="bench", family="dense", num_layers=2,
+                      d_model=64, num_heads=4, num_kv_heads=2, head_dim=32,
+                      d_ff=128, vocab_size=257, dtype="float32",
+                      param_dtype="float32")
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    plan = ParallelPlan(service="bench",
+                        category=TaskCategory(Sensitivity.LATENCY, False),
+                        bs=4)
+    n_new = 8 if _smoke() else 24
+    max_seq = 256 if _smoke() else 512
+
+    def _measure(native):
+        rt = ServiceRuntime(cfg, params, plan, kvcache_impl="paged",
+                            max_seq_len=max_seq, block_size=32,
+                            paged_native=native)
+        rng = np.random.default_rng(5)
+        tokens = {}
+        for i in range(4):
+            rt.submit(GenerationRequest(
+                rid=i, tokens=rng.integers(1, cfg.vocab_size,
+                                           6 + 4 * i).astype(np.int32),
+                max_new_tokens=n_new))
+        rt.step(); rt.step(); rt.step()     # admit + prefill + warm compile
+        lat = []
+        while rt.pending() or rt.in_flight():
+            t0 = time.perf_counter()
+            stats = rt.step()
+            if stats.decode_steps:
+                lat.append(time.perf_counter() - t0)
+            for r in stats.results:
+                tokens[r.rid] = tuple(r.tokens)
+        cost = rt.decode_cost_analysis()
+        bytes_accessed = float(cost.get("bytes accessed", 0.0))
+        return {
+            "decode_bytes_accessed": bytes_accessed,
+            "decode_bytes_per_token": bytes_accessed / rt.groups[0]
+            .arena.capacity,
+            "decode_step_latency_s": {
+                "mean": float(np.mean(lat)), "p50": float(np.median(lat)),
+                "max": float(np.max(lat)), "steps": len(lat)},
+            "decode_compiles": rt.decode_traces,
+            "prefill_compiles": rt.prefill_traces,
+            "decode_steps": rt.decode_steps,
+            "prefill_tokens_computed": rt.prefill_tokens_computed,
+            "admission_copy_bytes": rt.admission_copy_bytes,
+            "chunk_write_bytes": rt.chunk_write_bytes,
+        }, tokens, rt
+
+    native, toks_n, rt_n = _measure(True)
+    gather, toks_g, rt_g = _measure(False)
+    # acceptance gates
+    assert toks_n == toks_g                       # bit-identical tokens
+    assert rt_n.decode_traces <= 1 and rt_g.decode_traces <= 1
+    assert native["decode_bytes_accessed"] < gather["decode_bytes_accessed"]
+    reduction = 1.0 - (native["decode_bytes_accessed"]
+                       / gather["decode_bytes_accessed"])
+    report = {
+        "workload": {"family": cfg.family, "capacity": 4,
+                     "max_seq_len": max_seq, "block_size": 32,
+                     "max_new_tokens": n_new, "smoke": _smoke()},
+        "variants": {"paged_native": native, "dense_gather": gather},
+        "decode_bytes_reduction": reduction,
+    }
+    with open("BENCH_decode.json", "w") as f:
+        json.dump(report, f, indent=2)
+    return [
+        ("serve_decode_native", native["decode_step_latency_s"]["mean"]
+         * 1e6,
+         f"bytes_accessed={native['decode_bytes_accessed']:.0f};"
+         f"decode_compiles={native['decode_compiles']};"
+         f"steps={native['decode_steps']}"),
+        ("serve_decode_dense_gather",
+         gather["decode_step_latency_s"]["mean"] * 1e6,
+         f"bytes_accessed={gather['decode_bytes_accessed']:.0f};"
+         f"decode_compiles={gather['decode_compiles']}"),
+        ("serve_decode_bytes_saving", 0.0,
+         f"{reduction:.0%}_of_decode_step_bytes_removed;"
+         f"json=BENCH_decode.json"),
+    ]
+
+
 def _simulator_rows() -> list:
     import dataclasses
 
@@ -334,10 +442,12 @@ def _simulator_rows() -> list:
 
 def run() -> list:
     """REPRO_BENCH_SECTION selects sections (comma list of
-    live|chunked|prefix|sim); unset runs them all.  ``make bench-paged``
-    pins ``live,sim``, ``make bench-chunked`` pins ``chunked`` and
-    ``make bench-prefix`` pins ``prefix`` so the targets do not re-run
-    each other's workloads."""
+    live|chunked|prefix|decode|sim); unset runs them all.  ``make
+    bench-paged`` pins ``live,sim``, ``make bench-chunked`` pins
+    ``chunked``, ``make bench-prefix`` pins ``prefix`` and ``make
+    bench-decode`` pins ``decode`` (which also writes
+    ``BENCH_decode.json``) so the targets do not re-run each other's
+    workloads."""
     sections = [s for s in os.environ.get("REPRO_BENCH_SECTION",
                                           "").split(",") if s]
     rows: list = []
@@ -347,6 +457,8 @@ def run() -> list:
         rows.extend(_chunked_prefill_rows())
     if not sections or "prefix" in sections:
         rows.extend(_prefix_cache_rows())
+    if not sections or "decode" in sections:
+        rows.extend(_decode_telemetry_rows())
     if not sections or "sim" in sections:
         rows.extend(_simulator_rows())
     return rows

@@ -86,7 +86,8 @@ def main():
         for svc, rt in m.items():
             print(f"  server{sid}/{svc}: {rt.decode_traces} decode "
                   f"compile(s), {rt.whole_cache_copies} whole-cache "
-                  f"copies, {rt.admission_copy_bytes // 1024} KB admitted")
+                  f"copies, {rt.admission_copy_bytes // 1024} KB copied, "
+                  f"{rt.chunk_write_bytes // 1024} KB chunk-written")
     print("done.")
 
 

@@ -19,11 +19,12 @@ Two cache layouts are supported:
   ``paged_decode_attention_pallas`` scalar-prefetches the block table so
   each grid step's BlockSpec index map resolves logical block ``ki`` of
   batch ``b`` to its physical page — K/V stream straight from the pool
-  with no gather materialization.  ``paged_gather_ref`` is the CPU/XLA
-  fallback (dense gather through the table, then the dense kernel math),
-  and is what the serving engine's fused step uses on every backend
-  today; wiring the Pallas kernel through the model families' decode
-  path is a ROADMAP follow-up.
+  with no gather materialization.  The model families' paged-native
+  decode/chunk steps (``decode_step_paged`` / ``prefill_chunk_paged``)
+  dispatch here through ``ops.paged_decode_attention`` /
+  ``ops.paged_chunk_attention``; ``paged_gather_ref`` is the CPU/XLA
+  fallback (per-slot gather through a ``mask_block_tables``-clipped
+  table, then the dense kernel math).
 """
 from __future__ import annotations
 
@@ -387,6 +388,26 @@ def paged_gather_ref(pages, block_tables):
     _, bs, Hkv, D = pages.shape
     g = pages[block_tables]                    # (B, nblk, bs, Hkv, D)
     return g.reshape(B, nblk * bs, Hkv, D)
+
+
+def mask_block_tables(block_tables, valid_len, block_size, trash):
+    """Route every table entry wholly past ``valid_len`` to the ``trash``
+    block before a ref-fallback gather.
+
+    The Pallas kernels skip blocks at or past each slot's valid length via
+    their ``@pl.when`` gates, so their HBM traffic scales with LIVE tokens.
+    The CPU/XLA gather cannot shrink its (static) output, but it can stop
+    streaming cold pages the softmax will mask anyway: with every
+    past-``valid_len`` entry pointing at the one trash page, the gather
+    reads per-slot up-to-len rows plus a single hot page instead of the
+    slot's full pool — bit-identical outputs (masked positions never
+    survive the softmax) with live-token-bound unique-byte traffic."""
+    nblk = block_tables.shape[1]
+    starts = jnp.arange(nblk, dtype=jnp.int32)[None] * block_size
+    valid_len = jnp.asarray(valid_len, jnp.int32)
+    if valid_len.ndim == 0:
+        valid_len = jnp.full((block_tables.shape[0],), valid_len)
+    return jnp.where(starts < valid_len[:, None], block_tables, trash)
 
 
 def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,

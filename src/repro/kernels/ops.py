@@ -19,7 +19,8 @@ import jax.numpy as jnp
 
 from . import ref
 from .decode_attention import (chunk_prefill_attention_pallas,
-                               decode_attention_pallas, paged_gather_ref,
+                               decode_attention_pallas, mask_block_tables,
+                               paged_gather_ref,
                                paged_chunk_prefill_attention_pallas,
                                paged_decode_attention_pallas)
 from .flash_attention import flash_attention_pallas
@@ -106,16 +107,21 @@ def decode_attention(q, k_cache, v_cache, cache_len, *,
 
 def paged_decode_attention(q, k_pages, v_pages, block_tables, cache_len, *,
                            softmax_scale=None, impl: Optional[str] = None):
-    """Decode attention against the serving arena's paged KV layout.
+    """Decode attention against the serving arena's paged KV layout — the
+    families' paged-native decode hot path.
 
-    ``"ref"`` gathers the pages densely through the block table and runs
-    the jnp oracle (the CPU fallback the slot engine uses); the Pallas
-    path streams K/V through the table via scalar prefetch.
+    ``"ref"`` gathers per-slot rows through a length-clipped block table
+    (entries past ``cache_len`` route to the trash page, so the CPU
+    fallback streams up-to-len rows instead of each slot's full pool) and
+    runs the jnp oracle; the Pallas path streams K/V through the table via
+    scalar prefetch and skips past-len blocks entirely.
     """
     impl = impl or default_impl()
     if impl == "ref":
-        k = paged_gather_ref(k_pages, block_tables)
-        v = paged_gather_ref(v_pages, block_tables)
+        bs, trash = k_pages.shape[1], k_pages.shape[0] - 1
+        bt = mask_block_tables(block_tables, cache_len, bs, trash)
+        k = paged_gather_ref(k_pages, bt)
+        v = paged_gather_ref(v_pages, bt)
         return ref.decode_attention_ref(q, k, v, cache_len,
                                         softmax_scale=softmax_scale)
     return paged_decode_attention_pallas(
@@ -145,16 +151,22 @@ def chunk_attention(q, k_cache, v_cache, start, chunk_len, *,
 def paged_chunk_attention(q, k_pages, v_pages, block_tables, start,
                           chunk_len, *, prefix_len: int = 0,
                           softmax_scale=None, impl: Optional[str] = None):
-    """Chunk-prefill attention against the serving arena's paged KV layout.
+    """Chunk-prefill attention against the serving arena's paged KV layout
+    — the families' paged-native chunked-prefill hot path.
 
-    ``"ref"`` gathers the pages densely through the block table and runs
-    the jnp chunk oracle (the CPU fallback the slot engine uses); the
+    ``"ref"`` gathers per-slot rows through a length-clipped block table
+    (every attendable position sits below ``start + chunk_len``; entries
+    past it route to the trash page) and runs the jnp chunk oracle; the
     Pallas path streams K/V through the table via scalar prefetch.
     """
     impl = impl or default_impl()
     if impl == "ref":
-        k = paged_gather_ref(k_pages, block_tables)
-        v = paged_gather_ref(v_pages, block_tables)
+        bs, trash = k_pages.shape[1], k_pages.shape[0] - 1
+        end = jnp.asarray(start, jnp.int32) + jnp.asarray(chunk_len,
+                                                          jnp.int32)
+        bt = mask_block_tables(block_tables, end, bs, trash)
+        k = paged_gather_ref(k_pages, bt)
+        v = paged_gather_ref(v_pages, bt)
         return ref.chunk_attention_ref(q, k, v, start, chunk_len,
                                        prefix_len=prefix_len,
                                        softmax_scale=softmax_scale)

@@ -76,6 +76,12 @@ def main(argv=None) -> int:
                          "category-derived bound (frequency retains "
                          "aggressively, latency bounded), 0 = disabled, "
                          ">0 = max idle cached blocks")
+    ap.add_argument("--pjit-decode", action="store_true",
+                    help="build each service's fused paged decode step "
+                         "under pjit on a (1, device_count) service mesh "
+                         "(data, model) — the MP-sharded zero-gather "
+                         "path; on one CPU device this is a trivial mesh "
+                         "but exercises the same build")
     args = ap.parse_args(argv)
 
     # mirror the engine's knob validation at the flag boundary so a bad
@@ -117,6 +123,15 @@ def main(argv=None) -> int:
     engines = {s.sid: EparaServingEngine() for s in servers}
     rng = np.random.default_rng(args.seed)
     import dataclasses as _dc
+    step_builder = None
+    if args.pjit_decode:
+        # MP-sharded paged decode: the same pure fused step, jitted with
+        # the service mesh's shardings (launch/steps.paged_decode_builder)
+        from repro.launch import mesh as meshlib
+        from repro.launch.steps import paged_decode_builder
+        service_mesh = meshlib.make_mesh((1, jax.device_count()),
+                                         ("data", "model"))
+        step_builder = paged_decode_builder(service_mesh)
     for svc, sid in placements:
         if sid < 0:
             continue
@@ -130,7 +145,8 @@ def main(argv=None) -> int:
                             max_seq_len=args.max_seq_len,
                             block_size=args.block_size,
                             chunked_prefill=chunked,
-                            prefill_chunk=(args.prefill_chunk or None))
+                            prefill_chunk=(args.prefill_chunk or None),
+                            paged_step_builder=step_builder)
         engines[sid].deploy(svc, rt)
 
     # drive requests through handler -> engine
@@ -184,14 +200,16 @@ def main(argv=None) -> int:
           f"in {dt:.2f}s ({toks/dt:.1f} tok/s, {steps} fused decode steps, "
           f"mode={args.mode}, kvcache={args.kvcache_impl})  "
           f"outcomes={outcomes}")
-    chunk_calls = sum(rt.prefill_chunk_calls for eng in engines.values()
-                      for rt in eng.runtimes.values())
-    pf_traces = sum(rt.prefill_traces for eng in engines.values()
-                    for rt in eng.runtimes.values())
+    rts = [rt for eng in engines.values() for rt in eng.runtimes.values()]
+    chunk_calls = sum(rt.prefill_chunk_calls for rt in rts)
+    pf_traces = sum(rt.prefill_traces for rt in rts)
+    chunk_mb = sum(rt.chunk_write_bytes for rt in rts) / 1e6
+    native = sum(rt.paged_native for rt in rts)
     print(f"data plane: {traces} decode compiles, {pf_traces} prefill "
           f"compiles, {chunk_calls} prefill chunks, {copies} whole-cache "
-          f"admission copies, {copy_mb:.2f} MB admission-copy bytes")
-    rts = [rt for eng in engines.values() for rt in eng.runtimes.values()]
+          f"admission copies, {copy_mb:.2f} MB admission-copy bytes, "
+          f"{chunk_mb:.2f} MB chunk writes, {native}/{len(rts)} "
+          f"zero-gather paged-native services")
     hit_toks = sum(rt.prefix_hit_tokens for rt in rts)
     computed = sum(rt.prefill_tokens_computed for rt in rts)
     print(f"prefix cache: {sum(rt.prefix_hits for rt in rts)} hits, "

@@ -238,6 +238,70 @@ def prefill_chunk(params, cfg: ModelConfig, batch, cache, *, chunk_len,
                     "len": cache["len"] + chunk_len}
 
 
+def prefill_chunk_paged(params, cfg: ModelConfig, batch, cache,
+                        block_tables, *, chunk_len, block_size, impl=None):
+    """Paged-native chunked decoder prefill (see ``prefill_chunk``): the
+    decoder self-attention K/V rows scatter straight into the arena page
+    pools; the cross-attention K/V stay per-slot STATE (fixed
+    ``encoder_len`` — the arena never pages them) and are projected once
+    by the first chunk exactly as in the dense path."""
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    window = cfg.sliding_window
+    start = jnp.asarray(cache["len"], jnp.int32).reshape(-1)
+    startv = start * jnp.ones((B,), jnp.int32)
+    h = layers.embed(params["embed"], cfg, tokens).astype(cfg.compute_dtype)
+    pos = (startv[:, None] + jnp.arange(T)[None]).reshape(-1)
+    h = h + layers.sinusoid_at(pos, cfg.d_model).reshape(
+        B, T, cfg.d_model).astype(h.dtype)
+    first = "embeddings" in batch
+    memory = (encode(params, cfg, batch["embeddings"], impl=impl)
+              if first else None)
+
+    def body(carry, xs):
+        x, k_all, v_all = carry
+        lp, i, ck, cv = xs
+        x = constrain_activation(x)
+        if first:                   # project this layer's cross K/V once
+            Lk = memory.shape[1]
+            ck = layers.linear(memory, lp["cross_attn"]["wk"],
+                               lp["cross_attn"].get("bk")).reshape(
+                B, Lk, cfg.num_kv_heads, cfg.head_dim).astype(ck.dtype)
+            cv = layers.linear(memory, lp["cross_attn"]["wv"],
+                               lp["cross_attn"].get("bv")).reshape(
+                B, Lk, cfg.num_kv_heads, cfg.head_dim).astype(cv.dtype)
+        kp = jax.lax.dynamic_index_in_dim(k_all, i, 0, keepdims=False)
+        vp = jax.lax.dynamic_index_in_dim(v_all, i, 0, keepdims=False)
+        xn = layers.apply_norm(lp["ln1"], cfg, x)
+        a, kp, vp = layers.attention_chunk_paged(
+            lp["self_attn"], cfg, xn, kp, vp, block_tables, startv,
+            chunk_len, block_size=block_size, window=window,
+            use_rope=False, impl=impl)
+        x = x + a
+        xn = layers.apply_norm(lp["ln_x"], cfg, x)
+        q = layers.linear(xn, lp["cross_attn"]["wq"],
+                          lp["cross_attn"].get("bq")).reshape(
+            B, T, cfg.num_heads, cfg.head_dim)
+        c = ops.flash_attention(q, ck, cv, causal=False, impl=impl)
+        c = layers.linear(c.reshape(B, T, -1), lp["cross_attn"]["wo"])
+        x = x + c
+        x = x + layers.mlp(lp["mlp"], cfg,
+                           layers.apply_norm(lp["ln2"], cfg, x))
+        k_all = jax.lax.dynamic_update_index_in_dim(k_all, kp, i, 0)
+        v_all = jax.lax.dynamic_update_index_in_dim(v_all, vp, i, 0)
+        return (x, k_all, v_all), (ck, cv)
+
+    (h, k, v), (ck_all, cv_all) = jax.lax.scan(
+        body, (h, cache["k"], cache["v"]),
+        (params["dec_blocks"], jnp.arange(cfg.num_layers),
+         cache["cross_k"], cache["cross_v"]))
+    h = layers.take_chunk_last(h, chunk_len)
+    h = layers.apply_norm(params["ln_f"], cfg, h[:, None])[:, 0]
+    logits = logits_fn(params, cfg, h)
+    return logits, {"k": k, "v": v, "cross_k": ck_all, "cross_v": cv_all,
+                    "len": start + chunk_len}
+
+
 def decode_step(params, cfg: ModelConfig, token, cache, impl=None):
     B = token.shape[0]
     window = cfg.sliding_window
@@ -284,3 +348,52 @@ def decode_step(params, cfg: ModelConfig, token, cache, impl=None):
     logits = logits_fn(params, cfg, h)
     return logits, {"k": k, "v": v, "cross_k": cache["cross_k"],
                     "cross_v": cache["cross_v"], "len": new_len}
+
+
+def decode_step_paged(params, cfg: ModelConfig, token, cache, block_tables,
+                      live, *, block_size, impl=None):
+    """Paged-native fused decode: decoder self-attention streams K/V
+    through the block table and writes one row per live slot; the fixed
+    encoder cross-K/V ride along as per-slot state exactly as in
+    ``decode_step``."""
+    B = token.shape[0]
+    lens = jnp.asarray(cache["len"], jnp.int32)
+    live = jnp.asarray(live, bool)
+    x = layers.embed(params["embed"], cfg, token).astype(cfg.compute_dtype)
+    # decode position = lens (per-slot), matching decode_step's new_len - 1
+    x = x + layers.sinusoid_at(lens.astype(jnp.float32),
+                               cfg.d_model).astype(x.dtype)
+
+    def body(carry, xs):
+        x, k_all, v_all = carry
+        lp, i, ck, cv = xs
+        x = constrain_activation(x)
+        kp = jax.lax.dynamic_index_in_dim(k_all, i, 0, keepdims=False)
+        vp = jax.lax.dynamic_index_in_dim(v_all, i, 0, keepdims=False)
+        xn = layers.apply_norm(lp["ln1"], cfg, x[:, None])[:, 0]
+        a, kp, vp = layers.attention_decode_paged(
+            lp["self_attn"], cfg, xn, kp, vp, block_tables, lens, live,
+            block_size=block_size, window=cfg.sliding_window,
+            use_rope=False, impl=impl)
+        x = x + a
+        xn = layers.apply_norm(lp["ln_x"], cfg, x[:, None])[:, 0]
+        q = layers.linear(xn, lp["cross_attn"]["wq"]).reshape(
+            B, cfg.num_heads, cfg.head_dim)
+        c = ops.decode_attention(q, ck, cv, ck.shape[1], impl=impl)
+        c = layers.linear(c.reshape(B, -1), lp["cross_attn"]["wo"])
+        x = x + c
+        xn = layers.apply_norm(lp["ln2"], cfg, x[:, None])[:, 0]
+        x = x + layers.mlp(lp["mlp"], cfg, xn)
+        k_all = jax.lax.dynamic_update_index_in_dim(k_all, kp, i, 0)
+        v_all = jax.lax.dynamic_update_index_in_dim(v_all, vp, i, 0)
+        return (x, k_all, v_all), None
+
+    (x, k, v), _ = jax.lax.scan(
+        body, (x, cache["k"], cache["v"]),
+        (params["dec_blocks"], jnp.arange(cfg.num_layers),
+         cache["cross_k"], cache["cross_v"]))
+    h = layers.apply_norm(params["ln_f"], cfg, x[:, None])[:, 0]
+    logits = logits_fn(params, cfg, h)
+    return logits, {"k": k, "v": v, "cross_k": cache["cross_k"],
+                    "cross_v": cache["cross_v"],
+                    "len": jnp.where(live, lens + 1, lens)}

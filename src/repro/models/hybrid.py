@@ -111,6 +111,38 @@ def _shared_chunk(shared, cfg: ModelConfig, h, h0, k_cache, v_cache,
     return h, k_cache, v_cache
 
 
+def _shared_decode_paged(shared, cfg: ModelConfig, h_t, h0_t, k_pages,
+                         v_pages, block_tables, lens, live, *, block_size,
+                         window, impl=None):
+    """Paged-native ``_shared_decode``: the application's K/V stream
+    through the block table, only the new row is written back."""
+    xcat = jnp.concatenate([h_t, h0_t], axis=-1)
+    xn = layers.apply_norm(shared["ln_a"], cfg, xcat[:, None])[:, 0]
+    a, k_pages, v_pages = layers.attention_decode_paged(
+        shared["attn"], cfg, xn, k_pages, v_pages, block_tables, lens,
+        live, block_size=block_size, window=window, impl=impl)
+    h_t = h_t + a
+    xn = layers.apply_norm(shared["ln_m"], cfg, h_t[:, None])[:, 0]
+    h_t = h_t + layers.mlp(shared["mlp"], cfg, xn)
+    return h_t, k_pages, v_pages
+
+
+def _shared_chunk_paged(shared, cfg: ModelConfig, h, h0, k_pages, v_pages,
+                        block_tables, cache_len, chunk_len, *, block_size,
+                        window, impl=None):
+    """Paged-native ``_shared_chunk``."""
+    h = constrain_activation(h)
+    xcat = jnp.concatenate([h, h0], axis=-1)
+    xn = layers.apply_norm(shared["ln_a"], cfg, xcat)
+    a, k_pages, v_pages = layers.attention_chunk_paged(
+        shared["attn"], cfg, xn, k_pages, v_pages, block_tables, cache_len,
+        chunk_len, block_size=block_size, window=window, impl=impl)
+    h = h + a
+    h = h + layers.mlp(shared["mlp"], cfg,
+                       layers.apply_norm(shared["ln_m"], cfg, h))
+    return h, k_pages, v_pages
+
+
 # ---------------------------------------------------------------------------
 # model API
 # ---------------------------------------------------------------------------
@@ -256,6 +288,64 @@ def prefill_chunk(params, cfg: ModelConfig, batch, cache, *, chunk_len,
                     "len": cache["len"] + chunk_len}
 
 
+def prefill_chunk_paged(params, cfg: ModelConfig, batch, cache,
+                        block_tables, *, chunk_len, block_size, impl=None):
+    """Paged-native chunked prefill: mamba conv/SSD state advances exactly
+    as in ``prefill_chunk`` (per-slot state is never paged); each shared-
+    attention application scatters its chunk K/V rows straight into its
+    arena page pool through the block table."""
+    tokens = batch["tokens"]
+    window = cfg.sliding_window
+    h0 = layers.embed(params["embed"], cfg, tokens).astype(cfg.compute_dtype)
+    napps, every = _n_apps(cfg), cfg.attn_every
+    n_head = napps * every
+    head, tail = _split_groups(cfg, params["mamba"])
+    start = jnp.asarray(cache["len"], jnp.int32).reshape(-1)
+
+    def mamba_body(carry, xs):
+        h, conv_all, ssd_all = carry
+        lp, i = xs
+        conv = jax.lax.dynamic_index_in_dim(conv_all, i, 0, keepdims=False)
+        ssd = jax.lax.dynamic_index_in_dim(ssd_all, i, 0, keepdims=False)
+        h, conv, ssd = ssm.mamba_block_chunk(lp, cfg, h, conv, ssd,
+                                             chunk_len, impl=impl)
+        conv_all = jax.lax.dynamic_update_index_in_dim(
+            conv_all, conv.astype(conv_all.dtype), i, 0)
+        ssd_all = jax.lax.dynamic_update_index_in_dim(
+            ssd_all, ssd.astype(ssd_all.dtype), i, 0)
+        return (h, conv_all, ssd_all), None
+
+    def group_body(carry, xs):
+        h, conv_all, ssd_all, k_all, v_all = carry
+        gp, g = xs
+        idx = g * every + jnp.arange(every)
+        (h, conv_all, ssd_all), _ = jax.lax.scan(
+            mamba_body, (h, conv_all, ssd_all), (gp, idx))
+        kp = jax.lax.dynamic_index_in_dim(k_all, g, 0, keepdims=False)
+        vp = jax.lax.dynamic_index_in_dim(v_all, g, 0, keepdims=False)
+        h, kp, vp = _shared_chunk_paged(params["shared"], cfg, h, h0, kp,
+                                        vp, block_tables, start, chunk_len,
+                                        block_size=block_size,
+                                        window=window, impl=impl)
+        k_all = jax.lax.dynamic_update_index_in_dim(k_all, kp, g, 0)
+        v_all = jax.lax.dynamic_update_index_in_dim(v_all, vp, g, 0)
+        return (h, conv_all, ssd_all, k_all, v_all), None
+
+    carry0 = (h0, cache["conv"], cache["ssd"], cache["attn_k"],
+              cache["attn_v"])
+    (h, conv, ssd, ak, av), _ = jax.lax.scan(
+        group_body, carry0, (head, jnp.arange(napps)))
+    if _tail_layers(cfg):
+        tail_idx = n_head + jnp.arange(_tail_layers(cfg))
+        (h, conv, ssd), _ = jax.lax.scan(
+            mamba_body, (h, conv, ssd), (tail, tail_idx))
+    h = layers.take_chunk_last(h, chunk_len)
+    h = layers.apply_norm(params["ln_f"], cfg, h[:, None])[:, 0]
+    logits = logits_fn(params, cfg, h)
+    return logits, {"conv": conv, "ssd": ssd, "attn_k": ak, "attn_v": av,
+                    "len": start + chunk_len}
+
+
 def decode_step(params, cfg: ModelConfig, token, cache, impl=None):
     """Carry-DUS cache updates throughout (see transformer.decode_step):
     mamba conv/ssd states indexed by the FLAT layer id, shared-attention
@@ -305,3 +395,59 @@ def decode_step(params, cfg: ModelConfig, token, cache, impl=None):
     logits = logits_fn(params, cfg, h)
     return logits, {"conv": conv, "ssd": ssd, "attn_k": ak, "attn_v": av,
                     "len": new_len}
+
+
+def decode_step_paged(params, cfg: ModelConfig, token, cache, block_tables,
+                      live, *, block_size, impl=None):
+    """Paged-native fused decode: the mamba backbone's conv/SSD state is
+    untouched (state side-channel), each shared-attention application
+    streams its K/V through the block table and writes one new row per
+    live slot."""
+    window = cfg.sliding_window
+    lens = jnp.asarray(cache["len"], jnp.int32)
+    live = jnp.asarray(live, bool)
+    h0 = layers.embed(params["embed"], cfg, token).astype(cfg.compute_dtype)
+    napps, every = _n_apps(cfg), cfg.attn_every
+    n_head = napps * every
+    head, tail = _split_groups(cfg, params["mamba"])
+
+    def mamba_body(carry, xs):
+        h, conv_all, ssd_all = carry
+        lp, i = xs
+        conv = jax.lax.dynamic_index_in_dim(conv_all, i, 0, keepdims=False)
+        ssd = jax.lax.dynamic_index_in_dim(ssd_all, i, 0, keepdims=False)
+        h, conv, ssd = ssm.mamba_block_decode(lp, cfg, h, conv, ssd,
+                                              impl=impl)
+        conv_all = jax.lax.dynamic_update_index_in_dim(conv_all, conv, i, 0)
+        ssd_all = jax.lax.dynamic_update_index_in_dim(
+            ssd_all, ssd.astype(ssd_all.dtype), i, 0)
+        return (h, conv_all, ssd_all), None
+
+    def group_body(carry, xs):
+        h, conv_all, ssd_all, k_all, v_all = carry
+        gp, g = xs
+        idx = g * every + jnp.arange(every)
+        (h, conv_all, ssd_all), _ = jax.lax.scan(
+            mamba_body, (h, conv_all, ssd_all), (gp, idx))
+        kp = jax.lax.dynamic_index_in_dim(k_all, g, 0, keepdims=False)
+        vp = jax.lax.dynamic_index_in_dim(v_all, g, 0, keepdims=False)
+        h, kp, vp = _shared_decode_paged(params["shared"], cfg, h, h0, kp,
+                                         vp, block_tables, lens, live,
+                                         block_size=block_size,
+                                         window=window, impl=impl)
+        k_all = jax.lax.dynamic_update_index_in_dim(k_all, kp, g, 0)
+        v_all = jax.lax.dynamic_update_index_in_dim(v_all, vp, g, 0)
+        return (h, conv_all, ssd_all, k_all, v_all), None
+
+    carry0 = (h0, cache["conv"], cache["ssd"], cache["attn_k"],
+              cache["attn_v"])
+    (h, conv, ssd, ak, av), _ = jax.lax.scan(
+        group_body, carry0, (head, jnp.arange(napps)))
+    if _tail_layers(cfg):
+        tail_idx = n_head + jnp.arange(_tail_layers(cfg))
+        (h, conv, ssd), _ = jax.lax.scan(
+            mamba_body, (h, conv, ssd), (tail, tail_idx))
+    h = layers.apply_norm(params["ln_f"], cfg, h[:, None])[:, 0]
+    logits = logits_fn(params, cfg, h)
+    return logits, {"conv": conv, "ssd": ssd, "attn_k": ak, "attn_v": av,
+                    "len": jnp.where(live, lens + 1, lens)}

@@ -261,6 +261,111 @@ def attention_chunk(p, cfg: ModelConfig, x, k_cache, v_cache, cache_len,
     return linear(out, p["wo"]), k_cache, v_cache
 
 
+def paged_insert_rows(pages, rows, block_tables, positions, valid, *,
+                      block_size: int):
+    """Scatter per-slot K/V rows straight into a page pool.
+
+    pages: one layer's physical pool (P, block_size, Hkv, D) whose LAST
+    page is the arena's reserved trash block; rows: (B, T, Hkv, D) new
+    cache rows; positions: (B, T) absolute token positions; valid: (B, T)
+    bool — invalid rows (dead slots, chunk padding) land in the trash
+    page, so the scatter stays branch-free and shape-stable.  This is the
+    paged-native write path: one row per produced token, never the dense
+    re-scatter of the whole view."""
+    P = pages.shape[0]
+    nblk = block_tables.shape[1]
+    pos = jnp.clip(positions, 0, nblk * block_size - 1)
+    blk = jnp.take_along_axis(block_tables, pos // block_size, axis=1)
+    flat = blk * block_size + pos % block_size
+    flat = jnp.where(valid, flat, (P - 1) * block_size)
+    B, T = rows.shape[:2]
+    pf = pages.reshape(P * block_size, *pages.shape[2:])
+    pf = pf.at[flat.reshape(-1)].set(
+        rows.reshape(B * T, *rows.shape[2:]).astype(pages.dtype))
+    return pf.reshape(pages.shape)
+
+
+def _no_paged_ring(window, total_tokens: int) -> None:
+    if window is not None and window < total_tokens:
+        raise NotImplementedError(
+            "paged-native attention does not support ring (sliding-window) "
+            "cache layouts; the engine gates those to the dense-view path")
+
+
+def attention_decode_paged(p, cfg: ModelConfig, x_t, k_pages, v_pages,
+                           block_tables, lens, live, *, block_size: int,
+                           window=None, use_rope=True, impl=None):
+    """One-token decode against the serving arena's paged KV layout.
+
+    x_t: (B, d); pages: one layer's pool (P, block_size, Hkv, D) read
+    through ``block_tables`` (B, nblk); ``lens`` (B,) counts tokens
+    already cached (the new token is written at position ``lens``).  Only
+    the new K/V row is scattered back — attention reads K/V in place via
+    ``ops.paged_decode_attention``, so the hot loop never materializes a
+    dense view.  Numerically identical to ``attention_decode`` on the
+    gathered view (same projections, rope positions and masking)."""
+    B = x_t.shape[0]
+    _no_paged_ring(window, block_tables.shape[1] * block_size)
+    if "wqkv" in p:
+        q, k_t, v_t = _split_qkv_flat(
+            cfg, linear(x_t, p["wqkv"], p.get("bqkv")))
+    else:
+        q = linear(x_t, p["wq"], p.get("bq"))
+        k_t = linear(x_t, p["wk"], p.get("bk"))
+        v_t = linear(x_t, p["wv"], p.get("bv"))
+    q = q.reshape(B, cfg.num_heads, cfg.head_dim)
+    k_t = k_t.reshape(B, cfg.num_kv_heads, cfg.head_dim)
+    v_t = v_t.reshape(B, cfg.num_kv_heads, cfg.head_dim)
+    lens = jnp.asarray(lens, jnp.int32)
+    if use_rope:
+        q = rope(q[:, None], lens[:, None], cfg.rope_theta)[:, 0]
+        k_t = rope(k_t[:, None], lens[:, None], cfg.rope_theta)[:, 0]
+    ok = jnp.asarray(live, bool)[:, None]
+    k_pages = paged_insert_rows(k_pages, k_t[:, None], block_tables,
+                                lens[:, None], ok, block_size=block_size)
+    v_pages = paged_insert_rows(v_pages, v_t[:, None], block_tables,
+                                lens[:, None], ok, block_size=block_size)
+    out = ops.paged_decode_attention(q, k_pages, v_pages, block_tables,
+                                     lens + 1, impl=impl)
+    out = out.reshape(B, cfg.num_heads * cfg.head_dim)
+    return linear(out, p["wo"]), k_pages, v_pages
+
+
+def attention_chunk_paged(p, cfg: ModelConfig, x, k_pages, v_pages,
+                          block_tables, cache_len, chunk_len, *,
+                          block_size: int, window=None, prefix_len=0,
+                          use_rope=True, impl=None):
+    """Chunked-prefill attention against the paged KV layout: append a
+    right-padded T-token chunk (only the first ``chunk_len`` rows real)
+    at positions ``cache_len + i`` directly into the pages, then attend
+    through the block table via ``ops.paged_chunk_attention``.  The
+    multi-token sibling of ``attention_decode_paged`` (and the paged
+    mirror of ``attention_chunk``)."""
+    B, T, _ = x.shape
+    _no_paged_ring(window, block_tables.shape[1] * block_size)
+    q, k_t, v_t = _project_qkv(p, cfg, x)
+    cache_len = jnp.asarray(cache_len, jnp.int32)
+    if cache_len.ndim == 0:
+        cache_len = jnp.full((B,), cache_len)
+    chunk_len = jnp.asarray(chunk_len, jnp.int32)
+    if chunk_len.ndim == 0:
+        chunk_len = jnp.full((B,), chunk_len)
+    positions = cache_len[:, None] + jnp.arange(T)[None]      # (B, T)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k_t = rope(k_t, positions, cfg.rope_theta)
+    valid = jnp.arange(T)[None] < chunk_len[:, None]
+    k_pages = paged_insert_rows(k_pages, k_t, block_tables, positions,
+                                valid, block_size=block_size)
+    v_pages = paged_insert_rows(v_pages, v_t, block_tables, positions,
+                                valid, block_size=block_size)
+    out = ops.paged_chunk_attention(q, k_pages, v_pages, block_tables,
+                                    cache_len, chunk_len,
+                                    prefix_len=prefix_len, impl=impl)
+    out = out.reshape(B, T, cfg.num_heads * cfg.head_dim)
+    return linear(out, p["wo"]), k_pages, v_pages
+
+
 def cross_attention_decode(p, cfg: ModelConfig, x_t, memory, impl=None):
     """Decode-time cross attention against a fixed encoder memory."""
     B = x_t.shape[0]

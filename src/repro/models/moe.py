@@ -293,6 +293,43 @@ def prefill_chunk(params, cfg: ModelConfig, batch, cache, *, chunk_len,
     return logits, {"k": k, "v": v, "len": cache["len"] + chunk_len}
 
 
+def prefill_chunk_paged(params, cfg: ModelConfig, batch, cache,
+                        block_tables, *, chunk_len, block_size, impl=None):
+    """Paged-native chunked prefill (see ``transformer.prefill_chunk_paged``
+    and ``prefill_chunk``'s routing-group caveat): chunk K/V rows scatter
+    straight into the arena page pools, the MoE FFN is unchanged."""
+    tokens = batch["tokens"]
+    window = cfg.sliding_window
+    x = layers.embed(params["embed"], cfg, tokens).astype(cfg.compute_dtype)
+    start = jnp.asarray(cache["len"], jnp.int32).reshape(-1)
+
+    def body(carry, xs):
+        x, k_all, v_all = carry
+        lp, i = xs
+        x = constrain_activation(x)
+        kp = jax.lax.dynamic_index_in_dim(k_all, i, 0, keepdims=False)
+        vp = jax.lax.dynamic_index_in_dim(v_all, i, 0, keepdims=False)
+        xn = layers.apply_norm(lp["ln1"], cfg, x)
+        a, kp, vp = layers.attention_chunk_paged(
+            lp["attn"], cfg, xn, kp, vp, block_tables, start, chunk_len,
+            block_size=block_size, window=window, impl=impl)
+        x = x + a
+        m, _ = moe_mlp(lp["moe"], cfg,
+                       layers.apply_norm(lp["ln2"], cfg, x), impl=impl)
+        x = x + m
+        k_all = jax.lax.dynamic_update_index_in_dim(k_all, kp, i, 0)
+        v_all = jax.lax.dynamic_update_index_in_dim(v_all, vp, i, 0)
+        return (x, k_all, v_all), None
+
+    (x, k, v), _ = jax.lax.scan(
+        body, (x, cache["k"], cache["v"]),
+        (params["blocks"], jnp.arange(cfg.num_layers)))
+    h = layers.take_chunk_last(x, chunk_len)
+    h = layers.apply_norm(params["ln_f"], cfg, h[:, None])[:, 0]
+    logits = logits_fn(params, cfg, h)
+    return logits, {"k": k, "v": v, "len": start + chunk_len}
+
+
 def _moe_mlp_single(p, cfg: ModelConfig, x_t, *, impl=None):
     """Decode-time MoE for a (B, d) token batch.
 
@@ -340,3 +377,39 @@ def decode_step(params, cfg: ModelConfig, token, cache, impl=None):
     h = layers.apply_norm(params["ln_f"], cfg, x[:, None])[:, 0]
     logits = logits_fn(params, cfg, h)
     return logits, {"k": k, "v": v, "len": new_len}
+
+
+def decode_step_paged(params, cfg: ModelConfig, token, cache, block_tables,
+                      live, *, block_size, impl=None):
+    """Paged-native fused decode (see ``transformer.decode_step_paged``):
+    attention streams K/V through the block table, the per-token-group
+    MoE FFN keeps every decode row numerically independent of its batch
+    neighbours (so fixed-capacity garbage rows stay harmless)."""
+    window = cfg.sliding_window
+    lens = jnp.asarray(cache["len"], jnp.int32)
+    live = jnp.asarray(live, bool)
+    x = layers.embed(params["embed"], cfg, token).astype(cfg.compute_dtype)
+
+    def body(carry, xs):
+        x, k_all, v_all = carry
+        lp, i = xs
+        x = constrain_activation(x)
+        kp = jax.lax.dynamic_index_in_dim(k_all, i, 0, keepdims=False)
+        vp = jax.lax.dynamic_index_in_dim(v_all, i, 0, keepdims=False)
+        xn = layers.apply_norm(lp["ln1"], cfg, x[:, None])[:, 0]
+        a, kp, vp = layers.attention_decode_paged(
+            lp["attn"], cfg, xn, kp, vp, block_tables, lens, live,
+            block_size=block_size, window=window, impl=impl)
+        x = x + a
+        xn = layers.apply_norm(lp["ln2"], cfg, x[:, None])[:, 0]
+        x = x + _moe_mlp_single(lp["moe"], cfg, xn, impl=impl)
+        k_all = jax.lax.dynamic_update_index_in_dim(k_all, kp, i, 0)
+        v_all = jax.lax.dynamic_update_index_in_dim(v_all, vp, i, 0)
+        return (x, k_all, v_all), None
+
+    (x, k, v), _ = jax.lax.scan(
+        body, (x, cache["k"], cache["v"]),
+        (params["blocks"], jnp.arange(cfg.num_layers)))
+    h = layers.apply_norm(params["ln_f"], cfg, x[:, None])[:, 0]
+    logits = logits_fn(params, cfg, h)
+    return logits, {"k": k, "v": v, "len": jnp.where(live, lens + 1, lens)}

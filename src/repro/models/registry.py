@@ -22,28 +22,42 @@ class ModelApi:
     # chunked (piggybacked) prefill: append a right-padded token chunk to
     # an existing cache — one trace per chunk bucket, not per prompt length
     prefill_chunk: Callable
+    # paged-NATIVE entry points (attention families): the cache's sequence
+    # leaves are the serving arena's page pools read through a block
+    # table; attention streams K/V in place and writes only the new rows
+    # back, so the fused step never materializes a dense view.  ``None``
+    # for pure-SSM families (their cache is all per-slot state — the
+    # state side-channel path is already gather-free).
+    decode_step_paged: Optional[Callable] = None
+    prefill_chunk_paged: Optional[Callable] = None
 
 
 _FAMILIES: Dict[str, ModelApi] = {
     "dense": ModelApi(transformer.init, transformer.forward_hidden,
                       transformer.logits_fn, transformer.init_cache,
                       transformer.prefill, transformer.decode_step,
-                      transformer.prefill_chunk),
+                      transformer.prefill_chunk,
+                      transformer.decode_step_paged,
+                      transformer.prefill_chunk_paged),
     "moe": ModelApi(moe.init, moe.forward_hidden, moe.logits_fn,
                     moe.init_cache, moe.prefill, moe.decode_step,
-                    moe.prefill_chunk),
+                    moe.prefill_chunk, moe.decode_step_paged,
+                    moe.prefill_chunk_paged),
     "ssm": ModelApi(ssm.init, ssm.forward_hidden, ssm.logits_fn,
                     ssm.init_cache, ssm.prefill, ssm.decode_step,
                     ssm.prefill_chunk),
     "hybrid": ModelApi(hybrid.init, hybrid.forward_hidden, hybrid.logits_fn,
                        hybrid.init_cache, hybrid.prefill, hybrid.decode_step,
-                       hybrid.prefill_chunk),
+                       hybrid.prefill_chunk, hybrid.decode_step_paged,
+                       hybrid.prefill_chunk_paged),
     "audio": ModelApi(encdec.init, encdec.forward_hidden, encdec.logits_fn,
                       encdec.init_cache, encdec.prefill, encdec.decode_step,
-                      encdec.prefill_chunk),
+                      encdec.prefill_chunk, encdec.decode_step_paged,
+                      encdec.prefill_chunk_paged),
     "vlm": ModelApi(vlm.init, vlm.forward_hidden, vlm.logits_fn,
                     vlm.init_cache, vlm.prefill, vlm.decode_step,
-                    vlm.prefill_chunk),
+                    vlm.prefill_chunk, vlm.decode_step_paged,
+                    vlm.prefill_chunk_paged),
 }
 
 

@@ -213,6 +213,46 @@ def prefill_chunk(params, cfg: ModelConfig, batch, cache, *, chunk_len,
     return logits, {"k": k, "v": v, "len": cache["len"] + chunk_len}
 
 
+def prefill_chunk_paged(params, cfg: ModelConfig, batch, cache,
+                        block_tables, *, chunk_len, block_size, impl=None):
+    """Paged-native chunked prefill: the cache's ``k``/``v`` are the
+    arena's PAGE POOLS ``(layers, pages, block_size, Hkv, D)`` read
+    through ``block_tables`` (B, nblk), and ``len`` is the per-slot (B,)
+    start offset.  The chunk's K/V rows scatter straight into the pages
+    (``layers.attention_chunk_paged``) — no dense view is ever gathered
+    or re-scattered.  Numerically equivalent to ``prefill_chunk`` on the
+    gathered view."""
+    tokens = batch["tokens"]
+    window = _window(cfg)
+    x = layers.embed(params["embed"], cfg, tokens).astype(cfg.compute_dtype)
+    start = jnp.asarray(cache["len"], jnp.int32).reshape(-1)
+
+    def body(carry, xs):
+        x, k_all, v_all = carry
+        lp, i = xs
+        x = constrain_activation(x)
+        kp = jax.lax.dynamic_index_in_dim(k_all, i, 0, keepdims=False)
+        vp = jax.lax.dynamic_index_in_dim(v_all, i, 0, keepdims=False)
+        xn = layers.apply_norm(lp["ln1"], cfg, x)
+        h, kp, vp = layers.attention_chunk_paged(
+            lp["attn"], cfg, xn, kp, vp, block_tables, start, chunk_len,
+            block_size=block_size, window=window, impl=impl)
+        x = x + h
+        x = x + layers.mlp(lp["mlp"], cfg,
+                           layers.apply_norm(lp["ln2"], cfg, x))
+        k_all = jax.lax.dynamic_update_index_in_dim(k_all, kp, i, 0)
+        v_all = jax.lax.dynamic_update_index_in_dim(v_all, vp, i, 0)
+        return (x, k_all, v_all), None
+
+    (x, k, v), _ = jax.lax.scan(
+        body, (x, cache["k"], cache["v"]),
+        (params["blocks"], jnp.arange(cfg.num_layers)))
+    h = layers.take_chunk_last(x, chunk_len)
+    h = layers.apply_norm(params["ln_f"], cfg, h[:, None])[:, 0]
+    logits = logits_fn(params, cfg, h)
+    return logits, {"k": k, "v": v, "len": start + chunk_len}
+
+
 def decode_step(params, cfg: ModelConfig, token, cache, impl=None):
     """token: (B,) int32.  One new token; cache['len'] counts tokens already
     in the cache (the new token is written at ring slot len % S).
@@ -243,3 +283,43 @@ def decode_step(params, cfg: ModelConfig, token, cache, impl=None):
     h = layers.apply_norm(params["ln_f"], cfg, x[:, None])[:, 0]
     logits = logits_fn(params, cfg, h)
     return logits, {"k": k, "v": v, "len": new_len}
+
+
+def decode_step_paged(params, cfg: ModelConfig, token, cache, block_tables,
+                      live, *, block_size, impl=None):
+    """Paged-native fused decode: cache ``k``/``v`` are the arena PAGE
+    POOLS ``(layers, pages, block_size, Hkv, D)``, ``len`` the per-slot
+    (B,) lengths.  Attention reads K/V in place through ``block_tables``
+    and writes back only each live slot's ONE new row — the O(capacity x
+    slot_tokens x layers) dense materialize/re-scatter round trip of the
+    gather path never happens.  ``live`` masks dead/prefilling slots:
+    their row writes route to the trash page and their lengths hold."""
+    B = token.shape[0]
+    window = _window(cfg)
+    lens = jnp.asarray(cache["len"], jnp.int32)
+    live = jnp.asarray(live, bool)
+    x = layers.embed(params["embed"], cfg, token).astype(cfg.compute_dtype)
+
+    def body(carry, xs):
+        x, k_all, v_all = carry
+        lp, i = xs
+        x = constrain_activation(x)
+        kp = jax.lax.dynamic_index_in_dim(k_all, i, 0, keepdims=False)
+        vp = jax.lax.dynamic_index_in_dim(v_all, i, 0, keepdims=False)
+        xn = layers.apply_norm(lp["ln1"], cfg, x[:, None])[:, 0]
+        h, kp, vp = layers.attention_decode_paged(
+            lp["attn"], cfg, xn, kp, vp, block_tables, lens, live,
+            block_size=block_size, window=window, impl=impl)
+        x = x + h
+        xn = layers.apply_norm(lp["ln2"], cfg, x[:, None])[:, 0]
+        x = x + layers.mlp(lp["mlp"], cfg, xn)
+        k_all = jax.lax.dynamic_update_index_in_dim(k_all, kp, i, 0)
+        v_all = jax.lax.dynamic_update_index_in_dim(v_all, vp, i, 0)
+        return (x, k_all, v_all), None
+
+    (x, k, v), _ = jax.lax.scan(
+        body, (x, cache["k"], cache["v"]),
+        (params["blocks"], jnp.arange(cfg.num_layers)))
+    h = layers.apply_norm(params["ln_f"], cfg, x[:, None])[:, 0]
+    logits = logits_fn(params, cfg, h)
+    return logits, {"k": k, "v": v, "len": jnp.where(live, lens + 1, lens)}

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from . import layers, transformer
 from .config import ModelConfig
+from .sharding import constrain_activation
 
 
 init = transformer.init          # same param structure as a dense decoder
@@ -118,7 +119,54 @@ def prefill_chunk(params, cfg: ModelConfig, batch, cache, *, chunk_len,
     return logits, {"k": k, "v": v, "len": cache["len"] + eff_chunk}
 
 
+def prefill_chunk_paged(params, cfg: ModelConfig, batch, cache,
+                        block_tables, *, chunk_len, block_size, impl=None):
+    """Paged-native chunked prefill (see ``prefill_chunk``): the first
+    chunk carries the whole bidirectional image prefix, and every written
+    row — prefix and text alike — scatters straight into the arena page
+    pools through the block table."""
+    first = "embeddings" in batch
+    if first:
+        h = _concat_inputs(params, cfg, batch)     # (B, P + T, d)
+        prefix = cfg.prefix_len
+    else:
+        h = layers.embed(params["embed"], cfg,
+                         batch["tokens"]).astype(cfg.compute_dtype)
+        prefix = 0
+    eff_chunk = chunk_len + prefix                 # cache rows written
+    window = cfg.sliding_window
+    start = jnp.asarray(cache["len"], jnp.int32).reshape(-1)
+
+    def body(carry, xs):
+        x, k_all, v_all = carry
+        lp, i = xs
+        x = constrain_activation(x)
+        kp = jax.lax.dynamic_index_in_dim(k_all, i, 0, keepdims=False)
+        vp = jax.lax.dynamic_index_in_dim(v_all, i, 0, keepdims=False)
+        xn = layers.apply_norm(lp["ln1"], cfg, x)
+        a, kp, vp = layers.attention_chunk_paged(
+            lp["attn"], cfg, xn, kp, vp, block_tables, start, eff_chunk,
+            block_size=block_size, window=window, prefix_len=prefix,
+            impl=impl)
+        x = x + a
+        x = x + layers.mlp(lp["mlp"], cfg,
+                           layers.apply_norm(lp["ln2"], cfg, x))
+        k_all = jax.lax.dynamic_update_index_in_dim(k_all, kp, i, 0)
+        v_all = jax.lax.dynamic_update_index_in_dim(v_all, vp, i, 0)
+        return (x, k_all, v_all), None
+
+    (h, k, v), _ = jax.lax.scan(
+        body, (h, cache["k"], cache["v"]),
+        (params["blocks"], jnp.arange(cfg.num_layers)))
+    h = layers.take_chunk_last(h, eff_chunk)
+    h = layers.apply_norm(params["ln_f"], cfg, h[:, None])[:, 0]
+    logits = logits_fn(params, cfg, h)
+    return logits, {"k": k, "v": v, "len": start + eff_chunk}
+
+
 # decode: after prefill every cached position is attendable by new tokens
 # (prefix bidirectionality only affects prefix-internal rows, which are
-# already baked into the cache), so dense decode semantics apply directly.
+# already baked into the cache), so dense decode semantics apply directly
+# — for the paged layout too.
 decode_step = transformer.decode_step
+decode_step_paged = transformer.decode_step_paged

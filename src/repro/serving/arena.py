@@ -164,7 +164,9 @@ class KVArena:
         self.cache_retention: Optional[int] = None  # max idle cached blocks
         self.cached_evictions = 0     # idle cached blocks reclaimed
         self.cow_copies = 0           # copy-on-write block copies
-        self._cow_fn: Optional[Callable] = None
+        self.cow_calls = 0            # jitted COW dispatches (batching
+        #                               coalesces a wave's copies into one)
+        self._cow_many_fns: Dict[int, Callable] = {}
 
         # bytes one cache token occupies across all paged leaves, and the
         # fixed per-slot state footprint (allocator-style accounting)
@@ -354,56 +356,86 @@ class KVArena:
     def is_cached(self, block: int) -> bool:
         return block in self._cached
 
-    def _cow_copy_fn(self):
-        if self._cow_fn is None:
-            def _copy(pages, src, dst):
-                return [p.at[:, dst].set(p[:, src]) for p in pages]
-            self._cow_fn = jax.jit(
-                _copy, donate_argnums=self._donate_argnums((0,)))
-        return self._cow_fn
-
     def cow_block(self, slot: int, logical: int) -> bool:
         """Copy-on-write: give ``slot`` a private copy of its ``logical``-th
         block if the physical block is shared with another slot or frozen
         by a prefix index.  Returns True when a copy happened (one block of
         device copy; the table row changes, so the device table re-uploads
         on next use)."""
-        phys = int(self._block_tables[slot][logical])
-        if phys == self.trash_block:
-            raise ValueError(f"slot {slot} logical block {logical} is "
-                             f"unallocated")
-        if self._block_refs[phys] <= 1 and phys not in self._cached:
-            return False
-        fresh = self._claim_blocks(1)[0]
-        self.pages = self._cow_copy_fn()(
-            self.pages, jnp.asarray(phys, jnp.int32),
-            jnp.asarray(fresh, jnp.int32))
-        self._block_refs[fresh] = 1
-        blocks = self._slot_blocks[slot]
-        blocks[blocks.index(phys)] = fresh
-        self._block_tables[slot][logical] = fresh
+        return self.cow_blocks([(slot, logical)]) > 0
+
+    def cow_blocks(self, pairs: Sequence[Tuple[int, int]]) -> int:
+        """Batched copy-on-write: coalesce several pending single-block
+        COWs — e.g. the divergence copies of one admission wave whose
+        members share a prompt template — into ONE jitted gather/scatter
+        over (srcs, dsts) index vectors instead of one jit dispatch per
+        block.  ``pairs`` lists (slot, logical) targets; blocks a slot
+        already owns exclusively are skipped.  The copy vectors pad to the
+        next power of two (padding copies the trash block onto itself) so
+        the dispatch count stays O(log capacity) shapes, not one per wave
+        size.  Returns the number of real blocks copied."""
+        # phase 1 — decide, without mutating: which pairs actually need a
+        # private copy (two sharers of the same source both do)
+        needed: List[Tuple[int, int, int]] = []   # (slot, logical, phys)
+        for slot, logical in pairs:
+            phys = int(self._block_tables[slot][logical])
+            if phys == self.trash_block:
+                raise ValueError(f"slot {slot} logical block {logical} is "
+                                 f"unallocated")
+            if self._block_refs[phys] <= 1 and phys not in self._cached:
+                continue
+            needed.append((slot, logical, phys))
+        if not needed:
+            return 0
+        # phase 2 — claim EVERY destination up front, before any table
+        # mutation: if the arena is exhausted this raises with all
+        # bookkeeping still consistent (the sources have live slot refs,
+        # so the claim sweep can never reclaim them)
+        fresh_blocks = self._claim_blocks(len(needed))
+        todo: List[Tuple[int, int]] = []          # (phys, fresh)
+        for (slot, logical, phys), fresh in zip(needed, fresh_blocks):
+            self._block_refs[fresh] = 1
+            blocks = self._slot_blocks[slot]
+            blocks[blocks.index(phys)] = fresh
+            self._block_tables[slot][logical] = fresh
+            todo.append((phys, fresh))
+        n = 1
+        while n < len(todo):
+            n *= 2
+        src = np.full((n,), self.trash_block, np.int32)
+        dst = np.full((n,), self.trash_block, np.int32)
+        for i, (s, d) in enumerate(todo):
+            src[i], dst[i] = s, d
+        fn = self._cow_many_fns.get(n)
+        if fn is None:
+            def _copy(pages, src, dst):
+                return [p.at[:, dst].set(p[:, src]) for p in pages]
+            fn = jax.jit(_copy, donate_argnums=self._donate_argnums((0,)))
+            self._cow_many_fns[n] = fn
+        self.pages = fn(self.pages, jnp.asarray(src), jnp.asarray(dst))
         self._tables_dev = None
-        self._release_block(phys)   # a sole-ref cached source goes idle...
-        self._enforce_retention()   # ...so the knob's bound applies here too
-        self.cow_copies += 1
-        return True
+        for phys, _ in todo:
+            self._release_block(phys)  # sole-ref cached sources go idle...
+        self._enforce_retention()      # ...so the knob's bound applies here
+        self.cow_copies += len(todo)
+        self.cow_calls += 1
+        return len(todo)
 
     def ensure_writable(self, slot: int, start: int, n_tokens: int = 1
                         ) -> int:
         """COW every block the write ``[start, start + n_tokens)`` touches
         that the slot does not exclusively own.  Cheap host check in the
-        common case; returns the number of blocks copied."""
+        common case; multi-block writes coalesce their copies into one
+        batched ``cow_blocks`` dispatch.  Returns the blocks copied."""
         if not self._cached and not (self._block_refs > 1).any():
             return 0
         lo = max(0, start) // self.block_size
         hi = max(0, start + n_tokens - 1) // self.block_size
-        copied = 0
-        for logical in range(lo, min(hi, self.blocks_per_slot - 1) + 1):
-            if self._block_tables[slot][logical] == self.trash_block:
-                continue
-            if self.cow_block(slot, logical):
-                copied += 1
-        return copied
+        pairs = [(slot, logical)
+                 for logical in range(lo, min(hi, self.blocks_per_slot - 1)
+                                      + 1)
+                 if self._block_tables[slot][logical] != self.trash_block]
+        return self.cow_blocks(pairs)
 
     def block_tables(self) -> np.ndarray:
         """(capacity, blocks_per_slot) logical->physical block map."""
@@ -508,15 +540,13 @@ class KVArena:
                    block_tables: jnp.ndarray) -> List[jnp.ndarray]:
         """Gather each page pool through the block table into a contiguous
         ``(layers, B, slot_tokens, ...)`` view (``B`` = the table's row
-        count: the full capacity for the fused decode step, a single row
-        for a chunked-prefill call) — the dense-gather path the engine
-        currently uses on every backend.  The scalar-prefetch Pallas
-        kernels that read K/V through the block table WITHOUT materializing
-        this view exist and are validated
-        (``kernels.decode_attention.paged_decode_attention_pallas`` /
-        ``paged_chunk_prefill_attention_pallas``); threading them through
-        the families' decode/chunk steps is the ROADMAP follow-up that
-        makes this gather CPU-only."""
+        count).  NOT the hot path anymore: the attention families' paged-
+        NATIVE steps (``decode_step_paged`` / ``prefill_chunk_paged``)
+        read K/V in place through the table, so this full materialization
+        survives only as (a) the fallback for families/configs without a
+        paged-native step (pure-SSM state caches, ring sliding-window
+        layouts) and (b) the test/benchmark oracle the zero-gather path is
+        verified bit-identical against."""
         B = block_tables.shape[0]
         out = []
         for p in pages:

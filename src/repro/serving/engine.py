@@ -35,7 +35,18 @@ Two cache data planes back the slot loop (``kvcache_impl``):
   operation, and decode always runs at the full static ``(capacity, ...)``
   shape with an occupancy mask — so the fused step compiles EXACTLY ONCE
   per service no matter how the live batch size churns, and no admission
-  ever copies the live batch.
+  ever copies the live batch.  For attention families the paged layout is
+  NATIVE to the hot loop (``ModelApi.decode_step_paged`` /
+  ``prefill_chunk_paged``): attention streams K/V in place through the
+  block tables (``ops.paged_decode_attention`` /
+  ``paged_chunk_attention`` — scalar-prefetch Pallas on TPU, per-slot
+  up-to-len gather on CPU) and writes back only each live slot's NEW
+  rows, so the old ``dense_view`` materialize / ``append_rows``
+  re-scatter round trip — O(capacity x slot_tokens x layers) HBM traffic
+  per emitted token — never happens.  Pure-SSM families keep the
+  (already gather-free) per-slot state side-channel, and ring
+  (sliding-window) layouts keep the dense-view fallback, which also
+  survives as the test oracle (``paged_native=False``).
 * ``"dense"`` — the pre-arena pytree path (``kvcache.select_slots`` /
   ``merge``), temporarily retained for comparison: every admission
   re-materializes the whole live cache and every live-batch-size change
@@ -120,9 +131,15 @@ class StepStats:
     in_flight: int = 0               # occupied slots after the step
     pending: int = 0                 # queued requests after the step
     queue_time_s: float = 0.0        # est. wait for a new arrival (handler)
-    admission_copy_bytes: int = 0    # cache bytes copied by slot churn this
-    #                                  step (admission merges + the dense
-    #                                  impl's eviction compaction)
+    admission_copy_bytes: int = 0    # cache bytes COPIED by slot churn this
+    #                                  step (admission merges, COW copies +
+    #                                  the dense impl's eviction compaction)
+    chunk_write_bytes: int = 0       # cache bytes WRITTEN by chunked
+    #                                  prefill this step — appends of fresh
+    #                                  rows, not copies of existing cache
+    #                                  (split from admission_copy_bytes so
+    #                                  the zero-copy admission assertion
+    #                                  measures what it claims)
     whole_cache_copies: int = 0      # live-batch copies this step (dense
     #                                  merge or select_slots compaction)
     decode_steps: int = 0            # fused decode invocations this step
@@ -238,6 +255,8 @@ class ServiceRuntime:
                  chunked_prefill: Optional[bool] = None,
                  prefill_chunk: Optional[int] = None,
                  prefix_cache: Optional[Any] = None,
+                 paged_native: Optional[bool] = None,
+                 paged_step_builder: Optional[Callable] = None,
                  on_evict: Optional[Callable] = None):
         if mode not in ("continuous", "sync"):
             raise ValueError(f"mode must be continuous|sync, got {mode!r}")
@@ -264,6 +283,7 @@ class ServiceRuntime:
         self.decode_traces = 0       # XLA (re)compilations of the fused step
         self.prefill_traces = 0
         self.admission_copy_bytes = 0
+        self.chunk_write_bytes = 0   # fresh rows appended by chunked prefill
         self.whole_cache_copies = 0  # admissions that copied the live batch
         self.prefill_chunk_calls = 0  # chunk invocations (all groups)
         self.prefill_tokens_computed = 0  # prompt tokens actually run
@@ -291,6 +311,28 @@ class ServiceRuntime:
         # configs keep the one-shot admission prefill
         ring = (cfg.sliding_window is not None
                 and cfg.sliding_window < self.slot_token_budget)
+
+        # -- paged-NATIVE hot path gating ---------------------------------
+        # attention families run decode/chunk straight against the page
+        # pools (zero-gather); pure-SSM families carry no paged leaves (the
+        # state path is already gather-free) and ring layouts store their
+        # window as per-slot state — both keep the dense-view step.
+        # ``paged_native=False`` forces the dense-gather step on an
+        # attention family: the benchmark/test ORACLE the native path is
+        # verified bit-identical (and cheaper) against.
+        native_ok = (mode == "continuous" and kvcache_impl == "paged"
+                     and self.api.decode_step_paged is not None and not ring)
+        if paged_native is None:
+            paged_native = native_ok
+        elif paged_native and not native_ok:
+            raise ValueError(
+                "paged_native requires mode='continuous', "
+                "kvcache_impl='paged', a family with paged-native entry "
+                f"points (not {cfg.family!r} with ring="
+                f"{ring}) — pure-SSM families and ring (sliding-window) "
+                "layouts keep the state/dense-view path")
+        self.paged_native = bool(paged_native)
+        self.paged_step_builder = paged_step_builder
         if chunked_prefill is None:
             chunked_prefill = (mode == "continuous"
                                and kvcache_impl == "paged" and not ring)
@@ -578,13 +620,21 @@ class ServiceRuntime:
         return state.arena
 
     def _admit_one(self, req: GenerationRequest, group: int,
-                   state: _GroupState, now: float) -> bool:
+                   state: _GroupState, now: float,
+                   pending_cows: Optional[List] = None) -> bool:
         """(b) Claim a slot for one admission.  Chunked paged: just an
         arena ``alloc`` — the prompt is prefilled chunk by chunk in the
         (b2) phase, so admission itself never stalls the step.  Unchunked
         paged: one-shot prefill + page scatter.  Dense: one-shot prefill +
         kvcache.merge (re-materializes everything).  Returns False when
-        the arena is out of blocks (caller requeues)."""
+        the arena is out of blocks (caller requeues).
+
+        ``pending_cows`` collects this wave's divergence copy-on-writes
+        (partial-tail prefix hits) instead of dispatching one jitted
+        single-block copy per admission: ``_admit`` flushes them in ONE
+        batched ``arena.cow_blocks`` scatter after the wave — the common
+        templated-prompt burst (several admissions sharing one template)
+        pays one dispatch, not one per member."""
         extra = self._extra_cache_tokens()
         if self.kvcache_impl == "paged":
             arena = self._ensure_arena(state)
@@ -604,6 +654,9 @@ class ServiceRuntime:
                     h = pc.lookup(req.tokens)
                     if h.tokens > 0:
                         hit = h
+                # blocks already promised to this wave's deferred COWs
+                # must stay claimable until the flush
+                reserved = len(pending_cows) if pending_cows else 0
                 if hit is not None and hit.partial_valid:
                     # a partial-tail share ALWAYS needs its divergence COW
                     # (the first computed token lands inside that block),
@@ -611,7 +664,7 @@ class ServiceRuntime:
                     # tight pool degrade to the full-block hit instead of
                     # failing mid-step
                     if not arena.can_alloc(total, shared=hit.blocks,
-                                           reserve=1):
+                                           reserve=1 + reserved):
                         hit = (PrefixHit(blocks=hit.blocks[:-1],
                                          tokens=hit.full_blocks
                                          * arena.block_size,
@@ -619,18 +672,23 @@ class ServiceRuntime:
                                          partial_valid=0)
                                if hit.full_blocks else None)
                 shared = hit.blocks if hit is not None else ()
-                if not arena.can_alloc(total, shared=shared):
+                if not arena.can_alloc(total, shared=shared,
+                                       reserve=reserved):
                     return False
                 slot_id = arena.alloc(total, shared=shared)
                 if hit is not None:
                     arena.set_len(slot_id, hit.tokens)
                     if hit.partial_valid:
-                        # eager divergence copy (guaranteed headroom was
-                        # just checked; ensure_writable in the chunk and
-                        # decode paths stays as an invariant guard)
-                        arena.cow_block(slot_id, hit.full_blocks)
-                        self.admission_copy_bytes += (arena.block_size
-                                                      * arena.token_bytes)
+                        # divergence copy, deferred to the wave's batched
+                        # flush (headroom was reserved above;
+                        # ensure_writable in the chunk and decode paths
+                        # stays as an invariant guard)
+                        if pending_cows is not None:
+                            pending_cows.append((slot_id, hit.full_blocks))
+                        else:
+                            arena.cow_block(slot_id, hit.full_blocks)
+                            self.admission_copy_bytes += (
+                                arena.block_size * arena.token_bytes)
                 else:
                     arena.reset_len(slot_id)
                 slot = _Slot(req, None, prefill_s=0.0,
@@ -711,34 +769,51 @@ class ServiceRuntime:
             return 0
         admitted = 0
         unplaced = []
+        pending_cows: Dict[int, List] = {g: [] for g in self.groups}
         for item in composed.items:
             g = self._route_admission(item)
             if g is None or not self._admit_one(item.payload, g,
-                                                self.groups[g], now):
+                                                self.groups[g], now,
+                                                pending_cows[g]):
                 unplaced.append(item)
                 continue
             admitted += 1
+        # flush the wave's deferred divergence COWs: admissions sharing a
+        # template coalesce their single-block copies into one batched
+        # scatter per group (arena.cow_blocks) instead of one jit dispatch
+        # per admission
+        for g, pairs in pending_cows.items():
+            if pairs:
+                arena = self.groups[g].arena
+                copied = arena.cow_blocks(pairs)
+                self.admission_copy_bytes += (copied * arena.block_size
+                                              * arena.token_bytes)
         for item in reversed(unplaced):   # push_front in reverse keeps FIFO
             self.composer.push_front(item)
         return admitted
 
     # -- chunked piggybacked prefill (paged arena only) -----------------
     def _build_chunk_fn(self, arena: KVArena, T: int, with_emb: bool):
-        """One jitted chunk step per (bucket, first-chunk) shape: gather
-        the slot's dense cache view through its block-table row, run the
-        family's ``prefill_chunk`` at the static bucket width, and scatter
-        exactly the written token rows back into the pages (the multi-
-        token ``append_rows`` — ``write_prefill``'s offset/partial mode)."""
+        """One jitted chunk step per (bucket, first-chunk) shape.
+
+        Paged-NATIVE (attention families): run ``prefill_chunk_paged``
+        straight against the page pools — chunk K/V rows scatter in place
+        through the slot's block-table row, no dense view is gathered or
+        re-scattered.  Fallback (pure-SSM, ring layouts, or the forced
+        oracle): gather the slot's dense view, run ``prefill_chunk``, and
+        scatter the written rows back via the multi-token
+        ``append_rows``."""
         api, cfg, impl = self.api, self.cfg, self._impl
         # cache rows one call writes: the text bucket, plus the VLM image
         # prefix that rides along with the first chunk
         n_rows = T + (cfg.prefix_len
                       if with_emb and cfg.family == "vlm" else 0)
 
+        native = self.paged_native           # static: picked at trace time
+
         def _chunk(params, tokens, emb, pages, state, lens, slot, bt_row,
                    n_valid):
-            self.prefill_traces += 1     # runs at trace time only
-            dense = arena.dense_view(pages, bt_row[None])
+            self.prefill_traces += 1         # runs at trace time only
             start = lens[slot]
             # a FIRST chunk (start == 0, set by reset_len at admission)
             # must see freshly initialized per-slot state, not the slot's
@@ -746,23 +821,35 @@ class ServiceRuntime:
             slot_state = [jnp.where(start > 0, s[:, slot],
                                     jnp.zeros_like(s[:, slot]))[:, None]
                           for s in state]
-            cache = arena.assemble(dense, slot_state, start[None])
             batch = {"tokens": tokens}
             if emb is not None:
                 batch["embeddings"] = emb
-            logits, new_cache = api.prefill_chunk(params, cfg, batch, cache,
-                                                  chunk_len=n_valid,
-                                                  impl=impl)
-            new_dense, new_state = arena.disassemble(new_cache)
-            new_len = jnp.asarray(kvcache.lens(new_cache),
-                                  jnp.int32).reshape(-1)[0]
-            pages = arena.append_rows(
-                pages, new_dense, start[None], jnp.ones((1,), bool),
-                bt_row[None], n_tokens=n_rows,
-                valid_tokens=(new_len - start)[None])
+            if native:
+                cache = arena.assemble(pages, slot_state, start[None])
+                logits, new_cache = api.prefill_chunk_paged(
+                    params, cfg, batch, cache, bt_row[None],
+                    chunk_len=n_valid, block_size=arena.block_size,
+                    impl=impl)
+                new_pages, new_state = arena.disassemble(new_cache)
+                new_len = jnp.asarray(kvcache.lens(new_cache),
+                                      jnp.int32).reshape(-1)[0]
+            else:
+                dense = arena.dense_view(pages, bt_row[None])
+                cache = arena.assemble(dense, slot_state, start[None])
+                logits, new_cache = api.prefill_chunk(params, cfg, batch,
+                                                      cache,
+                                                      chunk_len=n_valid,
+                                                      impl=impl)
+                new_dense, new_state = arena.disassemble(new_cache)
+                new_len = jnp.asarray(kvcache.lens(new_cache),
+                                      jnp.int32).reshape(-1)[0]
+                new_pages = arena.append_rows(
+                    pages, new_dense, start[None], jnp.ones((1,), bool),
+                    bt_row[None], n_tokens=n_rows,
+                    valid_tokens=(new_len - start)[None])
             state = [s.at[:, slot].set(ns[:, 0].astype(s.dtype))
                      for s, ns in zip(state, new_state)]
-            return logits, pages, state, lens.at[slot].set(new_len)
+            return logits, new_pages, state, lens.at[slot].set(new_len)
 
         return jax.jit(_chunk, donate_argnums=arena._donate_argnums((3, 4,
                                                                      5)))
@@ -801,7 +888,10 @@ class ServiceRuntime:
         self.prefill_tokens_computed += n_valid
         rows = n_valid + (self.cfg.prefix_len
                           if with_emb and self.cfg.family == "vlm" else 0)
-        self.admission_copy_bytes += arena.chunk_bytes(rows)
+        # chunk writes are APPENDS of fresh rows, not admission copies:
+        # account them separately so the zero-copy admission gate
+        # (admission_copy_bytes) measures actual copies only
+        self.chunk_write_bytes += arena.chunk_bytes(rows)
         return logits, n_valid, T
 
     def _prefill_chunks(self, state: _GroupState) -> int:
@@ -849,26 +939,71 @@ class ServiceRuntime:
         return done_tokens
 
     # -- fused decode: paged arena path ---------------------------------
-    def _build_paged_decode_fn(self, arena: KVArena):
+    def _paged_decode_pure(self, arena: KVArena) -> Callable:
+        """The fused decode step as a PURE function of
+        ``(params, tokens, pages, state, lens, live, block_tables)`` ->
+        ``(logits, pages, state, lens)`` — what ``_build_paged_decode_fn``
+        jits locally and what a launcher's ``paged_step_builder`` wraps in
+        ``pjit`` with mesh shardings for MP-sharded paged decode."""
         api, cfg, impl = self.api, self.cfg, self._impl
+        native = self.paged_native           # static: picked at trace time
 
         def _step(params, tokens, pages, state, lens, live, block_tables):
-            self.decode_traces += 1        # runs at trace time only
-            dense = arena.dense_view(pages, block_tables)
-            cache = arena.assemble(dense, state, lens)
-            logits, new_cache = api.decode_step(params, cfg, tokens, cache,
-                                                impl=impl)
-            new_dense, new_state = arena.disassemble(new_cache)
-            pages = arena.append_rows(pages, new_dense, lens, live,
-                                      block_tables)
+            self.decode_traces += 1          # runs at trace time only
+            if native:
+                # paged leaves stay PAGE POOLS: the family's attention
+                # streams K/V through the block table in place and writes
+                # only each live slot's new row — no dense view, no
+                # re-scatter
+                cache = arena.assemble(pages, state, lens)
+                logits, new_cache = api.decode_step_paged(
+                    params, cfg, tokens, cache, block_tables, live,
+                    block_size=arena.block_size, impl=impl)
+                new_pages, new_state = arena.disassemble(new_cache)
+            else:
+                dense = arena.dense_view(pages, block_tables)
+                cache = arena.assemble(dense, state, lens)
+                logits, new_cache = api.decode_step(params, cfg, tokens,
+                                                    cache, impl=impl)
+                new_dense, new_state = arena.disassemble(new_cache)
+                new_pages = arena.append_rows(pages, new_dense, lens, live,
+                                              block_tables)
             state = arena.merge_state(state, new_state, live)
             lens = jnp.where(live, lens + 1, lens)
-            return logits, pages, state, lens
+            return logits, new_pages, state, lens
 
+        return _step
+
+    def _build_paged_decode_fn(self, arena: KVArena):
+        if self.paged_step_builder is not None:
+            return self.paged_step_builder(self, arena)
         # donate the arena buffers (args 2..4) so XLA appends in place
         # instead of re-materializing the page pool every decode step
-        return jax.jit(_step,
+        return jax.jit(self._paged_decode_pure(arena),
                        donate_argnums=arena._donate_argnums((2, 3, 4)))
+
+    def decode_cost_analysis(self, group: int = 0) -> Dict[str, Any]:
+        """XLA cost analysis of the compiled fused decode step at the
+        group's CURRENT arena shapes — the zero-gather regression surface
+        (``BENCH_decode.json`` and the HLO tests assert the paged-native
+        step's bytes accessed beat the dense-gather oracle's).  Uses a
+        throwaway lowering so the serving fast path's jit cache and the
+        ``decode_traces`` compile counter stay untouched."""
+        state = self.groups[group]
+        arena = self._ensure_arena(state)
+        traces0, ptraces0 = self.decode_traces, self.prefill_traces
+        try:
+            lowered = jax.jit(self._paged_decode_pure(arena)).lower(
+                self.params, jnp.zeros((arena.capacity,), jnp.int32),
+                arena.pages, arena.state, arena.lens,
+                jnp.ones((arena.capacity,), bool),
+                arena.device_block_tables())
+            cost = lowered.compile().cost_analysis()
+        finally:
+            self.decode_traces, self.prefill_traces = traces0, ptraces0
+        if isinstance(cost, (list, tuple)):   # jax version compat
+            cost = cost[0]
+        return dict(cost)
 
     def _decode_group_paged(self, state: _GroupState) -> None:
         arena = state.arena
@@ -964,6 +1099,7 @@ class ServiceRuntime:
 
     def _step_continuous(self, now: float, max_wait_s: float) -> StepStats:
         copy0, whole0 = self.admission_copy_bytes, self.whole_cache_copies
+        chunkw0 = self.chunk_write_bytes
         steps0, one0 = self.decode_steps, self.oneshot_prefills
         pfx0 = self._prefix_totals()
         moe0 = self._moe_stats.dropped if self._moe_stats else 0.0
@@ -982,6 +1118,7 @@ class ServiceRuntime:
             pending=self.pending(),
             queue_time_s=self.queue_time_estimate(),
             admission_copy_bytes=self.admission_copy_bytes - copy0,
+            chunk_write_bytes=self.chunk_write_bytes - chunkw0,
             whole_cache_copies=self.whole_cache_copies - whole0,
             decode_steps=self.decode_steps - steps0,
             prefill_chunk_tokens=chunk_tokens,
