@@ -7,25 +7,34 @@ from typing import Callable, List, Tuple
 
 from repro.core.categories import EDGE_P100, ServerSpec
 from repro.simulator.engine import SimConfig, Simulation, run_comparison
-from repro.simulator.workload import (WorkloadConfig, generate_requests,
-                                      table1_services)
+from repro.simulator.workload import (WorkloadConfig,
+                                      derive_prefix_hit_rates,
+                                      generate_requests, table1_services)
 
 Row = Tuple[str, float, str]
 
 
 def testbed_scenario(*, servers=6, load=30.0, horizon=40.0, seed=1,
-                     freq_share=0.5, skew=0.7):
+                     freq_share=0.5, skew=0.7, prompt_tokens=0,
+                     template_tokens=0):
     """The paper's testbed shape: six P100 servers, Table-1 services,
     Azure-like bursty arrivals at ~saturating load.  ``skew`` routes that
     fraction of arrivals to the first third of servers — the paper's
     'abrupt or uneven requests in edge' (this is precisely where
-    state-aware offloading beats blind round-robin)."""
+    state-aware offloading beats blind round-robin).
+
+    Nonzero ``prompt_tokens``/``template_tokens`` turn on templated
+    prompts for latency arrivals and price prefix reuse truthfully: the
+    returned ``SimConfig`` carries PER-SERVICE hit rates derived from the
+    trace's actual template-repeat structure
+    (``derive_prefix_hit_rates``) instead of a hand-tuned scalar."""
     import numpy as np
     services = table1_services()
     srv = [ServerSpec(sid=i, num_gpus=1, gpu=EDGE_P100)
            for i in range(servers)]
     wl = WorkloadConfig(horizon_s=horizon, load_scale=load, seed=seed,
-                        freq_share=freq_share)
+                        freq_share=freq_share, prompt_tokens=prompt_tokens,
+                        template_tokens=template_tokens)
     events = generate_requests(services, servers, wl)
     if skew:
         rng = np.random.default_rng(seed + 99)
@@ -36,7 +45,14 @@ def testbed_scenario(*, servers=6, load=30.0, horizon=40.0, seed=1,
                 sid = int(rng.integers(0, hot))
             skewed.append((t, sid, r))
         events = skewed
-    return services, srv, events, SimConfig(horizon_s=horizon)
+    cfg = SimConfig(horizon_s=horizon)
+    if prompt_tokens > 0:
+        # derived AFTER skew: a template repeat only hits if the same
+        # server actually sees it, so re-routing lowers the honest rate
+        cfg = SimConfig(horizon_s=horizon, prefill_token_s=2e-4,
+                        prefix_hit_rates=derive_prefix_hit_rates(
+                            events, services, wl))
+    return services, srv, events, cfg
 
 
 def timed(fn: Callable, *args, **kw):

@@ -8,7 +8,8 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
+from repro.kernels import ops, ref
+from repro.kernels.quant import QuantPages, quantize
 
 
 def _bench(fn, *args, reps=5):
@@ -55,6 +56,30 @@ def run() -> list:
     us = _bench(fs, x, dt, A, Bm, C)
     rows.append(("kernel/ssd_2k", us,
                  f"{Bb * Lx * H / (us * 1e-6) / 1e6:.2f}Mtok_heads_s"))
+    # paged decode, bf16 vs int8 pools (same table/lens; the int8 case
+    # streams half the K/V bytes plus the f32 per-row scales and
+    # dequantizes in-register — the serving arena's quantized hot path)
+    bs, P = 32, 64 * 4 + 1                 # 4 slots x 64 blocks + trash
+    Bp = 4
+    kp = jax.random.normal(key, (P, bs, Hkv, D), jnp.bfloat16)
+    vp = jax.random.normal(key, (P, bs, Hkv, D), jnp.bfloat16)
+    bt = jnp.arange(Bp * 64, dtype=jnp.int32).reshape(Bp, 64)
+    cl = jnp.full((Bp,), 64 * bs, jnp.int32)
+    qp = jax.random.normal(key, (Bp, Hq, D), jnp.bfloat16)
+    fp = jax.jit(lambda q, k, v: ops.paged_decode_attention(
+        q, k, v, bt, cl, impl="ref"))
+    us = _bench(fp, qp, kp, vp)
+    kv_bytes = 2 * Bp * 64 * bs * Hkv * D * 2
+    rows.append(("kernel/paged_decode_bf16", us,
+                 f"{kv_bytes / (us * 1e-6) / 1e9:.1f}GB_s"))
+    kq = QuantPages(*quantize(kp))
+    vq = QuantPages(*quantize(vp))
+    fq = jax.jit(lambda q, k, v: ops.paged_decode_attention(
+        q, k, v, bt, cl, impl="ref"))
+    us = _bench(fq, qp, kq, vq)
+    kv_bytes = 2 * Bp * 64 * bs * Hkv * (D * 1 + 4)   # int8 rows + scales
+    rows.append(("kernel/paged_decode_int8", us,
+                 f"{kv_bytes / (us * 1e-6) / 1e9:.1f}GB_s"))
     # grouped expert GEMM
     E, Cc, K, Nn = 8, 512, 1024, 1024
     lhs = jax.random.normal(key, (E, Cc, K), jnp.bfloat16)

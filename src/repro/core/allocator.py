@@ -26,8 +26,9 @@ from typing import Optional
 
 from . import costmodel as cm
 from .categories import (CAT_FREQ_MULTI, CAT_FREQ_SINGLE, CAT_LAT_MULTI,
-                         CAT_LAT_SINGLE, PREFIX_RETENTION_FRACTION, GPUSpec,
-                         Operator, Sensitivity, ServiceSpec, TaskCategory,
+                         CAT_LAT_SINGLE, KV_DTYPE_BY_SENSITIVITY,
+                         PREFIX_RETENTION_FRACTION, GPUSpec, Operator,
+                         Sensitivity, ServiceSpec, TaskCategory,
                          operators_for)
 
 BS_CANDIDATES = tuple(2 ** i for i in range(10))     # 2^0 .. 2^9  (§4.1)
@@ -52,6 +53,10 @@ class ParallelPlan:
     #                         from the task category (frequency retains
     #                         aggressively, latency bounded), 0 = disabled,
     #                         >0 = max idle cached blocks retained
+    kv_dtype: object = -1   # paged-KV precision: -1 = derive from the task
+    #                         category (frequency -> "int8", latency ->
+    #                         "bf16"), or an explicit "bf16"/"int8" override
+    #                         ("bf16" = keep the model's native KV dtype)
 
     def __post_init__(self):
         for field in ("mp", "bs", "mt", "mf", "dp"):
@@ -73,6 +78,12 @@ class ParallelPlan:
                 f"ParallelPlan.prefix_cache must be -1 (category default), "
                 f"0 (disabled) or a positive retention block count, got "
                 f"{px!r}")
+        kd = self.kv_dtype
+        if kd != -1 and kd not in KV_DTYPE_BY_SENSITIVITY.values():
+            valid = sorted(set(KV_DTYPE_BY_SENSITIVITY.values()))
+            raise ValueError(
+                f"ParallelPlan.kv_dtype must be -1 (category default) or "
+                f"one of {valid}, got {kd!r}")
 
     @property
     def gpus(self) -> int:
@@ -125,6 +136,16 @@ class ParallelPlan:
             return min(knob, pool_blocks)
         frac = PREFIX_RETENTION_FRACTION[self.category.sensitivity]
         return max(1, int(pool_blocks * frac))
+
+    def resolved_kv_dtype(self) -> str:
+        """Paged-KV pool precision for the serving engine's arena.  An
+        explicit ``kv_dtype`` wins; -1 derives from the task category:
+        frequency tasks (long KV-traffic-bound streams, drift-tolerant
+        consumers) quantize blocks to int8 with per-token-per-head scales,
+        latency tasks keep the model's native dtype."""
+        if self.kv_dtype != -1:
+            return self.kv_dtype
+        return KV_DTYPE_BY_SENSITIVITY[self.category.sensitivity]
 
     def operators(self):
         ops = set()

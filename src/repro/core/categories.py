@@ -80,6 +80,19 @@ PREFIX_RETENTION_FRACTION = {
 }
 
 
+# Paged-KV precision by sensitivity (§3.1 applied to cache residency):
+# frequency tasks run long periodic streams whose decode cost is dominated
+# by KV traffic, and their outputs feed rate-driven pipelines that tolerate
+# small numeric drift — int8 block quantization (per-token-per-head scales)
+# cuts their decode bytes/token roughly 2x and doubles effective arena
+# residency.  Latency tasks are one-shot and accuracy-facing; they keep
+# the model's native KV dtype ("bf16" = whatever the model computes in).
+KV_DTYPE_BY_SENSITIVITY = {
+    Sensitivity.FREQUENCY: "int8",
+    Sensitivity.LATENCY: "bf16",
+}
+
+
 # ---------------------------------------------------------------------------
 # services & requests (shared by live engine + simulator)
 # ---------------------------------------------------------------------------
@@ -119,6 +132,8 @@ class Request:
     duration_s: float = 0.0          # stream duration for frequency tasks
     prompt_tokens: int = 0           # prompt length (chunked-prefill cost
     #                                  model; 0 = prefill not modeled)
+    template: int = 0                # shared-prompt-template id (prefix-
+    #                                  cache structure; 0 = one-off prompt)
     deadline_s: float = 0.0          # arrival + SLO (latency tasks)
     path: Tuple[int, ...] = ()       # servers traversed (loop prevention)
     offload_count: int = 0

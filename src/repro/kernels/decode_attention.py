@@ -381,13 +381,15 @@ def paged_chunk_prefill_attention_pallas(q, k_pages, v_pages, block_tables,
 # ---------------------------------------------------------------------------
 
 def paged_gather_ref(pages, block_tables):
-    """Dense-gather fallback: pages (P, bs, Hkv, D) + tables (B, nblk)
-    -> contiguous (B, nblk*bs, Hkv, D).  Unallocated table entries point
-    at the pool's trash block; callers mask them via ``cache_len``."""
+    """Dense-gather fallback: pages (P, bs, *rest) + tables (B, nblk)
+    -> contiguous (B, nblk*bs, *rest).  ``rest`` is (Hkv, D) for value
+    pools and (Hkv,) for the int8 pools' scale siblings.  Unallocated
+    table entries point at the pool's trash block; callers mask them via
+    ``cache_len``."""
     B, nblk = block_tables.shape
-    _, bs, Hkv, D = pages.shape
-    g = pages[block_tables]                    # (B, nblk, bs, Hkv, D)
-    return g.reshape(B, nblk * bs, Hkv, D)
+    _, bs, *rest = pages.shape
+    g = pages[block_tables]                    # (B, nblk, bs, *rest)
+    return g.reshape(B, nblk * bs, *rest)
 
 
 def mask_block_tables(block_tables, valid_len, block_size, trash):
@@ -509,3 +511,225 @@ def paged_decode_attention_pallas(q, k_pages, v_pages, block_tables,
     )(tables, cache_len, qt, kp, vp)
 
     return out[:, 0].reshape(B, Hq, D)
+
+
+# ---------------------------------------------------------------------------
+# quantized paged layout: int8 page tiles + scalar-prefetched scale columns,
+# dequantized in-register before QK/PV (the pool never exists in float)
+# ---------------------------------------------------------------------------
+
+def _quant_scale_pool(scales):
+    """(P, bs, Hkv) f32 scale pool -> (Hkv, P, bs, 1): same per-kv-head
+    physical-page tiling as the value pools, with a lane-dim singleton so
+    the (k_block, 1) scale column broadcasts against (k_block, D) tiles."""
+    return scales.transpose(2, 0, 1)[..., None]
+
+
+def _paged_decode_kernel_quant(bt_ref, len_ref, q_ref, k_ref, v_ref,
+                               ks_ref, vs_ref, o_ref, m_ref, l_ref,
+                               acc_ref, *, scale: float, k_block: int,
+                               nk: int, q_heads: int):
+    bh = pl.program_id(0)
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    cache_len = len_ref[bh // q_heads]
+    k_lo = ki * k_block
+    # a logical block past cache_len maps to the trash page: skip it
+    @pl.when(k_lo < cache_len)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)           # (_SUB, D)
+        # dequantize in-register: int8 tile * per-row scale column
+        k = k_ref[0, 0].astype(jnp.float32) * ks_ref[0, 0]  # (k_block, D)
+        v = v_ref[0, 0].astype(jnp.float32) * vs_ref[0, 0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (_SUB, k_block), 1)
+        ok = kpos < cache_len
+        s = jnp.where(ok, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, :1]) * ok.astype(jnp.float32)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        m_ref[...] = m_new
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha[:, :1] + pv
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_ref[...][:, :1]
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l, 1e-37)).astype(o_ref.dtype)
+
+
+def paged_decode_attention_quant_pallas(q, k_pages, v_pages, k_scales,
+                                        v_scales, block_tables, cache_len,
+                                        *, softmax_scale=None,
+                                        interpret=False):
+    """Quantized sibling of ``paged_decode_attention_pallas``: pages are
+    int8 (P, block_size, Hkv, D) with f32 scales (P, block_size, Hkv); the
+    kernel streams int8 tiles + scale columns through the block table and
+    dequantizes in-register — HBM decode traffic is 1 byte per KV element
+    plus 4/D bytes of scale.
+    """
+    B, Hq, D = q.shape
+    P, k_block, Hkv, _ = k_pages.shape
+    nk = block_tables.shape[1]
+    group = Hq // Hkv
+    scale = softmax_scale if softmax_scale is not None else D ** -0.5
+    cache_len = jnp.asarray(cache_len, jnp.int32)
+    if cache_len.ndim == 0:
+        cache_len = jnp.full((B,), cache_len, jnp.int32)
+    tables = jnp.asarray(block_tables, jnp.int32)
+
+    kp = k_pages.transpose(2, 0, 1, 3)             # (Hkv, P, bs, D) int8
+    vp = v_pages.transpose(2, 0, 1, 3)
+    ks = _quant_scale_pool(k_scales)               # (Hkv, P, bs, 1) f32
+    vs = _quant_scale_pool(v_scales)
+    qt = jnp.broadcast_to(q.reshape(B * Hq, 1, D), (B * Hq, _SUB, D))
+
+    def kv_index(bh, ki, bt_ref, len_ref):
+        b = bh // Hq
+        kvh = (bh % Hq) // group
+        return (kvh, bt_ref[b, ki], 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                     # block table + lens
+        grid=(B * Hq, nk),
+        in_specs=[
+            pl.BlockSpec((1, _SUB, D), lambda bh, ki, bt, ln: (bh, 0, 0)),
+            pl.BlockSpec((1, 1, k_block, D), kv_index),
+            pl.BlockSpec((1, 1, k_block, D), kv_index),
+            pl.BlockSpec((1, 1, k_block, 1), kv_index),
+            pl.BlockSpec((1, 1, k_block, 1), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, _SUB, D), lambda bh, ki, bt, ln:
+                               (bh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((_SUB, 128), jnp.float32),
+            pltpu.VMEM((_SUB, 128), jnp.float32),
+            pltpu.VMEM((_SUB, D), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_paged_decode_kernel_quant, scale=scale,
+                               k_block=k_block, nk=nk, q_heads=Hq)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * Hq, _SUB, D), q.dtype),
+        compiler_params=compat.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(tables, cache_len, qt, kp, vp, ks, vs)
+
+    return out[:, 0].reshape(B, Hq, D)
+
+
+def _paged_chunk_kernel_quant(bt_ref, start_ref, end_ref, q_ref, k_ref,
+                              v_ref, ks_ref, vs_ref, o_ref, m_ref, l_ref,
+                              acc_ref, *, scale: float, prefix_len: int,
+                              k_block: int, nk: int, Tp: int, q_heads: int):
+    bh = pl.program_id(0)
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    start = start_ref[bh // q_heads]
+    end = end_ref[bh // q_heads]
+
+    # a logical block at or past the valid cache maps to the trash page
+    @pl.when(ki * k_block < end)
+    def _compute():
+        k = k_ref[0, 0].astype(jnp.float32) * ks_ref[0, 0]
+        v = v_ref[0, 0].astype(jnp.float32) * vs_ref[0, 0]
+        _chunk_tile(start, end, ki, q_ref[0], k, v, m_ref, l_ref,
+                    acc_ref, scale=scale, prefix_len=prefix_len,
+                    k_block=k_block, Tp=Tp)
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_ref[...][:, :1]
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l, 1e-37)).astype(o_ref.dtype)
+
+
+def paged_chunk_prefill_attention_quant_pallas(q, k_pages, v_pages,
+                                               k_scales, v_scales,
+                                               block_tables, start,
+                                               chunk_len, *,
+                                               prefix_len: int = 0,
+                                               softmax_scale=None,
+                                               interpret=False):
+    """Quantized sibling of ``paged_chunk_prefill_attention_pallas``: the
+    chunk's own rows must already be *quantized* into the int8 pages (the
+    write path quantizes before attending), so the kernel's dequantized
+    view is exactly what decode will later read."""
+    B, T, Hq, D = q.shape
+    P, k_block, Hkv, _ = k_pages.shape
+    nk = block_tables.shape[1]
+    group = Hq // Hkv
+    scale = softmax_scale if softmax_scale is not None else D ** -0.5
+    start = jnp.asarray(start, jnp.int32)
+    if start.ndim == 0:
+        start = jnp.full((B,), start, jnp.int32)
+    chunk_len = jnp.asarray(chunk_len, jnp.int32)
+    if chunk_len.ndim == 0:
+        chunk_len = jnp.full((B,), chunk_len, jnp.int32)
+    tables = jnp.asarray(block_tables, jnp.int32)
+
+    Tp = -(-T // _SUB) * _SUB
+    kp = k_pages.transpose(2, 0, 1, 3)             # (Hkv, P, bs, D) int8
+    vp = v_pages.transpose(2, 0, 1, 3)
+    ks = _quant_scale_pool(k_scales)               # (Hkv, P, bs, 1) f32
+    vs = _quant_scale_pool(v_scales)
+    qt = q.transpose(0, 2, 1, 3)
+    qt = jnp.pad(qt, ((0, 0), (0, 0), (0, Tp - T), (0, 0)))
+    qt = qt.reshape(B * Hq, Tp, D)
+
+    def kv_index(bh, ki, bt_ref, s_ref, e_ref):
+        b = bh // Hq
+        kvh = (bh % Hq) // group
+        return (kvh, bt_ref[b, ki], 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,                     # table + start + end
+        grid=(B * Hq, nk),
+        in_specs=[
+            pl.BlockSpec((1, Tp, D),
+                         lambda bh, ki, bt, s, e: (bh, 0, 0)),
+            pl.BlockSpec((1, 1, k_block, D), kv_index),
+            pl.BlockSpec((1, 1, k_block, D), kv_index),
+            pl.BlockSpec((1, 1, k_block, 1), kv_index),
+            pl.BlockSpec((1, 1, k_block, 1), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, Tp, D),
+                               lambda bh, ki, bt, s, e: (bh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Tp, 128), jnp.float32),
+            pltpu.VMEM((Tp, 128), jnp.float32),
+            pltpu.VMEM((Tp, D), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_paged_chunk_kernel_quant, scale=scale,
+                               prefix_len=prefix_len, k_block=k_block,
+                               nk=nk, Tp=Tp, q_heads=Hq)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Tp, D), q.dtype),
+        compiler_params=compat.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(tables, start, start + chunk_len, qt, kp, vp, ks, vs)
+
+    out = out.reshape(B, Hq, Tp, D)[:, :, :T]
+    return out.transpose(0, 2, 1, 3)

@@ -22,9 +22,12 @@ from .decode_attention import (chunk_prefill_attention_pallas,
                                decode_attention_pallas, mask_block_tables,
                                paged_gather_ref,
                                paged_chunk_prefill_attention_pallas,
-                               paged_decode_attention_pallas)
+                               paged_chunk_prefill_attention_quant_pallas,
+                               paged_decode_attention_pallas,
+                               paged_decode_attention_quant_pallas)
 from .flash_attention import flash_attention_pallas
 from .moe_gemm import grouped_matmul_pallas
+from .quant import QuantPages, dequantize
 from .ssd_scan import ssd_scan_pallas
 
 VALID_IMPLS = ("ref", "pallas", "pallas_interpret")
@@ -115,8 +118,29 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, cache_len, *,
     fallback streams up-to-len rows instead of each slot's full pool) and
     runs the jnp oracle; the Pallas path streams K/V through the table via
     scalar prefetch and skips past-len blocks entirely.
+
+    ``QuantPages`` pools (int8 values + f32 per-row scales) dispatch to the
+    quantized kernel variants: the ref path gathers values AND scales
+    through the same masked table and dequantizes before the oracle — the
+    identical jnp math the in-kernel dequant reproduces.
     """
     impl = impl or default_impl()
+    if isinstance(k_pages, QuantPages):
+        if impl == "ref":
+            bs = k_pages.shape[1]
+            trash = k_pages.shape[0] - 1
+            bt = mask_block_tables(block_tables, cache_len, bs, trash)
+            k = dequantize(paged_gather_ref(k_pages.values, bt),
+                           paged_gather_ref(k_pages.scales, bt))
+            v = dequantize(paged_gather_ref(v_pages.values, bt),
+                           paged_gather_ref(v_pages.scales, bt))
+            return ref.decode_attention_ref(q, k, v, cache_len,
+                                            softmax_scale=softmax_scale)
+        return paged_decode_attention_quant_pallas(
+            q, k_pages.values, v_pages.values, k_pages.scales,
+            v_pages.scales, block_tables, cache_len,
+            softmax_scale=softmax_scale,
+            interpret=(impl == "pallas_interpret"))
     if impl == "ref":
         bs, trash = k_pages.shape[1], k_pages.shape[0] - 1
         bt = mask_block_tables(block_tables, cache_len, bs, trash)
@@ -158,8 +182,29 @@ def paged_chunk_attention(q, k_pages, v_pages, block_tables, start,
     (every attendable position sits below ``start + chunk_len``; entries
     past it route to the trash page) and runs the jnp chunk oracle; the
     Pallas path streams K/V through the table via scalar prefetch.
+    ``QuantPages`` pools dispatch to the quantized variants, same contract
+    as ``paged_decode_attention``.
     """
     impl = impl or default_impl()
+    if isinstance(k_pages, QuantPages):
+        end = jnp.asarray(start, jnp.int32) + jnp.asarray(chunk_len,
+                                                          jnp.int32)
+        if impl == "ref":
+            bs = k_pages.shape[1]
+            trash = k_pages.shape[0] - 1
+            bt = mask_block_tables(block_tables, end, bs, trash)
+            k = dequantize(paged_gather_ref(k_pages.values, bt),
+                           paged_gather_ref(k_pages.scales, bt))
+            v = dequantize(paged_gather_ref(v_pages.values, bt),
+                           paged_gather_ref(v_pages.scales, bt))
+            return ref.chunk_attention_ref(q, k, v, start, chunk_len,
+                                           prefix_len=prefix_len,
+                                           softmax_scale=softmax_scale)
+        return paged_chunk_prefill_attention_quant_pallas(
+            q, k_pages.values, v_pages.values, k_pages.scales,
+            v_pages.scales, block_tables, start, chunk_len,
+            prefix_len=prefix_len, softmax_scale=softmax_scale,
+            interpret=(impl == "pallas_interpret"))
     if impl == "ref":
         bs, trash = k_pages.shape[1], k_pages.shape[0] - 1
         end = jnp.asarray(start, jnp.int32) + jnp.asarray(chunk_len,

@@ -1,0 +1,116 @@
+"""Quantized paged-KV block format: int8 values + per-row float scales.
+
+The serving arena's page pools are the decode hot loop's working set, and
+decode is memory-bound — bytes/sec IS tokens/sec.  ``QuantPages`` packs a
+KV pool as symmetric per-token-per-head int8 with an f32 scale stored as a
+sibling array of the same leading (pool, block, row, head) layout, so:
+
+* every block-index operation the arena performs (COW copies, prefix-cache
+  sharing, trash-block masking, block-table gathers) applies uniformly to
+  values and scales — the scales *travel with the blocks*;
+* the paged attention kernels read int8 tiles + an (block, 1) scale column
+  and dequantize in-register before QK/PV, never materializing a float
+  pool;
+* ``QuantPages`` is a registered pytree whose ``.shape``/``.dtype`` proxy
+  the value array, so shape-reading call sites (arena classification,
+  BlockSpec construction, scan carries, pjit shardings) keep working
+  unmodified.
+
+Quantization format (the one both the Pallas kernels and the jnp ref
+reproduce bit-for-bit, since de/quantization is the same jnp math):
+
+    scale = max(|x| over the last axis) / 127, floored at ``EPS``
+    q     = round(clip(x / scale, -127, 127)) as int8
+    x'    = float32(q) * scale
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INT8_MAX = 127.0
+EPS = 1e-8          # zero rows quantize to zeros, never divide by zero
+
+
+@jax.tree_util.register_pytree_node_class
+class QuantPages:
+    """An int8 array plus per-row (last-axis-reduced) float32 scales.
+
+    ``values.shape == (*lead, D)`` and ``scales.shape == (*lead,)`` — one
+    scale per row of the quantized axis.  Shape/dtype attributes proxy the
+    value array so existing shape-reading call sites treat a QuantPages
+    like the dense pool it replaces.
+    """
+    __slots__ = ("values", "scales")
+
+    def __init__(self, values, scales):
+        self.values = values
+        self.scales = scales
+
+    @property
+    def shape(self):
+        return self.values.shape
+
+    @property
+    def dtype(self):
+        return self.values.dtype
+
+    @property
+    def ndim(self):
+        return self.values.ndim
+
+    def tree_flatten(self):
+        return (self.values, self.scales), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    def __repr__(self):
+        return (f"QuantPages(values={getattr(self.values, 'shape', None)},"
+                f" scales={getattr(self.scales, 'shape', None)})")
+
+
+def quantize(x):
+    """Symmetric per-row int8: (values int8, scales f32) with
+    ``scales.shape == x.shape[:-1]``."""
+    xf = jnp.asarray(x, jnp.float32)
+    scales = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1) / INT8_MAX, EPS)
+    q = jnp.clip(jnp.round(xf / scales[..., None]), -INT8_MAX, INT8_MAX)
+    return q.astype(jnp.int8), scales.astype(jnp.float32)
+
+
+def dequantize(values, scales, dtype=jnp.float32):
+    """Inverse of ``quantize`` (up to the rounding loss)."""
+    out = values.astype(jnp.float32) * scales[..., None].astype(jnp.float32)
+    return out.astype(dtype)
+
+
+def quantize_like(x, pool):
+    """Quantize rows for insertion into ``pool``: a ``QuantPages`` pool gets
+    (int8 rows, f32 scales); a dense pool passes through as (rows, None)."""
+    if isinstance(pool, QuantPages):
+        return quantize(x)
+    return x, None
+
+
+# ---------------------------------------------------------------------------
+# tree-aware scan-carry helpers: uniform layer indexing for dense arrays
+# (one leaf) and QuantPages (values + scales leaves) inside lax.scan bodies
+# ---------------------------------------------------------------------------
+
+def tree_index_layer(tree, i):
+    """``dynamic_index_in_dim(leaf, i, 0)`` over every array in ``tree`` —
+    a plain array is its own single leaf, so existing dense carries are
+    unchanged; a QuantPages carry indexes values and scales together."""
+    return jax.tree.map(
+        lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
+        tree)
+
+
+def tree_update_layer(tree, leaf, i):
+    """Inverse of :func:`tree_index_layer`: write ``leaf`` back at layer
+    ``i`` of every array in ``tree``."""
+    return jax.tree.map(
+        lambda a, sub: jax.lax.dynamic_update_index_in_dim(a, sub, i, 0),
+        tree, leaf)

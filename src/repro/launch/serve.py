@@ -76,6 +76,13 @@ def main(argv=None) -> int:
                          "category-derived bound (frequency retains "
                          "aggressively, latency bounded), 0 = disabled, "
                          ">0 = max idle cached blocks")
+    ap.add_argument("--kv-dtype", default="auto",
+                    help="paged-KV pool precision: 'auto' = the plan's "
+                         "category-derived choice (frequency services "
+                         "quantize blocks to int8 with per-row scales, "
+                         "latency services keep the model dtype), or an "
+                         "explicit 'bf16'/'int8' override for every "
+                         "service")
     ap.add_argument("--pjit-decode", action="store_true",
                     help="build each service's fused paged decode step "
                          "under pjit on a (1, device_count) service mesh "
@@ -97,6 +104,13 @@ def main(argv=None) -> int:
         ap.error(f"--prefix-cache must be -1 (category default), 0 "
                  f"(disabled) or a positive block count, got "
                  f"{args.prefix_cache}")
+    if args.kv_dtype not in ("auto", "bf16", "int8"):
+        ap.error(f"--kv-dtype must be auto (category default), bf16 or "
+                 f"int8, got {args.kv_dtype!r}")
+    if args.kv_dtype == "int8" and args.kvcache_impl != "paged":
+        ap.error("--kv-dtype=int8 requires --kvcache-impl=paged (only "
+                 "page pools are block-quantized)")
+    kv_dtype = -1 if args.kv_dtype == "auto" else args.kv_dtype
 
     arch_ids = [a.strip() for a in args.archs.split(",")]
     for a in arch_ids:
@@ -115,8 +129,9 @@ def main(argv=None) -> int:
     placements = cp.run_placement(demand)
     print("EPARA plans:")
     for a, plan in cp.plans.items():
+        kv = plan.resolved_kv_dtype() if kv_dtype == -1 else kv_dtype
         print(f"  {a:20s} {plan.category} mp={plan.mp} bs={plan.bs} "
-              f"mt={plan.mt} mf={plan.mf} dp={plan.dp}")
+              f"mt={plan.mt} mf={plan.mf} dp={plan.dp} kv={kv}")
     print(f"placements: {placements}")
 
     # data plane: one engine per server, reduced models
@@ -139,7 +154,8 @@ def main(argv=None) -> int:
         params = model_api(cfg).init(jax.random.PRNGKey(hash(svc) % 2**31),
                                      cfg)
         chunked = (None if not args.no_chunked_prefill else False)
-        plan = _dc.replace(cp.plans[svc], prefix_cache=args.prefix_cache)
+        plan = _dc.replace(cp.plans[svc], prefix_cache=args.prefix_cache,
+                           kv_dtype=kv_dtype)
         rt = ServiceRuntime(cfg, params, plan, mode=args.mode,
                             kvcache_impl=args.kvcache_impl,
                             max_seq_len=args.max_seq_len,

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs import config_for_shape
+from repro.kernels.quant import QuantPages
 from repro.models.config import ModelConfig, SHAPES_BY_NAME, ShapeSpec
 from repro.models.registry import input_specs, model_api
 from repro.training.optimizer import get_optimizer
@@ -214,6 +215,21 @@ def _paged_leaf_spec(mesh: Mesh, leaf):
     return meshlib._pick(mesh, tuple(leaf.shape), prefs)
 
 
+def _pool_sharding(mesh: Mesh, pool):
+    """Sharding(s) for one page pool.  Quantized pools are a two-leaf
+    pytree: the int8 values shard like a dense pool (heads/head_dim over
+    ``model``), the per-row scale pool ``(layers, pages, block_size, Hkv)``
+    shards only its trailing Hkv axis — the same head placement as the
+    values, never the token axis."""
+    if isinstance(pool, QuantPages):
+        vspec = _paged_leaf_spec(mesh, pool.values)
+        sspec = meshlib._pick(mesh, tuple(pool.scales.shape),
+                              {"model": [pool.scales.ndim - 1]})
+        return QuantPages(NamedSharding(mesh, vspec),
+                          NamedSharding(mesh, sspec))
+    return NamedSharding(mesh, _paged_leaf_spec(mesh, pool))
+
+
 def paged_decode_builder(mesh: Mesh, *, fsdp_params: bool = False):
     """Builder for ``ServiceRuntime(paged_step_builder=...)``: jits the
     engine's pure fused paged decode step under the service mesh so
@@ -230,8 +246,7 @@ def paged_decode_builder(mesh: Mesh, *, fsdp_params: bool = False):
             runtime.params)
         psharding = meshlib.named(mesh, meshlib.param_specs(
             mesh, params_shape, fsdp=fsdp_params))
-        pages_sh = [NamedSharding(mesh, _paged_leaf_spec(mesh, p))
-                    for p in arena.pages]
+        pages_sh = [_pool_sharding(mesh, p) for p in arena.pages]
         state_sh = [NamedSharding(mesh, _paged_leaf_spec(mesh, s))
                     for s in arena.state]
         rep = NamedSharding(mesh, P())

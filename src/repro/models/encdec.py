@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops
+from repro.kernels.quant import tree_index_layer, tree_update_layer
 from . import layers, transformer
 from .config import ModelConfig
 from .sharding import constrain_activation
@@ -270,8 +271,8 @@ def prefill_chunk_paged(params, cfg: ModelConfig, batch, cache,
             cv = layers.linear(memory, lp["cross_attn"]["wv"],
                                lp["cross_attn"].get("bv")).reshape(
                 B, Lk, cfg.num_kv_heads, cfg.head_dim).astype(cv.dtype)
-        kp = jax.lax.dynamic_index_in_dim(k_all, i, 0, keepdims=False)
-        vp = jax.lax.dynamic_index_in_dim(v_all, i, 0, keepdims=False)
+        kp = tree_index_layer(k_all, i)
+        vp = tree_index_layer(v_all, i)
         xn = layers.apply_norm(lp["ln1"], cfg, x)
         a, kp, vp = layers.attention_chunk_paged(
             lp["self_attn"], cfg, xn, kp, vp, block_tables, startv,
@@ -287,8 +288,8 @@ def prefill_chunk_paged(params, cfg: ModelConfig, batch, cache,
         x = x + c
         x = x + layers.mlp(lp["mlp"], cfg,
                            layers.apply_norm(lp["ln2"], cfg, x))
-        k_all = jax.lax.dynamic_update_index_in_dim(k_all, kp, i, 0)
-        v_all = jax.lax.dynamic_update_index_in_dim(v_all, vp, i, 0)
+        k_all = tree_update_layer(k_all, kp, i)
+        v_all = tree_update_layer(v_all, vp, i)
         return (x, k_all, v_all), (ck, cv)
 
     (h, k, v), (ck_all, cv_all) = jax.lax.scan(
@@ -368,8 +369,8 @@ def decode_step_paged(params, cfg: ModelConfig, token, cache, block_tables,
         x, k_all, v_all = carry
         lp, i, ck, cv = xs
         x = constrain_activation(x)
-        kp = jax.lax.dynamic_index_in_dim(k_all, i, 0, keepdims=False)
-        vp = jax.lax.dynamic_index_in_dim(v_all, i, 0, keepdims=False)
+        kp = tree_index_layer(k_all, i)
+        vp = tree_index_layer(v_all, i)
         xn = layers.apply_norm(lp["ln1"], cfg, x[:, None])[:, 0]
         a, kp, vp = layers.attention_decode_paged(
             lp["self_attn"], cfg, xn, kp, vp, block_tables, lens, live,
@@ -384,8 +385,8 @@ def decode_step_paged(params, cfg: ModelConfig, token, cache, block_tables,
         x = x + c
         xn = layers.apply_norm(lp["ln2"], cfg, x[:, None])[:, 0]
         x = x + layers.mlp(lp["mlp"], cfg, xn)
-        k_all = jax.lax.dynamic_update_index_in_dim(k_all, kp, i, 0)
-        v_all = jax.lax.dynamic_update_index_in_dim(v_all, vp, i, 0)
+        k_all = tree_update_layer(k_all, kp, i)
+        v_all = tree_update_layer(v_all, vp, i)
         return (x, k_all, v_all), None
 
     (x, k, v), _ = jax.lax.scan(

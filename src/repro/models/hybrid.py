@@ -14,6 +14,7 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.quant import tree_index_layer, tree_update_layer
 from . import layers, ssm, transformer
 from .config import ModelConfig
 from .sharding import constrain_activation
@@ -321,14 +322,14 @@ def prefill_chunk_paged(params, cfg: ModelConfig, batch, cache,
         idx = g * every + jnp.arange(every)
         (h, conv_all, ssd_all), _ = jax.lax.scan(
             mamba_body, (h, conv_all, ssd_all), (gp, idx))
-        kp = jax.lax.dynamic_index_in_dim(k_all, g, 0, keepdims=False)
-        vp = jax.lax.dynamic_index_in_dim(v_all, g, 0, keepdims=False)
+        kp = tree_index_layer(k_all, g)
+        vp = tree_index_layer(v_all, g)
         h, kp, vp = _shared_chunk_paged(params["shared"], cfg, h, h0, kp,
                                         vp, block_tables, start, chunk_len,
                                         block_size=block_size,
                                         window=window, impl=impl)
-        k_all = jax.lax.dynamic_update_index_in_dim(k_all, kp, g, 0)
-        v_all = jax.lax.dynamic_update_index_in_dim(v_all, vp, g, 0)
+        k_all = tree_update_layer(k_all, kp, g)
+        v_all = tree_update_layer(v_all, vp, g)
         return (h, conv_all, ssd_all, k_all, v_all), None
 
     carry0 = (h0, cache["conv"], cache["ssd"], cache["attn_k"],
@@ -429,14 +430,14 @@ def decode_step_paged(params, cfg: ModelConfig, token, cache, block_tables,
         idx = g * every + jnp.arange(every)
         (h, conv_all, ssd_all), _ = jax.lax.scan(
             mamba_body, (h, conv_all, ssd_all), (gp, idx))
-        kp = jax.lax.dynamic_index_in_dim(k_all, g, 0, keepdims=False)
-        vp = jax.lax.dynamic_index_in_dim(v_all, g, 0, keepdims=False)
+        kp = tree_index_layer(k_all, g)
+        vp = tree_index_layer(v_all, g)
         h, kp, vp = _shared_decode_paged(params["shared"], cfg, h, h0, kp,
                                          vp, block_tables, lens, live,
                                          block_size=block_size,
                                          window=window, impl=impl)
-        k_all = jax.lax.dynamic_update_index_in_dim(k_all, kp, g, 0)
-        v_all = jax.lax.dynamic_update_index_in_dim(v_all, vp, g, 0)
+        k_all = tree_update_layer(k_all, kp, g)
+        v_all = tree_update_layer(v_all, vp, g)
         return (h, conv_all, ssd_all, k_all, v_all), None
 
     carry0 = (h0, cache["conv"], cache["ssd"], cache["attn_k"],

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops
+from repro.kernels.quant import QuantPages, quantize
 from .config import ModelConfig
 
 
@@ -271,7 +272,19 @@ def paged_insert_rows(pages, rows, block_tables, positions, valid, *,
     bool — invalid rows (dead slots, chunk padding) land in the trash
     page, so the scatter stays branch-free and shape-stable.  This is the
     paged-native write path: one row per produced token, never the dense
-    re-scatter of the whole view."""
+    re-scatter of the whole view.
+
+    A ``QuantPages`` pool quantizes the fresh float rows on insert (the
+    fused scale update: int8 rows land in ``values``, their per-row f32
+    scales in the sibling ``scales`` pool through the same flat scatter),
+    so the pool only ever holds quantized blocks."""
+    if isinstance(pages, QuantPages):
+        qrows, srows = quantize(rows)
+        return QuantPages(
+            paged_insert_rows(pages.values, qrows, block_tables, positions,
+                              valid, block_size=block_size),
+            paged_insert_rows(pages.scales, srows, block_tables, positions,
+                              valid, block_size=block_size))
     P = pages.shape[0]
     nblk = block_tables.shape[1]
     pos = jnp.clip(positions, 0, nblk * block_size - 1)

@@ -13,6 +13,8 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.quant import tree_index_layer, tree_update_layer
+
 from . import layers
 from .config import ModelConfig
 from .sharding import constrain_activation
@@ -231,8 +233,10 @@ def prefill_chunk_paged(params, cfg: ModelConfig, batch, cache,
         x, k_all, v_all = carry
         lp, i = xs
         x = constrain_activation(x)
-        kp = jax.lax.dynamic_index_in_dim(k_all, i, 0, keepdims=False)
-        vp = jax.lax.dynamic_index_in_dim(v_all, i, 0, keepdims=False)
+        # tree-aware layer indexing: QuantPages pools (int8 + scales)
+        # index/update both leaves together, dense pools are unchanged
+        kp = tree_index_layer(k_all, i)
+        vp = tree_index_layer(v_all, i)
         xn = layers.apply_norm(lp["ln1"], cfg, x)
         h, kp, vp = layers.attention_chunk_paged(
             lp["attn"], cfg, xn, kp, vp, block_tables, start, chunk_len,
@@ -240,8 +244,8 @@ def prefill_chunk_paged(params, cfg: ModelConfig, batch, cache,
         x = x + h
         x = x + layers.mlp(lp["mlp"], cfg,
                            layers.apply_norm(lp["ln2"], cfg, x))
-        k_all = jax.lax.dynamic_update_index_in_dim(k_all, kp, i, 0)
-        v_all = jax.lax.dynamic_update_index_in_dim(v_all, vp, i, 0)
+        k_all = tree_update_layer(k_all, kp, i)
+        v_all = tree_update_layer(v_all, vp, i)
         return (x, k_all, v_all), None
 
     (x, k, v), _ = jax.lax.scan(
@@ -304,8 +308,8 @@ def decode_step_paged(params, cfg: ModelConfig, token, cache, block_tables,
         x, k_all, v_all = carry
         lp, i = xs
         x = constrain_activation(x)
-        kp = jax.lax.dynamic_index_in_dim(k_all, i, 0, keepdims=False)
-        vp = jax.lax.dynamic_index_in_dim(v_all, i, 0, keepdims=False)
+        kp = tree_index_layer(k_all, i)
+        vp = tree_index_layer(v_all, i)
         xn = layers.apply_norm(lp["ln1"], cfg, x[:, None])[:, 0]
         h, kp, vp = layers.attention_decode_paged(
             lp["attn"], cfg, xn, kp, vp, block_tables, lens, live,
@@ -313,8 +317,8 @@ def decode_step_paged(params, cfg: ModelConfig, token, cache, block_tables,
         x = x + h
         xn = layers.apply_norm(lp["ln2"], cfg, x[:, None])[:, 0]
         x = x + layers.mlp(lp["mlp"], cfg, xn)
-        k_all = jax.lax.dynamic_update_index_in_dim(k_all, kp, i, 0)
-        v_all = jax.lax.dynamic_update_index_in_dim(v_all, vp, i, 0)
+        k_all = tree_update_layer(k_all, kp, i)
+        v_all = tree_update_layer(v_all, vp, i)
         return (x, k_all, v_all), None
 
     (x, k, v), _ = jax.lax.scan(

@@ -14,6 +14,7 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.quant import tree_index_layer, tree_update_layer
 from . import layers, transformer
 from .config import ModelConfig
 from .sharding import constrain_activation
@@ -141,8 +142,8 @@ def prefill_chunk_paged(params, cfg: ModelConfig, batch, cache,
         x, k_all, v_all = carry
         lp, i = xs
         x = constrain_activation(x)
-        kp = jax.lax.dynamic_index_in_dim(k_all, i, 0, keepdims=False)
-        vp = jax.lax.dynamic_index_in_dim(v_all, i, 0, keepdims=False)
+        kp = tree_index_layer(k_all, i)
+        vp = tree_index_layer(v_all, i)
         xn = layers.apply_norm(lp["ln1"], cfg, x)
         a, kp, vp = layers.attention_chunk_paged(
             lp["attn"], cfg, xn, kp, vp, block_tables, start, eff_chunk,
@@ -151,8 +152,8 @@ def prefill_chunk_paged(params, cfg: ModelConfig, batch, cache,
         x = x + a
         x = x + layers.mlp(lp["mlp"], cfg,
                            layers.apply_norm(lp["ln2"], cfg, x))
-        k_all = jax.lax.dynamic_update_index_in_dim(k_all, kp, i, 0)
-        v_all = jax.lax.dynamic_update_index_in_dim(v_all, vp, i, 0)
+        k_all = tree_update_layer(k_all, kp, i)
+        v_all = tree_update_layer(v_all, vp, i)
         return (x, k_all, v_all), None
 
     (h, k, v), _ = jax.lax.scan(

@@ -49,9 +49,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.quant import QuantPages, dequantize, quantize
+
 Cache = Any  # pytree of arrays
 
 _LEN, _PAGED, _STATE = "len", "paged", "state"
+
+VALID_KV_DTYPES = ("bf16", "int8")
+
+
+def _is_quant(pool) -> bool:
+    return isinstance(pool, QuantPages)
 
 
 def _is_len_leaf(shape: Tuple[int, ...], dtype) -> bool:
@@ -70,9 +78,20 @@ class KVArena:
 
     def __init__(self, cfg, init_cache: Callable, *, capacity: int,
                  max_seq_len: int, block_size: int = 32,
-                 pool_blocks: Optional[int] = None, dtype=None):
+                 pool_blocks: Optional[int] = None, dtype=None,
+                 kv_dtype: str = "bf16"):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
+        if kv_dtype not in VALID_KV_DTYPES:
+            raise ValueError(f"kv_dtype must be one of {VALID_KV_DTYPES}, "
+                             f"got {kv_dtype!r}")
+        # "bf16" = keep the family's native KV dtype (the model config's
+        # compute dtype — f32 in the toy configs); "int8" = quantized block
+        # format: floating paged leaves become QuantPages pools (int8
+        # values + per-token-per-head f32 scales travelling with the
+        # blocks).  Fixed per-slot STATE leaves (SSM conv/SSD state,
+        # encoder cross-KV, saturated ring windows) are never quantized.
+        self.kv_dtype = kv_dtype
         self.cfg = cfg
         self.capacity = int(capacity)
         self.block_size = int(block_size)
@@ -123,13 +142,24 @@ class KVArena:
 
         # -- device state --------------------------------------------------
         P1 = self.pool_blocks + 1                 # +1 trash block
-        self.pages: List[jnp.ndarray] = []
+        self.pages: List[Any] = []
+        self._quantized: List[bool] = []          # per paged leaf
         self.state: List[jnp.ndarray] = []
         for i, tag in enumerate(self._tags):
             if tag == _PAGED:
                 A0, _, _, *rest = lo_leaves[i].shape
-                self.pages.append(jnp.zeros(
-                    (A0, P1, self.block_size, *rest), self._dtypes[i]))
+                quant = (self.kv_dtype == "int8" and len(rest) >= 1
+                         and jnp.issubdtype(self._dtypes[i], jnp.floating))
+                self._quantized.append(quant)
+                if quant:
+                    self.pages.append(QuantPages(
+                        jnp.zeros((A0, P1, self.block_size, *rest),
+                                  jnp.int8),
+                        jnp.zeros((A0, P1, self.block_size, *rest[:-1]),
+                                  jnp.float32)))
+                else:
+                    self.pages.append(jnp.zeros(
+                        (A0, P1, self.block_size, *rest), self._dtypes[i]))
             elif tag == _STATE:
                 A0, _, *rest = lo_leaves[i].shape
                 self.state.append(jnp.zeros((A0, self.capacity, *rest),
@@ -169,12 +199,20 @@ class KVArena:
         self._cow_many_fns: Dict[int, Callable] = {}
 
         # bytes one cache token occupies across all paged leaves, and the
-        # fixed per-slot state footprint (allocator-style accounting)
-        self.token_bytes = sum(
-            int(np.prod([s[0], *s[3:]])) * np.dtype(d).itemsize
-            for s, d in zip(self._paged_shapes,
-                            (self._dtypes[i] for i, t in
-                             enumerate(self._tags) if t == _PAGED)))
+        # fixed per-slot state footprint (allocator-style accounting).  A
+        # quantized leaf counts 1 byte per value plus its f32 per-row scale
+        self.token_bytes = 0
+        paged_dtypes = [self._dtypes[i] for i, t in enumerate(self._tags)
+                        if t == _PAGED]
+        self._paged_dtypes = paged_dtypes
+        for s, d, q in zip(self._paged_shapes, paged_dtypes,
+                           self._quantized):
+            if q:
+                self.token_bytes += int(np.prod([s[0], *s[3:]]))      # int8
+                self.token_bytes += int(np.prod([s[0], *s[3:-1]])) * 4
+            else:
+                self.token_bytes += (int(np.prod([s[0], *s[3:]]))
+                                     * np.dtype(d).itemsize)
         self.state_slot_bytes = sum(
             int(np.prod([s[0], *s[2:]])) * np.dtype(d).itemsize
             for s, d in zip(self._state_shapes,
@@ -409,7 +447,11 @@ class KVArena:
         fn = self._cow_many_fns.get(n)
         if fn is None:
             def _copy(pages, src, dst):
-                return [p.at[:, dst].set(p[:, src]) for p in pages]
+                # tree-mapped so a QuantPages pool copies its scale blocks
+                # together with the int8 value blocks (scales share the
+                # pools' leading (layers, blocks) layout)
+                return jax.tree.map(lambda p: p.at[:, dst].set(p[:, src]),
+                                    pages)
             fn = jax.jit(_copy, donate_argnums=self._donate_argnums((0,)))
             self._cow_many_fns[n] = fn
         self.pages = fn(self.pages, jnp.asarray(src), jnp.asarray(dst))
@@ -522,8 +564,14 @@ class KVArena:
                 A0, _, S, *rest = leaf.shape
                 blocks = leaf[:, 0, :n_blocks * self.block_size].reshape(
                     A0, n_blocks, self.block_size, *rest)
-                new_pages[pi] = pages[pi].at[:, bt_row].set(
-                    blocks.astype(pages[pi].dtype))
+                if _is_quant(pages[pi]):
+                    qv, qs = quantize(blocks)
+                    new_pages[pi] = QuantPages(
+                        pages[pi].values.at[:, bt_row].set(qv),
+                        pages[pi].scales.at[:, bt_row].set(qs))
+                else:
+                    new_pages[pi] = pages[pi].at[:, bt_row].set(
+                        blocks.astype(pages[pi].dtype))
                 pi += 1
             elif tag == _STATE:
                 new_state[si] = state[si].at[:, slot].set(
@@ -546,12 +594,19 @@ class KVArena:
         survives only as (a) the fallback for families/configs without a
         paged-native step (pure-SSM state caches, ring sliding-window
         layouts) and (b) the test/benchmark oracle the zero-gather path is
-        verified bit-identical against."""
+        verified bit-identical against.  A QuantPages pool gathers values
+        and scales through the same table and dequantizes to the leaf's
+        original dtype — the fallback sees exactly the float view the
+        quantized kernels compute in-register."""
         B = block_tables.shape[0]
         out = []
-        for p in pages:
+        for p, dt in zip(pages, self._paged_dtypes):
             A0, _, bs, *rest = p.shape
-            g = p[:, block_tables]        # (A0, B, nblk, bs, *rest)
+            if _is_quant(p):
+                g = dequantize(p.values[:, block_tables],
+                               p.scales[:, block_tables], dt)
+            else:
+                g = p[:, block_tables]    # (A0, B, nblk, bs, *rest)
             out.append(g.reshape(A0, B, self.slot_tokens, *rest))
         return out
 
@@ -571,8 +626,13 @@ class KVArena:
 
     def disassemble(self, cache: Cache) -> Tuple[List[jnp.ndarray],
                                                  List[jnp.ndarray]]:
+        # QuantPages pools ride the paged-native steps as single cache
+        # leaves, so flatten with them intact (a bare jax.tree.leaves would
+        # split them into values + scales and misalign the tag zip)
+        leaves = jax.tree.flatten(
+            cache, is_leaf=lambda x: isinstance(x, QuantPages))[0]
         dense, state = [], []
-        for leaf, tag in zip(jax.tree.leaves(cache), self._tags):
+        for leaf, tag in zip(leaves, self._tags):
             if tag == _PAGED:
                 dense.append(leaf)
             elif tag == _STATE:
@@ -614,6 +674,20 @@ class KVArena:
             A0, P1, _, *rest = p.shape
             idx = pos.reshape(1, cap, n_tokens, *([1] * len(rest)))
             row = jnp.take_along_axis(d, idx, axis=2)     # (A0, cap, T, ...)
+            if _is_quant(p):
+                # fused scale update: the fresh float rows quantize on
+                # insert; int8 rows and their scales land through the same
+                # flat scatter, so the pool only ever holds quantized blocks
+                qv, qs = quantize(row)
+                pfv = p.values.reshape(A0, P1 * bs, *rest)
+                pfv = pfv.at[:, flat].set(
+                    qv.reshape(A0, cap * n_tokens, *rest))
+                pfs = p.scales.reshape(A0, P1 * bs, *rest[:-1])
+                pfs = pfs.at[:, flat].set(
+                    qs.reshape(A0, cap * n_tokens, *rest[:-1]))
+                out.append(QuantPages(pfv.reshape(p.values.shape),
+                                      pfs.reshape(p.scales.shape)))
+                continue
             pf = p.reshape(A0, P1 * bs, *rest)
             pf = pf.at[:, flat].set(
                 row.reshape(A0, cap * n_tokens, *rest).astype(p.dtype))

@@ -263,6 +263,18 @@ class ServiceRuntime:
         if kvcache_impl not in ("paged", "dense"):
             raise ValueError(
                 f"kvcache_impl must be paged|dense, got {kvcache_impl!r}")
+        # paged-KV precision: the arena quantizes page pools to int8 when
+        # the plan says so (explicitly or via its task category).  Dense
+        # caches are never quantized — an EXPLICIT int8 ask on a dense
+        # engine is a config error; the category-derived default silently
+        # keeps native precision (there are no page pools to quantize).
+        if getattr(plan, "kv_dtype", -1) == "int8" and kvcache_impl != "paged":
+            raise ValueError(
+                "kv_dtype='int8' requires kvcache_impl='paged' (only page "
+                "pools are block-quantized); dense caches keep the model's "
+                "native dtype")
+        self.kv_dtype = (plan.resolved_kv_dtype()
+                         if kvcache_impl == "paged" else "bf16")
         self.cfg = cfg
         self.params = params
         self.plan = plan
@@ -611,7 +623,7 @@ class ServiceRuntime:
                 self.cfg, self.api.init_cache,
                 capacity=self.plan.max_in_flight,
                 max_seq_len=self.max_seq_len, block_size=self.block_size,
-                pool_blocks=self.pool_blocks)
+                pool_blocks=self.pool_blocks, kv_dtype=self.kv_dtype)
             if self.prefix_cache_enabled:
                 state.prefix = RadixPrefixCache(
                     state.arena,

@@ -74,6 +74,11 @@ class SimConfig:
     # quality.  ``SimResult.cached_prefill_s`` reports the total prefill
     # seconds the cache removed.
     prefix_hit_rate: float = 0.0
+    # per-service hit rates derived from the workload's actual template-
+    # repeat structure (``workload.derive_prefix_hit_rates``); a service
+    # present here overrides the scalar ``prefix_hit_rate``, absent
+    # services fall back to it.  None = scalar-only (legacy configs).
+    prefix_hit_rates: Optional[Mapping[str, float]] = None
 
 
 @dataclasses.dataclass
@@ -128,6 +133,11 @@ class Simulation:
             raise ValueError(
                 f"prefix_hit_rate must be in [0, 1), got "
                 f"{cfg.prefix_hit_rate!r}")
+        for name, r in (cfg.prefix_hit_rates or {}).items():
+            if not 0.0 <= r < 1.0:
+                raise ValueError(
+                    f"prefix_hit_rates[{name!r}] must be in [0, 1), got "
+                    f"{r!r}")
         self.meter = GoodputMeter()
         self.server_ids = [s.sid for s in self.servers]
         self.state: Dict[int, _ServerState] = {
@@ -331,7 +341,11 @@ class Simulation:
             # + chunked prefill + token-pure family + plan knob on —
             # configurations where the real engine cannot reuse must not
             # be priced as if they could
-            if (self.cfg.prefix_hit_rate > 0 and prefill_s > 0
+            hit_rate = self.cfg.prefix_hit_rate
+            if self.cfg.prefix_hit_rates is not None:
+                hit_rate = self.cfg.prefix_hit_rates.get(req.service,
+                                                         hit_rate)
+            if (hit_rate > 0 and prefill_s > 0
                     and self.cfg.serving_mode == "paged"
                     and self.cfg.prefill_chunk_tokens > 0
                     and svc.prefix_cacheable
@@ -339,7 +353,7 @@ class Simulation:
                 # hit-rate-aware prefill: cached prefix tokens skip
                 # compute, so the shared queue (and with it goodput /
                 # placement quality) sees the post-reuse cost
-                saved = prefill_s * self.cfg.prefix_hit_rate
+                saved = prefill_s * hit_rate
                 prefill_s -= saved
                 self._cached_prefill_s += saved
             stall = prefill_s

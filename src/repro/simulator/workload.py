@@ -89,6 +89,16 @@ class WorkloadConfig:
     stream_duration_s: float = 8.0  # frequency stream length
     freq_share: float = 0.5        # fraction of load that is streams
     seed: int = 0
+    # prompt / shared-prefix structure of latency requests (templated
+    # system prompts, like the Azure LLM traces): each arrival either
+    # reuses one of ``prompt_templates`` per-service templates (sharing
+    # the first ``template_tokens`` of its prompt with every other user
+    # of that template) or carries a one-off prompt.  0 prompt tokens
+    # disables prompt modeling entirely (legacy configs unchanged).
+    prompt_tokens: int = 0         # total prompt length per latency request
+    template_tokens: int = 0       # shared prefix length of a template
+    prompt_templates: int = 4      # per-service template pool size
+    template_repeat_p: float = 0.6  # P(arrival reuses a pool template)
 
 
 def generate_requests(services: Dict[str, ServiceSpec],
@@ -135,13 +145,52 @@ def generate_requests(services: Dict[str, ServiceSpec],
                     t += rng.gamma(shape, scale)
                     if t >= cfg.horizon_s:
                         break
+                    template = 0
+                    if (cfg.prompt_tokens > 0 and cfg.prompt_templates > 0
+                            and cfg.template_tokens > 0
+                            and rng.random() < cfg.template_repeat_p):
+                        template = 1 + int(rng.integers(cfg.prompt_templates))
                     req = Request(rid=rid, service=name, arrival_s=t,
                                   frames=1,
+                                  prompt_tokens=cfg.prompt_tokens,
+                                  template=template,
                                   deadline_s=t + svc.slo_latency_s)
                     events.append((t, sid, req))
                     rid += 1
     events.sort(key=lambda e: e[0])
     return events
+
+
+def derive_prefix_hit_rates(events: Sequence[Tuple[float, int, Request]],
+                            services: Dict[str, ServiceSpec],
+                            cfg: WorkloadConfig) -> Dict[str, float]:
+    """Expected per-service prefix-cache hit rate implied by the generated
+    workload's ACTUAL template-repeat structure (not a hand-tuned scalar):
+    walking arrivals in time order, the first use of a template on a
+    server misses (the cache indexes it on eviction), every later reuse
+    hits the template's shared ``template_tokens`` prefix.  The returned
+    fraction is cached prompt tokens / total prompt tokens per service —
+    exactly what the simulator's hit-rate discount prices, so placement
+    sees the post-reuse prefill cost the live radix cache would deliver
+    on this trace.  Services with no prompt structure map to 0.0."""
+    hit: Dict[str, float] = {}
+    total: Dict[str, float] = {}
+    seen = set()                      # (service, server, template) indexed
+    for _, sid, req in sorted(events, key=lambda e: e[0]):
+        svc = services[req.service]
+        if svc.is_frequency or req.prompt_tokens <= 0:
+            continue
+        total[req.service] = total.get(req.service, 0.0) + req.prompt_tokens
+        if req.template:
+            key = (req.service, sid, req.template)
+            if key in seen:
+                hit[req.service] = (hit.get(req.service, 0.0)
+                                    + min(cfg.template_tokens,
+                                          req.prompt_tokens))
+            else:
+                seen.add(key)
+    return {name: (hit.get(name, 0.0) / tot if tot else 0.0)
+            for name, tot in total.items()}
 
 
 def demand_matrix(events: Sequence[Tuple[float, int, Request]],

@@ -529,3 +529,79 @@ def test_simulator_prefix_hit_rate_prices_reuse():
     with pytest.raises(ValueError, match="prefix_hit_rate"):
         run_comparison(servers, services, events, ["EPARA"],
                        dc.replace(base, prefix_hit_rate=1.5))
+
+
+def test_derived_prefix_hit_rates_follow_template_structure():
+    """The simulator's hit-rate input comes from the generated trace's
+    ACTUAL template-repeat structure, not a hand-tuned constant: first
+    use of a (service, server, template) misses, repeats hit the shared
+    prefix; no templates -> zero everywhere; frequency services (no
+    prompt modeling) never appear."""
+    import dataclasses as dc
+
+    from repro.simulator.workload import (WorkloadConfig,
+                                          derive_prefix_hit_rates,
+                                          generate_requests,
+                                          table1_services)
+
+    services = table1_services(include_heavy=False)
+    cfg = WorkloadConfig(horizon_s=30.0, load_scale=10.0, seed=3,
+                         prompt_tokens=400, template_tokens=300,
+                         template_repeat_p=0.8)
+    events = generate_requests(services, 2, cfg)
+    rates = derive_prefix_hit_rates(events, services, cfg)
+    lat = {n for n, s in services.items() if not s.is_frequency}
+    assert rates and set(rates) <= lat
+    assert all(0.0 <= r < 1.0 for r in rates.values())
+    assert max(rates.values()) > 0.0                 # repeats observed
+    # rates are bounded by the template share of the prompt x repeat mass
+    assert all(r <= cfg.template_tokens / cfg.prompt_tokens
+               for r in rates.values())
+    # one-off prompts only -> derived reuse is zero for every service
+    cold = dc.replace(cfg, template_repeat_p=0.0)
+    rates0 = derive_prefix_hit_rates(
+        generate_requests(services, 2, cold), services, cold)
+    assert rates0 and all(r == 0.0 for r in rates0.values())
+    # heavier repeat probability -> no service's derived rate decreases
+    # in aggregate (same arrival process, more template mass)
+    hot = dc.replace(cfg, template_repeat_p=1.0)
+    rates1 = derive_prefix_hit_rates(
+        generate_requests(services, 2, hot), services, hot)
+    assert sum(rates1.values()) >= sum(rates.values())
+
+
+def test_simulator_per_service_hit_rates_override_scalar():
+    """``SimConfig.prefix_hit_rates`` prices reuse per service: a mapped
+    service takes its derived rate, an absent one falls back to the
+    scalar; out-of-range per-service rates are rejected at
+    construction."""
+    import dataclasses as dc
+
+    from repro.core.categories import Request, ServerSpec, ServiceSpec
+    from repro.simulator.engine import SimConfig, run_comparison
+
+    servers = [ServerSpec(sid=0, num_gpus=2)]
+    services = {"chat": ServiceSpec("chat", flops_per_request=5e9,
+                                    weights_bytes=1e8, vram_bytes=3e8,
+                                    slo_latency_s=0.4)}
+    rng = np.random.default_rng(0)
+    events, t = [], 0.0
+    for i in range(50):
+        t += float(rng.exponential(0.05))
+        events.append((t, 0, Request(rid=i, service="chat", arrival_s=t,
+                                     deadline_s=t + 0.4,
+                                     prompt_tokens=400)))
+    base = SimConfig(horizon_s=10.0, sync_interval_s=1.0,
+                     prefill_token_s=2e-4, prefill_chunk_tokens=64)
+    mapped = run_comparison(
+        servers, services, events, ["EPARA"],
+        dc.replace(base, prefix_hit_rates={"chat": 0.75}))["EPARA"]
+    assert mapped.cached_prefill_s > 0.0
+    # absent from the map -> the scalar (here 0.0) applies
+    other = run_comparison(
+        servers, services, events, ["EPARA"],
+        dc.replace(base, prefix_hit_rates={"not-chat": 0.75}))["EPARA"]
+    assert other.cached_prefill_s == 0.0
+    with pytest.raises(ValueError, match="prefix_hit_rates"):
+        run_comparison(servers, services, events, ["EPARA"],
+                       dc.replace(base, prefix_hit_rates={"chat": 1.5}))
