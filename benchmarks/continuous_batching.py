@@ -458,6 +458,164 @@ def _decode_telemetry_rows() -> list:
     ]
 
 
+def _goodput_overload_rows() -> list:
+    """Goodput under bursty ~2x-capacity overload: strictest-deadline-
+    first admission with block-table-parking preemption (``admission=
+    "sdf"``) vs the FIFO baseline, on the live engine under a logical
+    clock (one tick per engine round, so results are machine-independent
+    and deterministic).
+
+    The trace fills both slots with deadline-less long decodes, then
+    streams urgent short requests whose deadlines are feasible only if
+    they are served promptly — FIFO serves them dead behind the stragglers,
+    SDF parks a straggler's blocks and serves them on time.
+
+    Acceptance (asserted):
+      * SDF goodput (on-time completions) >= 1.3x FIFO on the same trace;
+      * every request completed under BOTH policies has bit-identical
+        greedy tokens (parking/resume never corrupts a decode);
+      * exactly 1 decode compile per service under either policy;
+      * zero verdict-less drops: completed + rejected == submitted.
+
+    ``BENCH_goodput.json`` accumulates one dated entry per run, the same
+    trajectory pattern as ``BENCH_decode.json``.
+    """
+    import json
+    import time
+
+    import jax
+
+    from repro.core.allocator import ParallelPlan
+    from repro.core.categories import Sensitivity, TaskCategory
+    from repro.models import transformer as T
+    from repro.serving.engine import GenerationRequest, ServiceRuntime
+
+    cfg = _toy_cfg()
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    plan = ParallelPlan(service="toy",
+                        category=TaskCategory(Sensitivity.LATENCY, False),
+                        bs=2)
+    n_urgent = 4 if _smoke() else 8
+    long_new = 24 if _smoke() else 48
+    budget = 14.0                     # urgent deadline: submit + budget
+
+    def _trace(policy):
+        import dataclasses
+        rt = ServiceRuntime(cfg, params,
+                            dataclasses.replace(plan, admission=policy))
+        rng = np.random.default_rng(7)
+        results, rejects, t = [], [], 0.0
+        deadlines = {}                # rid -> deadline (0 = none)
+
+        def drain():
+            nonlocal t
+            while rt.pending() or rt.in_flight():
+                st = rt.step(now=t)
+                results.extend(st.results)
+                rejects.extend(st.rejected)
+                t += 1.0
+                assert t < 5000.0, "engine failed to drain"
+
+        # warmup: two deadline-less shorts teach the controller the
+        # caller's round/service clock (a cold controller is FIFO)
+        for i in range(2):
+            rt.submit(GenerationRequest(
+                rid=1000 + i,
+                tokens=rng.integers(1, cfg.vocab_size, 4).astype(np.int32),
+                max_new_tokens=4), now=t)
+        drain()
+        submitted = 2
+        # overload: two deadline-less stragglers take both slots...
+        for i in range(2):
+            rt.submit(GenerationRequest(
+                rid=i, tokens=rng.integers(1, cfg.vocab_size,
+                                           6).astype(np.int32),
+                max_new_tokens=long_new), now=t)
+            submitted += 1
+        for _ in range(2):
+            results.extend(rt.step(now=t).results)
+            t += 1.0
+        # ...then urgent shorts stream in at ~2x the slot turnover rate
+        for i in range(n_urgent):
+            deadlines[100 + i] = t + budget
+            rt.submit(GenerationRequest(
+                rid=100 + i,
+                tokens=rng.integers(1, cfg.vocab_size, 4).astype(np.int32),
+                max_new_tokens=4, deadline_s=t + budget), now=t)
+            submitted += 1
+            for _ in range(3):
+                st = rt.step(now=t)
+                results.extend(st.results)
+                rejects.extend(st.rejected)
+                t += 1.0
+        drain()
+        ontime = sum(1 for r in results
+                     if not deadlines.get(r.rid)
+                     or r.finished_s <= deadlines[r.rid])
+        return rt, results, rejects, ontime, submitted
+
+    def _measure(policy):
+        (rt, results, rejects, ontime, submitted), us = timed(_trace, policy)
+        # zero verdict-less drops: every request served or verdicted
+        assert len(results) + len(rejects) == submitted, policy
+        assert rt.decode_traces == 1, (policy, rt.decode_traces)
+        ctrl = rt.admission
+        return {
+            "goodput_ontime": ontime,
+            "completed": len(results),
+            "rejected": len(rejects),
+            "submitted": submitted,
+            "preemptions": ctrl.preemptions,
+            "resumes": ctrl.resumes,
+            "verdicts": dict(ctrl.verdicts),
+            "arena_parks": sum(g.arena.parks for g in rt.groups.values()
+                               if g.arena is not None),
+            "wall_us": us,
+        }, {r.rid: tuple(int(x) for x in r.tokens) for r in results}
+
+    fifo, toks_f = _measure("fifo")
+    sdf, toks_s = _measure("sdf")
+    # parked-then-resumed decodes stay bit-identical to never-parked ones
+    both = set(toks_f) & set(toks_s)
+    assert both and all(toks_f[r] == toks_s[r] for r in both), \
+        sorted(r for r in both if toks_f[r] != toks_s[r])
+    ratio = sdf["goodput_ontime"] / max(1, fifo["goodput_ontime"])
+    assert ratio >= 1.3, (sdf["goodput_ontime"], fifo["goodput_ontime"])
+    assert sdf["preemptions"] >= 1 and \
+        sdf["resumes"] == sdf["preemptions"] == sdf["arena_parks"]
+    entry = {
+        "date": time.strftime("%Y-%m-%d %H:%M:%S"),
+        "workload": {"slots": 2, "urgent": n_urgent, "long_new": long_new,
+                     "deadline_budget_ticks": budget, "smoke": _smoke()},
+        "policies": {"fifo": fifo, "sdf": sdf},
+        "goodput_ratio": ratio,
+        "bit_identical_rids": len(both),
+    }
+    history = {"entries": []}
+    try:
+        with open("BENCH_goodput.json") as f:
+            prev = json.load(f)
+        if isinstance(prev, dict) and isinstance(prev.get("entries"), list):
+            history = prev
+    except (FileNotFoundError, json.JSONDecodeError):
+        pass
+    history["entries"].append(entry)
+    with open("BENCH_goodput.json", "w") as f:
+        json.dump(history, f, indent=2)
+    return [
+        ("serve_goodput_fifo", fifo["wall_us"],
+         f"ontime={fifo['goodput_ontime']}/{fifo['submitted']};"
+         f"completed={fifo['completed']};rejected={fifo['rejected']}"),
+        ("serve_goodput_sdf", sdf["wall_us"],
+         f"ontime={sdf['goodput_ontime']}/{sdf['submitted']};"
+         f"preemptions={sdf['preemptions']};resumes={sdf['resumes']};"
+         f"verdicts={sdf['verdicts']}"),
+        ("serve_goodput_ratio", 0.0,
+         f"sdf_over_fifo={ratio:.2f}x;bit_identical_rids={len(both)};"
+         f"json=BENCH_goodput.json"),
+    ]
+
+
 def _simulator_rows() -> list:
     import dataclasses
 
@@ -490,11 +648,12 @@ def _simulator_rows() -> list:
 
 def run() -> list:
     """REPRO_BENCH_SECTION selects sections (comma list of
-    live|chunked|prefix|decode|sim); unset runs them all.  ``make
+    live|chunked|prefix|decode|goodput|sim); unset runs them all.  ``make
     bench-paged`` pins ``live,sim``, ``make bench-chunked`` pins
-    ``chunked``, ``make bench-prefix`` pins ``prefix`` and ``make
+    ``chunked``, ``make bench-prefix`` pins ``prefix``, ``make
     bench-decode`` pins ``decode`` (which also writes
-    ``BENCH_decode.json``) so the targets do not re-run each other's
+    ``BENCH_decode.json``) and ``make bench-goodput`` pins ``goodput``
+    (``BENCH_goodput.json``) so the targets do not re-run each other's
     workloads."""
     sections = [s for s in os.environ.get("REPRO_BENCH_SECTION",
                                           "").split(",") if s]
@@ -507,6 +666,8 @@ def run() -> list:
         rows.extend(_prefix_cache_rows())
     if not sections or "decode" in sections:
         rows.extend(_decode_telemetry_rows())
+    if not sections or "goodput" in sections:
+        rows.extend(_goodput_overload_rows())
     if not sections or "sim" in sections:
         rows.extend(_simulator_rows())
     return rows

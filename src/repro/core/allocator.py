@@ -57,6 +57,14 @@ class ParallelPlan:
     #                         category (frequency -> "int8", latency ->
     #                         "bf16"), or an explicit "bf16"/"int8" override
     #                         ("bf16" = keep the model's native KV dtype)
+    admission: str = "fifo"  # request-admission policy for the serving
+    #                          engine: "fifo" = legacy arrival order (never
+    #                          sheds; doomed requests rot in queue), "sdf"
+    #                          = StrictestDeadlineFirst — order pending
+    #                          admissions by deadline slack, shed with
+    #                          explicit verdicts (DEADLINE_MISSED /
+    #                          CONGESTION / OFFLOAD) and preempt live
+    #                          slots by block-table parking under pressure
 
     def __post_init__(self):
         for field in ("mp", "bs", "mt", "mf", "dp"):

@@ -23,6 +23,53 @@ class Sensitivity(str, enum.Enum):
     FREQUENCY = "frequency"
 
 
+class Outcome(str, enum.Enum):
+    """The system's ONE verdict vocabulary, shared by the distributed
+    handler (§3.2 routing decisions), the serving engine's admission
+    controller (``serving/admission.py``) and the simulator's counters —
+    so a request's fate is never stringly-typed and a doomed admission can
+    be routed by exactly the machinery that routes a fresh arrival.
+
+    Handler routing outcomes (Fig. 6):
+
+    * ``LOCAL`` / ``LOCAL_CROSS`` / ``LOCAL_DEVICE`` — solve here, by the
+      §3.2 priority ladder;
+    * ``OFFLOAD`` — forward to a peer (also the admission controller's
+      "still feasible elsewhere" verdict: positive slack, but the local
+      queue would burn it);
+    * ``TIMEOUT`` — the SLO already expired before any work started;
+    * ``OFFLOAD_EXCEEDED`` / ``INSUFFICIENT`` — bounded hop count / no
+      feasible server at all.
+
+    Admission-control verdicts (Icarus-style explicit admission results):
+
+    * ``ADMIT`` — claimed a decode slot;
+    * ``DEADLINE_MISSED`` — the slack estimate says the request cannot
+      finish ANYWHERE in time (deadline passed or service time alone
+      exceeds the remaining budget) — shed it instead of serving dead
+      work;
+    * ``CONGESTION`` — hard local backpressure (queue beyond the
+      congestion bound); the request itself may still be feasible on an
+      idle peer, so the handler treats this like a saturated-local signal.
+    """
+    LOCAL = "local"                       # solve on this server's GPUs
+    LOCAL_CROSS = "local_cross_server"    # cross-server-parallel group
+    LOCAL_DEVICE = "local_edge_device"    # registered edge device
+    OFFLOAD = "offload"
+    TIMEOUT = "timeout"
+    OFFLOAD_EXCEEDED = "offload_exceeded"
+    INSUFFICIENT = "resource_insufficiency"
+    ADMIT = "admit"
+    DEADLINE_MISSED = "deadline_missed"
+    CONGESTION = "congestion"
+
+
+# Admission verdicts a rejected request can carry (every non-admitted
+# request MUST carry exactly one of these — no verdict-less drops).
+REJECT_VERDICTS = (Outcome.DEADLINE_MISSED, Outcome.CONGESTION,
+                   Outcome.OFFLOAD)
+
+
 class Operator(str, enum.Enum):
     BS = "batching"          # service-level: same-service batch
     MT = "multi_task"        # service-level: co-locate services on one GPU

@@ -22,6 +22,15 @@ def latency_satisfied(finish_s: float, deadline_s: float) -> bool:
     return finish_s <= deadline_s
 
 
+def deadline_expired(deadline_s: float, now: float) -> bool:
+    """Shared expiry predicate: True when a request carrying a deadline
+    can no longer be satisfied (``deadline_s == 0`` means "no deadline").
+    The single home for the ``deadline and now > deadline`` check that
+    the handler, every baseline scheduler, the simulator and the
+    admission controller all apply before spending any work."""
+    return bool(deadline_s) and not latency_satisfied(now, deadline_s)
+
+
 def frequency_credit(frames: int, achieved_fps: float,
                      slo_fps: float) -> float:
     """F * min(f, f*) / f*  (Eq. 2's y accounting for frequency tasks)."""

@@ -19,21 +19,14 @@ Key paper semantics implemented here:
 from __future__ import annotations
 
 import dataclasses
-import enum
 import random
 from typing import Dict, Iterable, Mapping, Optional, Tuple
 
-from .categories import Request, ServiceSpec
-
-
-class Outcome(str, enum.Enum):
-    LOCAL = "local"                       # solve on this server's GPUs
-    LOCAL_CROSS = "local_cross_server"    # cross-server-parallel group
-    LOCAL_DEVICE = "local_edge_device"    # registered edge device
-    OFFLOAD = "offload"
-    TIMEOUT = "timeout"
-    OFFLOAD_EXCEEDED = "offload_exceeded"
-    INSUFFICIENT = "resource_insufficiency"
+# The verdict vocabulary lives in categories (one enum for handler
+# decisions, engine admission verdicts and simulator counters);
+# ``Outcome`` stays importable from here for the existing call sites.
+from .categories import Outcome, Request, ServiceSpec
+from .goodput import deadline_expired
 
 
 @dataclasses.dataclass
@@ -84,7 +77,7 @@ class RequestHandler:
                local: ServerView,
                peers: Mapping[int, ServerView]) -> Decision:
         # 1) timeout
-        if req.deadline_s and now > req.deadline_s:
+        if deadline_expired(req.deadline_s, now):
             return Decision(Outcome.TIMEOUT, reason="SLO expired")
 
         # 2) local first, by the §3.2 priority ladder

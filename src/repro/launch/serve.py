@@ -83,6 +83,20 @@ def main(argv=None) -> int:
                          "latency services keep the model dtype), or an "
                          "explicit 'bf16'/'int8' override for every "
                          "service")
+    ap.add_argument("--admission-policy", choices=("fifo", "sdf"),
+                    default="fifo",
+                    help="admission control: arrival-order fifo (default) "
+                         "or strictest-deadline-first — slack-ordered "
+                         "queues, explicit reject verdicts, and preemption "
+                         "of lazy decodes by block-table parking")
+    ap.add_argument("--no-preempt", action="store_true",
+                    help="with --admission-policy=sdf, disable block-table "
+                         "parking (shed-only admission control)")
+    ap.add_argument("--deadline-s", type=float, default=0.0,
+                    help="per-request completion deadline in seconds from "
+                         "submission (0 = none); with sdf admission, "
+                         "requests that cannot make it are rejected with "
+                         "a verdict instead of served dead")
     ap.add_argument("--pjit-decode", action="store_true",
                     help="build each service's fused paged decode step "
                          "under pjit on a (1, device_count) service mesh "
@@ -110,6 +124,11 @@ def main(argv=None) -> int:
     if args.kv_dtype == "int8" and args.kvcache_impl != "paged":
         ap.error("--kv-dtype=int8 requires --kvcache-impl=paged (only "
                  "page pools are block-quantized)")
+    if args.admission_policy != "fifo" and args.mode != "continuous":
+        ap.error("--admission-policy=sdf requires --mode=continuous (the "
+                 "controller acts between composer and slot engine)")
+    if args.deadline_s < 0:
+        ap.error(f"--deadline-s must be >= 0, got {args.deadline_s}")
     kv_dtype = -1 if args.kv_dtype == "auto" else args.kv_dtype
 
     arch_ids = [a.strip() for a in args.archs.split(",")]
@@ -155,14 +174,16 @@ def main(argv=None) -> int:
                                      cfg)
         chunked = (None if not args.no_chunked_prefill else False)
         plan = _dc.replace(cp.plans[svc], prefix_cache=args.prefix_cache,
-                           kv_dtype=kv_dtype)
+                           kv_dtype=kv_dtype,
+                           admission=args.admission_policy)
         rt = ServiceRuntime(cfg, params, plan, mode=args.mode,
                             kvcache_impl=args.kvcache_impl,
                             max_seq_len=args.max_seq_len,
                             block_size=args.block_size,
                             chunked_prefill=chunked,
                             prefill_chunk=(args.prefill_chunk or None),
-                            paged_step_builder=step_builder)
+                            paged_step_builder=step_builder,
+                            preempt=not args.no_preempt)
         engines[sid].deploy(svc, rt)
 
     # drive requests through handler -> engine
@@ -172,10 +193,14 @@ def main(argv=None) -> int:
     outcomes = {}
     t0 = time.time()
     done = 0
+    # the data-plane clock: seconds since t0 — GenerationRequest deadlines
+    # and the admission controller's slack estimates live in this frame
+    deadline = args.deadline_s
     for i in range(args.requests):
         svc = arch_ids[i % len(arch_ids)]
         at = int(rng.integers(0, len(servers)))
-        req = Request(rid=i, service=svc, arrival_s=0.0, deadline_s=1e9)
+        req = Request(rid=i, service=svc, arrival_s=0.0,
+                      deadline_s=deadline if deadline else 1e9)
         decision = cp.handle(req, now=0.0, at_server=at)
         outcomes[decision.outcome.value] = \
             outcomes.get(decision.outcome.value, 0) + 1
@@ -193,15 +218,49 @@ def main(argv=None) -> int:
             extras = {"embeddings": np.zeros((dim, cfg.d_model), np.float32)}
         engines[target].submit(svc, GenerationRequest(
             rid=i, tokens=prompt, max_new_tokens=args.max_new_tokens,
-            stream=i, extras=extras))
+            stream=i, extras=extras,
+            deadline_s=deadline if deadline else 0.0))
     # step every engine to completion, feeding each round's queue-time
     # estimate back into the control plane (StepStats -> handler state, so
-    # offload decisions see live data-plane backpressure)
+    # offload decisions see live data-plane backpressure) and collecting
+    # the admission controller's explicit reject verdicts
+    rejects = []                                 # (sid, svc, AdmissionReject)
     results = []
-    for sid, eng in engines.items():
-        results.extend(eng.serve_until_idle(
-            on_stats=lambda svc, st, sid=sid:
-                cp.set_queue_time(sid, svc, st.queue_time_s)))
+    clock = ((lambda: time.time() - t0)
+             if args.admission_policy == "sdf" else None)
+
+    def _drain():
+        for sid, eng in engines.items():
+            def hook(svc, st, sid=sid):
+                cp.set_queue_time(sid, svc, st.queue_time_s)
+                rejects.extend((sid, svc, r) for r in st.rejected)
+            results.extend(eng.serve_until_idle(on_stats=hook, clock=clock))
+
+    _drain()
+    # OFFLOAD verdicts are routable, not dead: ask the handler for a new
+    # destination at the verdict's timestamp and resubmit once — the
+    # explicit local-reject -> offload loop the control plane closes
+    final_rejects, resubmitted = [], 0
+    for sid, svc, rj in rejects:
+        expired = (rj.req.deadline_s and clock is not None
+                   and clock() > rj.req.deadline_s)
+        if rj.verdict is not Outcome.OFFLOAD or expired:
+            final_rejects.append((sid, svc, rj))
+            continue
+        decision = cp.handle(Request(rid=rj.req.rid, service=svc,
+                                     arrival_s=rj.now,
+                                     deadline_s=rj.req.deadline_s or 1e9),
+                             now=rj.now, at_server=sid)
+        dest = decision.destination \
+            if decision.outcome == Outcome.OFFLOAD else sid
+        if svc not in engines[dest].runtimes:
+            dest = next(s for s, e in engines.items() if svc in e.runtimes)
+        engines[dest].submit(svc, rj.req)
+        resubmitted += 1
+    if resubmitted:
+        rejects = []
+        _drain()
+        final_rejects.extend(rejects)    # second verdict is final
     dt = time.time() - t0
     toks = sum(len(r.tokens) for r in results)
     steps = sum(rt.decode_steps for eng in engines.values()
@@ -233,7 +292,17 @@ def main(argv=None) -> int:
           f"{sum(rt.prefix_cow_copies for rt in rts)} COW copies, "
           f"{sum(rt.prefix_evictions for rt in rts)} LRU evictions, "
           f"{sum(rt.oneshot_prefills for rt in rts)} one-shot prefills")
-    return 0 if len(results) == args.requests else 1
+    verdicts = {}
+    for rt in rts:
+        for v, n in rt.admission.verdicts.items():
+            verdicts[v] = verdicts.get(v, 0) + n
+    print(f"admission ({args.admission_policy}): {verdicts or 'no verdicts'}"
+          f", {sum(rt.admission.preemptions for rt in rts)} preemptions, "
+          f"{sum(rt.admission.resumes for rt in rts)} resumes, "
+          f"{resubmitted} offload-verdict resubmissions, "
+          f"{len(final_rejects)} final rejects")
+    # every request is accounted for: served, or rejected with a verdict
+    return 0 if len(results) + len(final_rejects) == args.requests else 1
 
 
 if __name__ == "__main__":

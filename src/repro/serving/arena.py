@@ -193,6 +193,10 @@ class KVArena:
         self.evict_hook: Optional[Callable[[int], None]] = None
         self.cache_retention: Optional[int] = None  # max idle cached blocks
         self.cached_evictions = 0     # idle cached blocks reclaimed
+        self.parks = 0                # preemption block-table parks
+        self.parked_blocks = 0        # blocks currently held by parked
+        #                               requests (admission headroom lost
+        #                               to frozen-but-resumable KV)
         self.cow_copies = 0           # copy-on-write block copies
         self.cow_calls = 0            # jitted COW dispatches (batching
         #                               coalesces a wave's copies into one)
@@ -358,6 +362,49 @@ class KVArena:
         self._occ[slot] = False
         self._free_slots.append(slot)
         self._tables_dev = self._occ_dev = None
+        self._enforce_retention()
+
+    # ------------------------------------------------------------------
+    # preemption surface: block-table parking
+    # ------------------------------------------------------------------
+    @property
+    def parkable(self) -> bool:
+        """Preemption by parking freezes only the slot's BLOCKS; per-slot
+        state leaves (SSM conv/recurrent state, ring windows) live in
+        slot-indexed buffers that the next tenant overwrites, so layouts
+        that carry any cannot park."""
+        return not self._state_shapes
+
+    def park(self, slot: int) -> List[int]:
+        """Freeze a live slot's blocks and free the SLOT without releasing
+        the blocks: the caller now owns one reference per block (exactly
+        the references the slot held) and the physical KV stays resident.
+        Resume hands them back through ``alloc(total, shared=blocks)``
+        (which re-increfs) followed by ``release_parked`` (dropping the
+        parked hold) — net refcounts unchanged, bit-identical content."""
+        if not self._occ[slot]:
+            raise ValueError(f"slot {slot} is not occupied")
+        if not self.parkable:
+            raise ValueError(
+                "arena carries per-slot state leaves; parking would "
+                "destroy them on slot reuse")
+        blocks = self._slot_blocks.pop(slot)
+        self._block_tables[slot] = self.trash_block
+        self._occ[slot] = False
+        self._free_slots.append(slot)
+        self._tables_dev = self._occ_dev = None
+        self.parks += 1
+        self.parked_blocks += len(blocks)
+        return blocks
+
+    def release_parked(self, blocks: Sequence[int]) -> None:
+        """Drop a parked hold — after a resume's ``alloc(shared=blocks)``
+        re-increfed them, or to abandon an expired parked request (then
+        cached blocks fall to the idle LRU, private ones to the free
+        list)."""
+        for b in blocks:
+            self._release_block(b)
+        self.parked_blocks -= len(blocks)
         self._enforce_retention()
 
     # ------------------------------------------------------------------

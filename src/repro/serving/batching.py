@@ -20,8 +20,8 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import (Any, Deque, Dict, List, Optional, Protocol, Tuple,
-                    runtime_checkable)
+from typing import (Any, Callable, Deque, Dict, List, Optional, Protocol,
+                    Tuple, runtime_checkable)
 
 from repro.core.allocator import ParallelPlan
 
@@ -72,6 +72,17 @@ class Composer(Protocol):
 
     def pending_prefill_tokens(self) -> int: ...
 
+    # admission-control surface (serving/admission.py): the controller
+    # reorders pending items by deadline slack, sheds the doomed ones with
+    # explicit verdicts, and peeks the most urgent head to decide whether
+    # preempting a live slot is worth it.
+    def peek(self) -> Optional[QueuedItem]: ...
+
+    def reorder(self, key: Callable[[QueuedItem], Any]) -> None: ...
+
+    def shed(self, pred: Callable[[QueuedItem], Optional[Any]]
+             ) -> List[Tuple[QueuedItem, Any]]: ...
+
 
 def _frame_counts(items: List[QueuedItem]) -> Dict[int, int]:
     counts: Dict[int, int] = {}
@@ -101,6 +112,29 @@ class BSComposer:
         folds into its queue-time estimate."""
         return sum(_prefill_cost(it) for it in self.queue)
 
+    def peek(self) -> Optional[QueuedItem]:
+        return self.queue[0] if self.queue else None
+
+    def reorder(self, key: Callable[[QueuedItem], Any]) -> None:
+        """Re-sort the whole queue (slack-ordered admission); compose then
+        pops in the new order."""
+        self.queue = collections.deque(sorted(self.queue, key=key))
+
+    def shed(self, pred: Callable[[QueuedItem], Optional[Any]]
+             ) -> List[Tuple[QueuedItem, Any]]:
+        """Drop every queued item for which ``pred`` returns a verdict
+        (non-None); returns the (item, verdict) pairs in queue order."""
+        kept: Deque[QueuedItem] = collections.deque()
+        dropped: List[Tuple[QueuedItem, Any]] = []
+        for it in self.queue:
+            v = pred(it)
+            if v is None:
+                kept.append(it)
+            else:
+                dropped.append((it, v))
+        self.queue = kept
+        return dropped
+
     def compose(self, *, limit: Optional[int] = None, now: float = 0.0,
                 max_wait_s: float = float("inf")
                 ) -> Optional[ComposedBatch]:
@@ -127,6 +161,7 @@ class MFComposer:
     def __init__(self, plan: ParallelPlan):
         self.plan = plan
         self.streams: Dict[int, Deque[QueuedItem]] = {}
+        self._key: Optional[Callable[[QueuedItem], Any]] = None
 
     def add(self, item: QueuedItem) -> None:
         self.streams.setdefault(item.stream, collections.deque()).append(item)
@@ -141,6 +176,37 @@ class MFComposer:
     def pending_prefill_tokens(self) -> int:
         return sum(_prefill_cost(it) for q in self.streams.values()
                    for it in q)
+
+    def peek(self) -> Optional[QueuedItem]:
+        heads = [q[0] for q in self.streams.values() if q]
+        if not heads:
+            return None
+        key = self._key or (lambda it: it.enqueued_s)
+        return min(heads, key=key)
+
+    def reorder(self, key: Callable[[QueuedItem], Any]) -> None:
+        """MF keeps frames in per-stream FIFO order (frames of one stream
+        are totally ordered); slack ordering applies ACROSS streams — the
+        stored key decides which streams a composed batch draws from
+        first."""
+        self._key = key
+
+    def shed(self, pred: Callable[[QueuedItem], Optional[Any]]
+             ) -> List[Tuple[QueuedItem, Any]]:
+        dropped: List[Tuple[QueuedItem, Any]] = []
+        for s in list(self.streams):
+            kept: Deque[QueuedItem] = collections.deque()
+            for it in self.streams[s]:
+                v = pred(it)
+                if v is None:
+                    kept.append(it)
+                else:
+                    dropped.append((it, v))
+            if kept:
+                self.streams[s] = kept
+            else:
+                del self.streams[s]
+        return dropped
 
     def compose(self, *, limit: Optional[int] = None, now: float = 0.0,
                 max_wait_s: float = float("inf")
@@ -162,6 +228,9 @@ class MFComposer:
             # partial-mf flush: take whatever the oldest streams have
             ready = sorted((s for s, q in self.streams.items() if q),
                            key=lambda s: self.streams[s][0].enqueued_s)
+        elif self._key is not None:
+            # slack-ordered admission: most urgent stream head first
+            ready.sort(key=lambda s: self._key(self.streams[s][0]))
         take_streams = ready[:irc]
         items: List[QueuedItem] = []
         budget = cap

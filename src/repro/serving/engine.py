@@ -75,10 +75,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.allocator import DPGroupRouter, ParallelPlan
+from repro.core.categories import Outcome
 from repro.models.config import ModelConfig
 from repro.models.registry import ModelApi, model_api
 
 from . import kvcache
+from .admission import AdmissionController, AdmissionReject, ParkedEntry
 from .arena import KVArena
 from .batching import ComposedBatch, QueuedItem, make_composer
 from .prefix_cache import PrefixHit, RadixPrefixCache
@@ -104,6 +106,9 @@ class GenerationRequest:
     extras: Optional[Dict[str, Any]] = None   # e.g. image/frame embeddings
     submitted_s: float = 0.0
     eos_token: Optional[int] = None  # evict the slot early on this token
+    deadline_s: float = 0.0          # absolute deadline in the caller's
+    #                                  clock (0 = none); the admission
+    #                                  controller's slack/verdict input
 
 
 @dataclasses.dataclass
@@ -159,6 +164,19 @@ class StepStats:
     #                                  (token-assignments past capacity;
     #                                  nonzero under binding capacity, where
     #                                  chunked prefill may diverge)
+    # -- admission-control telemetry (serving/admission.py) -------------
+    rejected: List[AdmissionReject] = dataclasses.field(
+        default_factory=list)        # requests shed this step, each with
+    #                                  an explicit verdict — the launcher
+    #                                  routes OFFLOAD verdicts through the
+    #                                  handler instead of dropping them
+    deadline_missed: int = 0         # DEADLINE_MISSED verdicts this step
+    congestion_rejects: int = 0      # CONGESTION verdicts this step
+    offload_verdicts: int = 0        # OFFLOAD verdicts this step
+    preempted: int = 0               # live slots parked this step
+    resumed: int = 0                 # parked requests re-admitted this step
+    parked: int = 0                  # parked requests outstanding after
+    #                                  the step (KV frozen in the arena)
 
 
 class _Slot:
@@ -257,7 +275,9 @@ class ServiceRuntime:
                  prefix_cache: Optional[Any] = None,
                  paged_native: Optional[bool] = None,
                  paged_step_builder: Optional[Callable] = None,
-                 on_evict: Optional[Callable] = None):
+                 on_evict: Optional[Callable] = None,
+                 admission_policy: Optional[str] = None,
+                 preempt: bool = True):
         if mode not in ("continuous", "sync"):
             raise ValueError(f"mode must be continuous|sync, got {mode!r}")
         if kvcache_impl not in ("paged", "dense"):
@@ -291,6 +311,15 @@ class ServiceRuntime:
         self._key = jax.random.PRNGKey(seed)
         self.groups: Dict[int, _GroupState] = {
             g: _GroupState() for g in range(max(1, plan.dp))}
+        # deadline-aware admission control: policy from the plan's knob
+        # unless overridden; "fifo" (the default) keeps the controller
+        # inert — identical legacy behavior, no shedding, no preemption
+        self.admission = AdmissionController(self, admission_policy,
+                                             preempt=preempt)
+        if self.admission.active and mode != "continuous":
+            raise ValueError(
+                "admission policy 'sdf' requires mode='continuous' (slack "
+                "ordering and preemption act on the slot loop)")
         self.decode_steps = 0        # fused decode invocations (all groups)
         self.decode_traces = 0       # XLA (re)compilations of the fused step
         self.prefill_traces = 0
@@ -597,6 +626,7 @@ class ServiceRuntime:
                 decode_steps=s.steps)
             results.append(res)
             self._note_service_time(res)
+            self.admission.observe(res)
             if state.arena is not None:
                 if state.prefix is not None and not s.prefilling:
                     # the slot will never write again: its partial tail
@@ -655,6 +685,10 @@ class ServiceRuntime:
                 raise ValueError(
                     f"request {req.rid} needs {total} tokens > per-slot "
                     f"budget {arena.slot_tokens}; raise max_seq_len")
+            entry = self.admission.parked.get(req.rid)
+            if entry is not None:
+                return self._resume_parked(req, state, entry, total,
+                                           pending_cows)
             if self.chunked_prefill:
                 # prefix-cache lookup: stitch the longest cached prefix
                 # into the new slot's block table; chunked prefill then
@@ -758,9 +792,118 @@ class ServiceRuntime:
                                  slot_id=slot_id, decode_start_wall=t1))
         return True
 
+    def _resume_parked(self, req: GenerationRequest, state: _GroupState,
+                       entry: ParkedEntry, total: int,
+                       pending_cows: Optional[List] = None) -> bool:
+        """Re-admit a preempted request onto its parked blocks: alloc with
+        ``shared=blocks`` re-increfs every block (a 100% prefix hit over
+        the WHOLE parked content, generated tokens included), then the
+        parked hold drops — net refcounts unchanged, zero prefill, zero
+        copies.  The slot resumes at the exact device length and emitted
+        tokens of park time, so greedy continuation is bit-identical."""
+        arena = state.arena
+        reserved = len(pending_cows) if pending_cows else 0
+        if not arena.can_alloc(total, shared=entry.blocks,
+                               reserve=reserved):
+            return False
+        slot_id = arena.alloc(total, shared=entry.blocks)
+        arena.release_parked(entry.blocks)
+        arena.set_len(slot_id, entry.cache_len)
+        slot = _Slot(req, None, prefill_s=entry.prefill_s,
+                     admit_wall=entry.admit_wall,
+                     admitted_s=entry.admitted_s, slot_id=slot_id)
+        slot.prefilling = False
+        slot.emitted = list(entry.emitted)
+        slot.decode_start_wall = entry.decode_start_wall
+        slot.steps = entry.steps
+        slot.consumed = entry.consumed
+        state.slots.append(slot)
+        self.admission.pop_parked(req.rid)
+        self.admission.note_resume()
+        if state.prefix is not None:
+            # a resume is the prefix cache's best case: the entire parked
+            # content (prompt AND generated KV) is served from resident
+            # blocks — count it so the hit telemetry reflects the reuse
+            state.prefix.note_resume(entry.cache_len)
+        return True
+
+    def _park_slot(self, group: int, state: _GroupState, s: _Slot,
+                   now: float) -> None:
+        """Preempt one live decode slot by block-table parking: freeze its
+        blocks in the arena (KV stays resident, references held by the
+        ``ParkedEntry``), free the slot, and re-queue the request — its
+        later compose resumes via ``_resume_parked``."""
+        arena = state.arena
+        entry = ParkedEntry(
+            req=s.req, group=group,
+            blocks=[], cache_len=int(arena.lens[s.slot_id]),
+            emitted=list(s.emitted), consumed=s.consumed, steps=s.steps,
+            prefill_s=s.prefill_s, admit_wall=s.admit_wall,
+            decode_start_wall=s.decode_start_wall,
+            admitted_s=s.admitted_s, parked_s=now)
+        entry.blocks = arena.park(s.slot_id)
+        state.slots.remove(s)
+        self.admission.note_park(entry)
+        self.composer.add(QueuedItem(payload=s.req, stream=s.req.stream,
+                                     enqueued_s=now, rid=s.req.rid))
+
+    def _maybe_preempt(self, now: float) -> None:
+        """Park the laziest live decode slot when the most urgent pending
+        request would otherwise miss its deadline waiting.  One victim per
+        step bounds churn; the controller's guard ensures the victim can
+        afford the round trip."""
+        ctrl = self.admission
+        if not (ctrl.active and ctrl.preempt
+                and self.kvcache_impl == "paged"):
+            return
+        if self._free_slots() > 0 or len(ctrl.parked) >= ctrl.max_parked:
+            return
+        head = self.composer.peek()
+        if head is None:
+            return
+        urgent_slack = ctrl.slack(head.payload, now)
+        if not 0.0 <= urgent_slack < float("inf"):
+            return                   # doomed (shed next round) or lax
+        if urgent_slack >= ctrl.wait_estimate(now):
+            return                   # it can afford to wait its turn
+        candidates = []
+        for g, state in self.groups.items():
+            arena = state.arena
+            if arena is None or not arena.parkable:
+                continue             # per-slot state can't survive parking
+            for s in state.slots:
+                if s.done or s.prefilling or s.req.rid == head.rid:
+                    continue
+                candidates.append((ctrl.slot_slack(s, now),
+                                   ctrl.remaining_estimate(s),
+                                   (g, state, s)))
+        victim = ctrl.pick_victim(urgent_slack, candidates)
+        if victim is not None:
+            self._park_slot(*victim, now)
+
+    def _shed_rejected(self, now: float) -> List[AdmissionReject]:
+        """Run the controller's shed pass and finalize each reject: parked
+        blocks are released back to the arena (cached ones fall to the
+        idle LRU), session pins drop, and the eviction hook fires — every
+        shed request leaves the data plane carrying its verdict."""
+        rejects: List[AdmissionReject] = []
+        for item, verdict in self.admission.shed(now):
+            req = item.payload
+            entry = self.admission.pop_parked(item.rid)
+            if entry is not None:
+                self.groups[entry.group].arena.release_parked(entry.blocks)
+            self._finish_request(req, -1)
+            rejects.append(AdmissionReject(req=req, verdict=verdict,
+                                           now=now))
+        return rejects
+
     def _route_admission(self, item: QueuedItem) -> Optional[int]:
         """Pick a DP group with a free slot; sticky sessions must land on
-        their pinned group or wait."""
+        their pinned group or wait.  A parked request is pinned harder
+        still: its frozen blocks are physical ids in ONE group's arena."""
+        pg = self.admission.parked_group(item.rid)
+        if pg is not None:
+            return pg if self.groups[pg].live < self.plan.bs else None
         g = self.router.route(session=item.stream)
         if self.groups[g].live < self.plan.bs:
             return g
@@ -802,6 +945,7 @@ class ServiceRuntime:
                                               * arena.token_bytes)
         for item in reversed(unplaced):   # push_front in reverse keeps FIFO
             self.composer.push_front(item)
+        self.admission.note_admit(admitted)
         return admitted
 
     # -- chunked piggybacked prefill (paged arena only) -----------------
@@ -1118,12 +1262,26 @@ class ServiceRuntime:
         results: List[GenerationResult] = []
         for group, state in self.groups.items():
             results.extend(self._evict(group, state, now))
+        # admission control (inert under the "fifo" policy): learn the
+        # caller's clock, shed with verdicts, order by slack, then park a
+        # victim if the urgent head can't wait — all BEFORE compose so
+        # the freed slot goes to the strictest deadline
+        ctrl = self.admission
+        rejected: List[AdmissionReject] = []
+        preempt0, resume0 = ctrl.preemptions, ctrl.resumes
+        if ctrl.active:
+            ctrl.note_step(now)
+            ctrl.order(now)          # slack order FIRST: shed walks it
+            rejected = self._shed_rejected(now)
+            self._maybe_preempt(now)
         admitted = self._admit(now, max_wait_s)
         chunk_tokens = 0
         for state in self.groups.values():
             chunk_tokens += self._prefill_chunks(state)
             self._decode_group(state)
         pfx1 = self._prefix_totals()
+        verdict_count = lambda v: sum(1 for r in rejected
+                                      if r.verdict is v)
         return StepStats(
             results=results, now=now, admitted=admitted,
             evicted=len(results), in_flight=self.in_flight(),
@@ -1141,7 +1299,14 @@ class ServiceRuntime:
             prefix_evicted_blocks=pfx1[3] - pfx0[3],
             prefix_cow_blocks=pfx1[4] - pfx0[4],
             moe_dropped_tokens=((self._moe_stats.dropped - moe0)
-                                if self._moe_stats else 0.0))
+                                if self._moe_stats else 0.0),
+            rejected=rejected,
+            deadline_missed=verdict_count(Outcome.DEADLINE_MISSED),
+            congestion_rejects=verdict_count(Outcome.CONGESTION),
+            offload_verdicts=verdict_count(Outcome.OFFLOAD),
+            preempted=ctrl.preemptions - preempt0,
+            resumed=ctrl.resumes - resume0,
+            parked=len(ctrl.parked))
 
     # ------------------------------------------------------------------
     # sync mode: run-to-completion batches (the pre-slot baseline)
@@ -1258,12 +1423,16 @@ class EparaServingEngine:
         return self.serve_until_idle(now=now)
 
     def serve_until_idle(self, now: float = 0.0, max_wait_s: float = 0.0,
-                         on_stats: Optional[Callable] = None
+                         on_stats: Optional[Callable] = None,
+                         clock: Optional[Callable[[], float]] = None
                          ) -> List[GenerationResult]:
         """Step every runtime round-robin until no runtime can make
         progress, invoking ``on_stats(service, stats)`` after each round —
         the hook the launchers use to feed ``StepStats.queue_time_s`` back
-        into the control plane's handler state."""
+        into the control plane's handler state.  ``clock`` (when given)
+        supplies each round's ``now`` — a live clock is what makes the
+        admission controller's deadlines bite (a frozen ``now`` never
+        expires anything)."""
         out: List[GenerationResult] = []
         progress = True
         while progress:
@@ -1271,13 +1440,14 @@ class EparaServingEngine:
             for name, rt in self.runtimes.items():
                 if not (rt.pending() or rt.in_flight()):
                     continue
-                stats = rt.step(now=now, max_wait_s=max_wait_s)
+                stats = rt.step(now=clock() if clock is not None else now,
+                                max_wait_s=max_wait_s)
                 self.last_stats[name] = stats
                 out.extend(stats.results)
                 if on_stats is not None:
                     on_stats(name, stats)
                 if (stats.results or stats.admitted or stats.decode_steps
-                        or stats.prefill_chunk_tokens):
+                        or stats.prefill_chunk_tokens or stats.rejected):
                     progress = True
         self._results.extend(out)
         return out

@@ -155,6 +155,16 @@ class RadixPrefixCache:
             self.hit_tokens += tokens
         self.miss_tokens += prompt_len - tokens
 
+    def note_resume(self, cache_tokens: int) -> None:
+        """Telemetry for a preempted request resuming onto its parked
+        blocks (serving/admission.py): the whole parked content — prompt
+        AND generated KV — is served from resident blocks, the cache's
+        best case.  Counted as a full hit so the reuse telemetry (and the
+        engine's hit-rate EWMA inputs) reflect what parking saved."""
+        self.lookups += 1
+        self.hits += 1
+        self.hit_tokens += cache_tokens
+
     # ------------------------------------------------------------------
     # insert
     # ------------------------------------------------------------------

@@ -27,6 +27,7 @@ from repro.core import costmodel as cm
 from repro.core.allocator import ParallelPlan, allocate, plan_goodput
 from repro.core.categories import (GPUSpec, Request, ServerSpec, ServiceSpec,
                                    TaskCategory)
+from repro.core.goodput import deadline_expired
 from repro.core.handler import Outcome
 from repro.core.placement import (EPSILON_SERVER, PlacementProblem, evaluate,
                                   sssp)
@@ -114,7 +115,7 @@ class InterEdgeScheduler(Scheduler):
         return theta
 
     def route(self, req, sid, now, ctx) -> Route:
-        if req.deadline_s and now > req.deadline_s:
+        if deadline_expired(req.deadline_s, now):
             return Route(Outcome.TIMEOUT)
         if ctx.has_capacity(sid, req.service, now):
             return Route(Outcome.LOCAL)
@@ -137,7 +138,7 @@ class AlpaServeScheduler(Scheduler):
     allows_offload = False
 
     def route(self, req, sid, now, ctx) -> Route:
-        if req.deadline_s and now > req.deadline_s:
+        if deadline_expired(req.deadline_s, now):
             return Route(Outcome.TIMEOUT)
         # centralized dispatch with PERFECT state: least-loaded host
         best, best_load = None, float("inf")
@@ -165,7 +166,7 @@ class GalaxyScheduler(Scheduler):
         return dataclasses.replace(plan, bs=1, mt=1, dp=1, mf=1)
 
     def route(self, req, sid, now, ctx) -> Route:
-        if req.deadline_s and now > req.deadline_s:
+        if deadline_expired(req.deadline_s, now):
             return Route(Outcome.TIMEOUT)
         for s in ctx.server_ids:
             if ctx.is_placed(s, req.service) and \
@@ -192,7 +193,7 @@ class ServPScheduler(Scheduler):
         return 1.0e-3 * n ** 2
 
     def route(self, req, sid, now, ctx) -> Route:
-        if req.deadline_s and now > req.deadline_s:
+        if deadline_expired(req.deadline_s, now):
             return Route(Outcome.TIMEOUT)
         group = [s for s in ctx.server_ids if s // 10 == sid // 10]
         best, best_load = None, float("inf")
@@ -213,7 +214,7 @@ class UsherScheduler(Scheduler):
     centralized = True
 
     def route(self, req, sid, now, ctx) -> Route:
-        if req.deadline_s and now > req.deadline_s:
+        if deadline_expired(req.deadline_s, now):
             return Route(Outcome.TIMEOUT)
         best, best_load = None, float("inf")
         for s in ctx.server_ids:

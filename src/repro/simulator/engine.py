@@ -23,10 +23,11 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 from repro.core import costmodel as cm
 from repro.core.allocator import plan_goodput
-from repro.core.categories import (GPUSpec, Request, ServerSpec, ServiceSpec)
+from repro.core.categories import (GPUSpec, Outcome, Request, ServerSpec,
+                                   ServiceSpec)
 from repro.core.cluster import EdgeCloudControlPlane
-from repro.core.goodput import GoodputMeter, frequency_credit
-from repro.core.handler import Outcome
+from repro.core.goodput import (GoodputMeter, deadline_expired,
+                                frequency_credit)
 from repro.core.placement import EPSILON_SERVER
 
 from .baselines import Route, Scheduler
@@ -79,6 +80,18 @@ class SimConfig:
     # present here overrides the scalar ``prefix_hit_rate``, absent
     # services fall back to it.  None = scalar-only (legacy configs).
     prefix_hit_rates: Optional[Mapping[str, float]] = None
+    # request-admission policy for latency tasks on the paged/continuous
+    # data plane, mirroring the live engine's ``ParallelPlan.admission``
+    # knob.  "fifo" (legacy): every arrival joins the fluid queue, doomed
+    # requests burn capacity and finish late.  "sdf" (Strictest-Deadline-
+    # First): arrivals whose own service time alone exceeds the remaining
+    # deadline budget are shed with a DEADLINE_MISSED verdict (no capacity
+    # spent), and arrivals that would miss only because of queue wait
+    # preempt — jump the virtual queue at ``preempt_overhead_s`` extra
+    # latency (the park/resume block-table cost) while the displaced work
+    # still occupies the server, so SSSP placement prices preemption.
+    admission_policy: str = "fifo"
+    preempt_overhead_s: float = 0.0005
 
 
 @dataclasses.dataclass
@@ -96,6 +109,11 @@ class SimResult:
     #                                    stall imposed on live requests
     cached_prefill_s: float = 0.0      # prefill seconds removed by the
     #                                    prefix cache (hit-rate model)
+    verdicts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    #                                  # admission-verdict counts (Outcome
+    #                                    values) under the "sdf" policy
+    preemptions: int = 0               # queue-jump admissions (modeled
+    #                                    block-table-parking preemptions)
 
     @property
     def mean_offloads(self) -> float:
@@ -138,6 +156,10 @@ class Simulation:
                 raise ValueError(
                     f"prefix_hit_rates[{name!r}] must be in [0, 1), got "
                     f"{r!r}")
+        if cfg.admission_policy not in ("fifo", "sdf"):
+            raise ValueError(
+                f"admission_policy must be fifo|sdf, got "
+                f"{cfg.admission_policy!r}")
         self.meter = GoodputMeter()
         self.server_ids = [s.sid for s in self.servers]
         self.state: Dict[int, _ServerState] = {
@@ -156,7 +178,13 @@ class Simulation:
         self._first_hops = 0
         self._max_prefill_stall = 0.0
         self._cached_prefill_s = 0.0
+        self._verdicts: Dict[str, int] = {}
+        self._preemptions = 0
         self.placements: List[Tuple[str, int]] = []
+
+    def _note_verdict(self, outcome: Outcome) -> None:
+        key = outcome.value
+        self._verdicts[key] = self._verdicts.get(key, 0) + 1
 
     # ------------------------------------------------------------------
     # context interface consumed by baseline schedulers
@@ -254,7 +282,9 @@ class Simulation:
             offload_counts=self._offload_counts,
             handled=self._handled, first_hops=max(1, self._first_hops),
             max_prefill_stall_s=self._max_prefill_stall,
-            cached_prefill_s=self._cached_prefill_s)
+            cached_prefill_s=self._cached_prefill_s,
+            verdicts=dict(self._verdicts),
+            preemptions=self._preemptions)
 
     # ------------------------------------------------------------------
     def _handle(self, req: Request, sid: int, now: float, push) -> None:
@@ -265,8 +295,9 @@ class Simulation:
         sched_lat = self.scheduler.scheduling_latency(len(self.servers))
         now = now + sched_lat
         route = self.scheduler.route(req, sid, now, self)
-        if route.outcome == Outcome.TIMEOUT or (
-                req.deadline_s and now > req.deadline_s):
+        if route.outcome == Outcome.TIMEOUT or deadline_expired(
+                req.deadline_s, now):
+            self._note_verdict(Outcome.TIMEOUT)
             self.meter.drop(req, now)
             return
         if route.outcome in (Outcome.OFFLOAD,):
@@ -326,10 +357,10 @@ class Simulation:
             # kvcache.merge copy and decode retrace the paged arena
             # eliminates (its admissions only scatter the new pages).
             eff_cap = max(1e-6, cap - st.stream_load.get(req.service, 0.0))
-            vf = max(now, st.vf.get(req.service, now))
-            vf += 1.0 / eff_cap
+            vf0 = max(now, st.vf.get(req.service, now))
+            own = 1.0 / eff_cap
             if self.cfg.serving_mode == "continuous":
-                vf += self.cfg.admission_copy_s
+                own += self.cfg.admission_copy_s
             # chunked-prefill model: the prompt's prefill is serial work.
             # Unchunked it lands on the SHARED virtual queue in one piece
             # (head-of-line blocking: every later finish waits); chunked,
@@ -362,14 +393,41 @@ class Simulation:
                 if chunk > 0:
                     stall = (min(req.prompt_tokens, chunk)
                              * self.cfg.prefill_token_s)
-                vf += stall
                 self._max_prefill_stall = max(self._max_prefill_stall,
                                               stall)
-            st.vf[req.service] = vf
+            own += stall
             base = cm.effective_latency(svc, self.servers[0].gpu,
                                         batch=plan.bs, mp=plan.mp,
                                         mt=plan.mt, mf=plan.mf) / plan.bs
-            finish = vf + base + (prefill_s - stall)
+            tail = prefill_s - stall   # non-stalling chunks: own cost only
+            if self.cfg.admission_policy == "sdf" and req.deadline_s:
+                # slack-ordered admission (live engine's AdmissionController
+                # mirrored in fluid-flow terms): slack = deadline budget
+                # minus this request's OWN unavoidable service time
+                slack = req.deadline_s - now - (own + base + tail)
+                if slack < 0:
+                    # cannot finish even served immediately — shed before
+                    # any capacity is spent (FIFO would serve it dead)
+                    self._note_verdict(Outcome.DEADLINE_MISSED)
+                    self.meter.drop(req, now)
+                    return
+                if vf0 - now > slack:
+                    # queue wait alone would burn the slack: preempt by
+                    # block-table parking — jump the virtual queue at the
+                    # park/resume overhead, while the displaced decode
+                    # work still occupies the server (vf advances by the
+                    # full own-service time, conserving capacity)
+                    self._preemptions += 1
+                    self._note_verdict(Outcome.ADMIT)
+                    st.vf[req.service] = vf0 + own
+                    finish = (now + own + base + tail
+                              + self.cfg.preempt_overhead_s)
+                    push(finish, "done", (req, finish))
+                    return
+                self._note_verdict(Outcome.ADMIT)
+            vf = vf0 + own
+            st.vf[req.service] = vf
+            finish = vf + base + tail
             push(finish, "done", (req, finish))
 
     def _dispatch_batch(self, sid: int, service: str, now: float,
