@@ -2,7 +2,7 @@ PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
 .PHONY: test smoke bench bench-paged bench-chunked bench-prefix \
-	bench-decode bench-goodput serve quickstart
+	bench-decode bench-spec bench-goodput serve quickstart
 
 test:                ## tier-1 suite
 	python -m pytest -x -q
@@ -28,6 +28,10 @@ bench-prefix:        ## radix prefix cache vs cold prefill (token reuse)
 bench-decode:        ## zero-gather paged decode vs dense-gather oracle
 	REPRO_BENCH_SMOKE=$${REPRO_BENCH_SMOKE:-0} PYTHONHASHSEED=0 \
 	REPRO_BENCH_SECTION=decode python -m benchmarks.continuous_batching
+
+bench-spec:          ## speculative decode vs oracle (accepted/launch gate)
+	REPRO_BENCH_SMOKE=$${REPRO_BENCH_SMOKE:-0} PYTHONHASHSEED=0 \
+	REPRO_BENCH_SECTION=spec python -m benchmarks.continuous_batching
 
 bench-goodput:       ## sdf admission + parking preemption vs fifo
 	REPRO_BENCH_SMOKE=$${REPRO_BENCH_SMOKE:-0} PYTHONHASHSEED=0 \

@@ -458,6 +458,107 @@ def _decode_telemetry_rows() -> list:
     ]
 
 
+def _speculative_rows() -> list:
+    """Speculative decoding with a self-draft (draft = target params, so
+    greedy agreement is 100%%): accepted tokens per fused verify launch
+    must reach ``k+1`` and the emitted tokens must be bit-identical to
+    the non-speculative oracle.
+
+    Acceptance (asserted):
+      * identical greedy tokens speculative vs plain paged-native;
+      * >= 1.5 accepted tokens per verify launch (the issue's floor;
+        a self-draft actually sustains ``k+1 = 4``);
+      * compile discipline: exactly 1 verify trace, <= 1 decode trace
+        and <= 1 draft decode trace per service.
+
+    Appends a dated ``speculative`` entry to ``BENCH_decode.json`` so the
+    acceptance-rate trajectory persists across PRs.
+    """
+    import json
+    import time
+
+    import jax
+
+    from repro.core.allocator import ParallelPlan
+    from repro.core.categories import Sensitivity, TaskCategory
+    from repro.models import transformer as T
+    from repro.serving.engine import GenerationRequest, ServiceRuntime
+
+    cfg = _toy_cfg()
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    plan = ParallelPlan(service="bench",
+                        category=TaskCategory(Sensitivity.LATENCY, False),
+                        bs=4)
+    n_new = 8 if _smoke() else 24
+    k = 3
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(1, cfg.vocab_size, 6 + 4 * i).astype(np.int32)
+               for i in range(4)]
+
+    def _run(speculate):
+        rt = ServiceRuntime(
+            cfg, params, plan, kvcache_impl="paged",
+            draft_params=params if speculate else None,
+            draft_cfg=cfg if speculate else None,
+            speculate=k if speculate else None)
+        for i, p in enumerate(prompts):
+            rt.submit(GenerationRequest(rid=i, tokens=p.copy(),
+                                        max_new_tokens=n_new))
+        t0 = time.perf_counter()
+        tokens = {r.rid: tuple(r.tokens) for r in rt.drain()}
+        return tokens, time.perf_counter() - t0, rt
+
+    toks_plain, s_plain, _ = _run(False)
+    toks_spec, s_spec, rt = _run(True)
+    # acceptance gates
+    assert toks_spec == toks_plain            # bit-identical to the oracle
+    assert rt.verify_launches > 0
+    per_launch = rt.accepted_tokens / rt.verify_launches
+    assert per_launch >= 1.5, (rt.accepted_tokens, rt.verify_launches)
+    assert rt.verify_traces == 1, rt.verify_traces
+    assert rt.decode_traces <= 1, rt.decode_traces
+    assert rt.draft_decode_traces <= 1, rt.draft_decode_traces
+    entry = {
+        "date": time.strftime("%Y-%m-%d %H:%M:%S"),
+        "section": "speculative",
+        "workload": {"family": cfg.family, "capacity": 4, "k": k,
+                     "max_new_tokens": n_new, "smoke": _smoke(),
+                     "draft": "self (100% greedy agreement)"},
+        "verify_launches": rt.verify_launches,
+        "accepted_tokens": rt.accepted_tokens,
+        "accepted_per_launch": per_launch,
+        "draft_steps": rt.draft_steps,
+        "spec_degraded": rt.spec_degraded,
+        "verify_compiles": rt.verify_traces,
+        "draft_decode_compiles": rt.draft_decode_traces,
+        "drain_s": {"plain": s_plain, "speculative": s_spec},
+    }
+    history = {"entries": []}
+    try:
+        with open("BENCH_decode.json") as f:
+            prev = json.load(f)
+        if isinstance(prev, dict) and isinstance(prev.get("entries"), list):
+            history = prev
+        elif isinstance(prev, dict) and prev:
+            history["entries"].append(prev)
+    except (FileNotFoundError, json.JSONDecodeError):
+        pass
+    history["entries"].append(entry)
+    with open("BENCH_decode.json", "w") as f:
+        json.dump(history, f, indent=2)
+    return [
+        ("serve_spec_decode", s_spec * 1e6,
+         f"accepted_per_launch={per_launch:.2f};"
+         f"verify_launches={rt.verify_launches};"
+         f"draft_steps={rt.draft_steps};"
+         f"verify_compiles={rt.verify_traces}"),
+        ("serve_spec_oracle", s_plain * 1e6,
+         "plain_paged_native_same_workload"),
+        ("serve_spec_tokens_identical", 0.0,
+         f"bit_identical_to_oracle;k={k};json=BENCH_decode.json"),
+    ]
+
+
 def _goodput_overload_rows() -> list:
     """Goodput under bursty ~2x-capacity overload: strictest-deadline-
     first admission with block-table-parking preemption (``admission=
@@ -648,13 +749,14 @@ def _simulator_rows() -> list:
 
 def run() -> list:
     """REPRO_BENCH_SECTION selects sections (comma list of
-    live|chunked|prefix|decode|goodput|sim); unset runs them all.  ``make
-    bench-paged`` pins ``live,sim``, ``make bench-chunked`` pins
+    live|chunked|prefix|decode|spec|goodput|sim); unset runs them all.
+    ``make bench-paged`` pins ``live,sim``, ``make bench-chunked`` pins
     ``chunked``, ``make bench-prefix`` pins ``prefix``, ``make
     bench-decode`` pins ``decode`` (which also writes
-    ``BENCH_decode.json``) and ``make bench-goodput`` pins ``goodput``
-    (``BENCH_goodput.json``) so the targets do not re-run each other's
-    workloads."""
+    ``BENCH_decode.json``), ``make bench-spec`` pins ``spec`` (appending
+    a speculative entry to the same json) and ``make bench-goodput`` pins
+    ``goodput`` (``BENCH_goodput.json``) so the targets do not re-run
+    each other's workloads."""
     sections = [s for s in os.environ.get("REPRO_BENCH_SECTION",
                                           "").split(",") if s]
     rows: list = []
@@ -666,6 +768,8 @@ def run() -> list:
         rows.extend(_prefix_cache_rows())
     if not sections or "decode" in sections:
         rows.extend(_decode_telemetry_rows())
+    if not sections or "spec" in sections:
+        rows.extend(_speculative_rows())
     if not sections or "goodput" in sections:
         rows.extend(_goodput_overload_rows())
     if not sections or "sim" in sections:

@@ -27,7 +27,9 @@ from typing import Optional
 from . import costmodel as cm
 from .categories import (CAT_FREQ_MULTI, CAT_FREQ_SINGLE, CAT_LAT_MULTI,
                          CAT_LAT_SINGLE, KV_DTYPE_BY_SENSITIVITY,
-                         PREFIX_RETENTION_FRACTION, GPUSpec, Operator,
+                         PARALLEL_SAMPLES_BY_SENSITIVITY,
+                         PREFIX_RETENTION_FRACTION,
+                         SPECULATE_BY_SENSITIVITY, GPUSpec, Operator,
                          Sensitivity, ServiceSpec, TaskCategory,
                          operators_for)
 
@@ -65,6 +67,16 @@ class ParallelPlan:
     #                          explicit verdicts (DEADLINE_MISSED /
     #                          CONGESTION / OFFLOAD) and preempt live
     #                          slots by block-table parking under pressure
+    speculate: int = -1     # speculative-decoding draft length k: -1 =
+    #                         derive from the task category (latency -> k=4
+    #                         when a draft model is configured, frequency
+    #                         -> 0), 0 = disabled, >0 = explicit k (the
+    #                         engine then REQUIRES a draft model)
+    n_samples: int = -1     # per-request parallel-sampling cap: -1 =
+    #                         derive from the task category (frequency ->
+    #                         uncapped up to bs, latency -> 1), 0 =
+    #                         uncapped (bs-bounded), >0 = explicit cap on
+    #                         a request's n_samples fan-out
 
     def __post_init__(self):
         for field in ("mp", "bs", "mt", "mf", "dp"):
@@ -92,6 +104,16 @@ class ParallelPlan:
             raise ValueError(
                 f"ParallelPlan.kv_dtype must be -1 (category default) or "
                 f"one of {valid}, got {kd!r}")
+        sp = self.speculate
+        if not isinstance(sp, int) or isinstance(sp, bool) or sp < -1:
+            raise ValueError(
+                f"ParallelPlan.speculate must be -1 (category default), 0 "
+                f"(disabled) or a positive draft length, got {sp!r}")
+        ns = self.n_samples
+        if not isinstance(ns, int) or isinstance(ns, bool) or ns < -1:
+            raise ValueError(
+                f"ParallelPlan.n_samples must be -1 (category default), 0 "
+                f"(uncapped) or a positive per-request cap, got {ns!r}")
 
     @property
     def gpus(self) -> int:
@@ -154,6 +176,28 @@ class ParallelPlan:
         if self.kv_dtype != -1:
             return self.kv_dtype
         return KV_DTYPE_BY_SENSITIVITY[self.category.sensitivity]
+
+    def resolved_speculate(self, have_draft: bool = True) -> int:
+        """Draft length k for speculative decoding.  An explicit
+        ``speculate`` wins (and the serving engine rejects k>0 without a
+        draft model); -1 derives from the task category — latency tasks
+        buy per-request speed (k=4 when a draft model is available),
+        frequency tasks buy batch and never speculate."""
+        if self.speculate != -1:
+            return self.speculate
+        if not have_draft:
+            return 0
+        return SPECULATE_BY_SENSITIVITY[self.category.sensitivity]
+
+    def resolved_n_samples(self) -> int:
+        """Per-request parallel-sampling cap.  An explicit ``n_samples``
+        wins; -1 derives from the task category — frequency tasks fork
+        freely (capped only by ``bs``), latency tasks take the single
+        fastest sample.  0 means uncapped (bs-bounded)."""
+        if self.n_samples != -1:
+            return self.n_samples
+        cap = PARALLEL_SAMPLES_BY_SENSITIVITY[self.category.sensitivity]
+        return cap if cap else self.bs
 
     def operators(self):
         ops = set()

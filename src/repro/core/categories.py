@@ -140,6 +140,31 @@ KV_DTYPE_BY_SENSITIVITY = {
 }
 
 
+# Speculative decoding by sensitivity (§3.1 applied to tokens/step):
+# latency tasks buy raw per-request speed — a small draft model proposes k
+# tokens per round and the fused paged step verifies them in ONE launch,
+# multiplying tokens per target launch by up to k+1.  Frequency tasks
+# already saturate the device with batch (BS is their operator); running a
+# draft model would steal exactly the capacity their frame-rate SLO is
+# spending, so they never speculate.
+SPECULATE_BY_SENSITIVITY = {
+    Sensitivity.LATENCY: 4,
+    Sensitivity.FREQUENCY: 0,
+}
+
+
+# Parallel sampling (n>1) by sensitivity: frequency tasks are throughput
+# buyers — n-way sampling rides as refcounted forks sharing the prompt's
+# paged blocks (COW on divergence), i.e. more tokens/step from machinery
+# the batch already paid for (0 = cap at the plan's batch size).  Latency
+# tasks want the single fastest answer; forks would only dilute their
+# slots.
+PARALLEL_SAMPLES_BY_SENSITIVITY = {
+    Sensitivity.FREQUENCY: 0,
+    Sensitivity.LATENCY: 1,
+}
+
+
 # ---------------------------------------------------------------------------
 # services & requests (shared by live engine + simulator)
 # ---------------------------------------------------------------------------

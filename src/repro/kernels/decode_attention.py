@@ -317,6 +317,16 @@ def paged_chunk_prefill_attention_pallas(q, k_pages, v_pages, block_tables,
     prefetch SMEM so the K/V BlockSpec index maps stream physical pages in
     logical order; ``ops.paged_chunk_attention`` provides the dense-gather
     CPU fallback.
+
+    This kernel is also the speculative-decoding VERIFY launch
+    (``ops.paged_verify_attention``): T = k+1 rows score
+    ``[last_emitted, d_1 .. d_k]`` in one call, with ``chunk_len`` a
+    per-slot vector that is 0 for non-speculating rows of the fixed-
+    capacity batch.  A zero-length row attends over an empty range — its
+    softmax normalizer is 0 and the output row is garbage/NaN by design;
+    the engine's verifier masks those rows and the row's K/V writes were
+    routed to the trash page upstream.  No verify-specific kernel exists
+    because the per-(B,) length plumbing below already expresses it.
     """
     B, T, Hq, D = q.shape
     P, k_block, Hkv, _ = k_pages.shape

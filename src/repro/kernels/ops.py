@@ -221,6 +221,45 @@ def paged_chunk_attention(q, k_pages, v_pages, block_tables, start,
         interpret=(impl == "pallas_interpret"))
 
 
+def paged_verify_attention(q, k_pages, v_pages, block_tables, start,
+                           chunk_len, *, prefix_len: int = 0,
+                           softmax_scale=None, impl: Optional[str] = None):
+    """Speculative-decoding k-token verify against the paged KV layout —
+    the SAME kernel path as ``paged_chunk_attention``, restated as the
+    verify contract so the engine's one-fused-launch scoring of k draft
+    tokens plus the bonus position is pinned down next to the kernels:
+
+    * ``q`` carries T = k+1 rows per slot, the fed tokens
+      ``[last_emitted, d_1 .. d_k]`` at absolute positions
+      ``start + i``;
+    * ``chunk_len`` MUST be a per-slot (B,) vector — T for slots
+      speculating this round, 0 for every other row of the fixed-capacity
+      batch.  Zero-length rows attend over nothing (their outputs are
+      garbage/NaN the verifier masks) and their K/V writes were already
+      routed to the trash block by ``paged_insert_rows``;
+    * causality inside the chunk is the standard chunk mask: row ``i``
+      sees cache positions ``< start + i + 1``, so each draft token is
+      scored against exactly the prefix it would have been decoded after
+      — which is what makes greedy verify bit-identical to the
+      non-speculative oracle, one token per launch.
+
+    No new kernel: verification IS chunked prefill with a per-slot length
+    vector (``chunk_prefill_attention_pallas`` /
+    ``paged_chunk_prefill_attention_pallas`` already take (B,) lengths
+    via scalar prefetch — see ``kernels/decode_attention.py``), so the
+    bf16/int8 dispatch and the trash-block masking are inherited
+    unchanged."""
+    chunk_len = jnp.asarray(chunk_len, jnp.int32)
+    if chunk_len.ndim != 1:
+        raise ValueError(
+            f"paged_verify_attention requires a per-slot (B,) chunk_len "
+            f"vector (0 = row not speculating), got shape "
+            f"{chunk_len.shape}")
+    return paged_chunk_attention(q, k_pages, v_pages, block_tables, start,
+                                 chunk_len, prefix_len=prefix_len,
+                                 softmax_scale=softmax_scale, impl=impl)
+
+
 def ssd_scan(x, dt, A, B, C, D=None, *, chunk: int = 128,
              initial_state=None, impl: Optional[str] = None):
     impl = impl or default_impl()

@@ -97,6 +97,24 @@ def main(argv=None) -> int:
                          "submission (0 = none); with sdf admission, "
                          "requests that cannot make it are rejected with "
                          "a verdict instead of served dead")
+    ap.add_argument("--speculate", type=int, default=-1,
+                    help="speculative decoding draft depth k: -1 = the "
+                         "plan's category-derived choice (latency "
+                         "services speculate when a draft is given, "
+                         "frequency services don't), 0 = disabled, >0 = "
+                         "propose k tokens per fused verify launch "
+                         "(requires --draft-arch)")
+    ap.add_argument("--draft-arch", default="",
+                    help="arch id of the small draft model that proposes "
+                         "tokens for speculative decoding; must share "
+                         "family and vocab with the target service "
+                         "(incompatible services deploy non-speculative)")
+    ap.add_argument("--n-samples", type=int, default=1,
+                    help="parallel samples per request: n-1 sibling slots "
+                         "fork off the prompt's blocks by refcount and "
+                         "diverge copy-on-write (capped by the plan's "
+                         "category-derived resolved_n_samples; >1 is "
+                         "only diverse with a stochastic sampler)")
     ap.add_argument("--pjit-decode", action="store_true",
                     help="build each service's fused paged decode step "
                          "under pjit on a (1, device_count) service mesh "
@@ -129,6 +147,23 @@ def main(argv=None) -> int:
                  "controller acts between composer and slot engine)")
     if args.deadline_s < 0:
         ap.error(f"--deadline-s must be >= 0, got {args.deadline_s}")
+    if args.speculate < -1:
+        ap.error(f"--speculate must be -1 (category default), 0 "
+                 f"(disabled) or a positive draft depth, got "
+                 f"{args.speculate}")
+    if args.speculate > 0 and not args.draft_arch:
+        ap.error("--speculate > 0 requires --draft-arch (the model that "
+                 "proposes the k tokens)")
+    if args.draft_arch and args.draft_arch not in ARCH_IDS:
+        ap.error(f"unknown --draft-arch {args.draft_arch!r}")
+    if args.draft_arch and (args.mode != "continuous"
+                            or args.kvcache_impl != "paged"
+                            or args.no_chunked_prefill):
+        ap.error("--draft-arch requires --mode=continuous, "
+                 "--kvcache-impl=paged and chunked prefill (the draft "
+                 "cache is chased through the paged chunk path)")
+    if args.n_samples < 1:
+        ap.error(f"--n-samples must be >= 1, got {args.n_samples}")
     kv_dtype = -1 if args.kv_dtype == "auto" else args.kv_dtype
 
     arch_ids = [a.strip() for a in args.archs.split(",")]
@@ -166,6 +201,11 @@ def main(argv=None) -> int:
         service_mesh = meshlib.make_mesh((1, jax.device_count()),
                                          ("data", "model"))
         step_builder = paged_decode_builder(service_mesh)
+    draft_cfg = draft_params = None
+    if args.draft_arch:
+        draft_cfg = reduced(get_config(args.draft_arch))
+        draft_params = model_api(draft_cfg).init(
+            jax.random.PRNGKey(hash(args.draft_arch) % 2**31), draft_cfg)
     for svc, sid in placements:
         if sid < 0:
             continue
@@ -173,9 +213,20 @@ def main(argv=None) -> int:
         params = model_api(cfg).init(jax.random.PRNGKey(hash(svc) % 2**31),
                                      cfg)
         chunked = (None if not args.no_chunked_prefill else False)
+        # the draft only pairs with same-family same-vocab attention
+        # services; the rest deploy non-speculative (an explicit
+        # --speculate > 0 still reaches the engine's loud gate)
+        compat = (draft_cfg is not None
+                  and cfg.family == draft_cfg.family
+                  and cfg.vocab_size == draft_cfg.vocab_size
+                  and cfg.family in PREFIX_CACHEABLE_FAMILIES)
+        if draft_cfg is not None and not compat and args.speculate <= 0:
+            print(f"  note: {svc} incompatible with draft "
+                  f"{args.draft_arch} (family/vocab) — non-speculative")
         plan = _dc.replace(cp.plans[svc], prefix_cache=args.prefix_cache,
                            kv_dtype=kv_dtype,
-                           admission=args.admission_policy)
+                           admission=args.admission_policy,
+                           speculate=args.speculate)
         rt = ServiceRuntime(cfg, params, plan, mode=args.mode,
                             kvcache_impl=args.kvcache_impl,
                             max_seq_len=args.max_seq_len,
@@ -183,7 +234,9 @@ def main(argv=None) -> int:
                             chunked_prefill=chunked,
                             prefill_chunk=(args.prefill_chunk or None),
                             paged_step_builder=step_builder,
-                            preempt=not args.no_preempt)
+                            preempt=not args.no_preempt,
+                            draft_params=draft_params if compat else None,
+                            draft_cfg=draft_cfg if compat else None)
         engines[sid].deploy(svc, rt)
 
     # drive requests through handler -> engine
@@ -191,7 +244,9 @@ def main(argv=None) -> int:
     for _ in range(len(servers)):
         cp.sync_step(0.0)
     outcomes = {}
-    t0 = time.time()
+    # monotonic, not wall-clock: deadlines and throughput math must not
+    # jump when NTP slews the system clock mid-run
+    t0 = time.monotonic()
     done = 0
     # the data-plane clock: seconds since t0 — GenerationRequest deadlines
     # and the admission controller's slack estimates live in this frame
@@ -218,7 +273,7 @@ def main(argv=None) -> int:
             extras = {"embeddings": np.zeros((dim, cfg.d_model), np.float32)}
         engines[target].submit(svc, GenerationRequest(
             rid=i, tokens=prompt, max_new_tokens=args.max_new_tokens,
-            stream=i, extras=extras,
+            stream=i, extras=extras, n_samples=args.n_samples,
             deadline_s=deadline if deadline else 0.0))
     # step every engine to completion, feeding each round's queue-time
     # estimate back into the control plane (StepStats -> handler state, so
@@ -226,7 +281,7 @@ def main(argv=None) -> int:
     # the admission controller's explicit reject verdicts
     rejects = []                                 # (sid, svc, AdmissionReject)
     results = []
-    clock = ((lambda: time.time() - t0)
+    clock = ((lambda: time.monotonic() - t0)
              if args.admission_policy == "sdf" else None)
 
     def _drain():
@@ -261,7 +316,7 @@ def main(argv=None) -> int:
         rejects = []
         _drain()
         final_rejects.extend(rejects)    # second verdict is final
-    dt = time.time() - t0
+    dt = time.monotonic() - t0
     toks = sum(len(r.tokens) for r in results)
     steps = sum(rt.decode_steps for eng in engines.values()
                 for rt in eng.runtimes.values())
@@ -292,6 +347,20 @@ def main(argv=None) -> int:
           f"{sum(rt.prefix_cow_copies for rt in rts)} COW copies, "
           f"{sum(rt.prefix_evictions for rt in rts)} LRU evictions, "
           f"{sum(rt.oneshot_prefills for rt in rts)} one-shot prefills")
+    ver = sum(rt.verify_launches for rt in rts)
+    acc = sum(rt.accepted_tokens for rt in rts)
+    if ver or args.draft_arch:
+        per = acc / ver if ver else 0.0
+        print(f"speculative (draft={args.draft_arch or 'none'}): {ver} "
+              f"verify launches, {acc} tokens accepted "
+              f"({per:.2f}/launch), "
+              f"{sum(rt.draft_steps for rt in rts)} draft steps, "
+              f"{sum(rt.spec_degraded for rt in rts)} degraded, "
+              f"{sum(rt.verify_traces for rt in rts)} verify compiles")
+    forks = sum(rt.forks_spawned for rt in rts)
+    if forks or args.n_samples > 1:
+        print(f"parallel sampling (n={args.n_samples}): {forks} forks "
+              f"spawned, {sum(rt.fork_shortfall for rt in rts)} shortfall")
     verdicts = {}
     for rt in rts:
         for v, n in rt.admission.verdicts.items():

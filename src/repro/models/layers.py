@@ -347,13 +347,20 @@ def attention_decode_paged(p, cfg: ModelConfig, x_t, k_pages, v_pages,
 def attention_chunk_paged(p, cfg: ModelConfig, x, k_pages, v_pages,
                           block_tables, cache_len, chunk_len, *,
                           block_size: int, window=None, prefix_len=0,
-                          use_rope=True, impl=None):
+                          use_rope=True, impl=None, verify=False):
     """Chunked-prefill attention against the paged KV layout: append a
     right-padded T-token chunk (only the first ``chunk_len`` rows real)
     at positions ``cache_len + i`` directly into the pages, then attend
     through the block table via ``ops.paged_chunk_attention``.  The
     multi-token sibling of ``attention_decode_paged`` (and the paged
-    mirror of ``attention_chunk``)."""
+    mirror of ``attention_chunk``).
+
+    ``verify=True`` is the speculative-decoding verify contract: the SAME
+    kernel path, but ``chunk_len`` is always a per-slot (B,) vector where
+    0 marks non-speculating rows (their K/V writes route to the trash
+    block and their attention rows are garbage the verifier masks) — it
+    routes through ``ops.paged_verify_attention`` so the contract is
+    asserted once, next to the kernels."""
     B, T, _ = x.shape
     _no_paged_ring(window, block_tables.shape[1] * block_size)
     q, k_t, v_t = _project_qkv(p, cfg, x)
@@ -372,9 +379,10 @@ def attention_chunk_paged(p, cfg: ModelConfig, x, k_pages, v_pages,
                                 valid, block_size=block_size)
     v_pages = paged_insert_rows(v_pages, v_t, block_tables, positions,
                                 valid, block_size=block_size)
-    out = ops.paged_chunk_attention(q, k_pages, v_pages, block_tables,
-                                    cache_len, chunk_len,
-                                    prefix_len=prefix_len, impl=impl)
+    attend = ops.paged_verify_attention if verify else \
+        ops.paged_chunk_attention
+    out = attend(q, k_pages, v_pages, block_tables, cache_len, chunk_len,
+                 prefix_len=prefix_len, impl=impl)
     out = out.reshape(B, T, cfg.num_heads * cfg.head_dim)
     return linear(out, p["wo"]), k_pages, v_pages
 

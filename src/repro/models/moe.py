@@ -331,6 +331,45 @@ def prefill_chunk_paged(params, cfg: ModelConfig, batch, cache,
     return logits, {"k": k, "v": v, "len": start + chunk_len}
 
 
+def verify_step_paged(params, cfg: ModelConfig, batch, cache, block_tables,
+                      *, chunk_len, block_size, impl=None):
+    """Speculative-decoding verify (see ``transformer.verify_step_paged``):
+    the ``prefill_chunk_paged`` body with the head over ALL T positions
+    instead of ``take_chunk_last`` — logits come back ``(B, T, V)`` and
+    ``cache['len']`` is returned unchanged (the engine commits lengths
+    after acceptance).  Expert routing stays per-chunk, matching the
+    chunked-prefill granularity the drafts were verified against."""
+    tokens = batch["tokens"]
+    window = cfg.sliding_window
+    x = layers.embed(params["embed"], cfg, tokens).astype(cfg.compute_dtype)
+    start = jnp.asarray(cache["len"], jnp.int32).reshape(-1)
+
+    def body(carry, xs):
+        x, k_all, v_all = carry
+        lp, i = xs
+        x = constrain_activation(x)
+        kp = tree_index_layer(k_all, i)
+        vp = tree_index_layer(v_all, i)
+        xn = layers.apply_norm(lp["ln1"], cfg, x)
+        a, kp, vp = layers.attention_chunk_paged(
+            lp["attn"], cfg, xn, kp, vp, block_tables, start, chunk_len,
+            block_size=block_size, window=window, impl=impl, verify=True)
+        x = x + a
+        m, _ = moe_mlp(lp["moe"], cfg,
+                       layers.apply_norm(lp["ln2"], cfg, x), impl=impl)
+        x = x + m
+        k_all = tree_update_layer(k_all, kp, i)
+        v_all = tree_update_layer(v_all, vp, i)
+        return (x, k_all, v_all), None
+
+    (x, k, v), _ = jax.lax.scan(
+        body, (x, cache["k"], cache["v"]),
+        (params["blocks"], jnp.arange(cfg.num_layers)))
+    h = layers.apply_norm(params["ln_f"], cfg, x)          # all T positions
+    logits = logits_fn(params, cfg, h)                     # (B, T, V)
+    return logits, {"k": k, "v": v, "len": start}
+
+
 def _moe_mlp_single(p, cfg: ModelConfig, x_t, *, impl=None):
     """Decode-time MoE for a (B, d) token batch.
 

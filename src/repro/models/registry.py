@@ -30,6 +30,12 @@ class ModelApi:
     # state side-channel path is already gather-free).
     decode_step_paged: Optional[Callable] = None
     prefill_chunk_paged: Optional[Callable] = None
+    # speculative-decoding verify: score T = k+1 fed tokens against the
+    # paged cache in one fused launch, returning logits for ALL T
+    # positions (B, T, V) with per-slot (B,) chunk lengths (0 = row not
+    # speculating).  ``None`` for families without a paged-native chunk
+    # body — the serving engine's speculation gate.
+    verify_step_paged: Optional[Callable] = None
 
 
 _FAMILIES: Dict[str, ModelApi] = {
@@ -38,11 +44,12 @@ _FAMILIES: Dict[str, ModelApi] = {
                       transformer.prefill, transformer.decode_step,
                       transformer.prefill_chunk,
                       transformer.decode_step_paged,
-                      transformer.prefill_chunk_paged),
+                      transformer.prefill_chunk_paged,
+                      transformer.verify_step_paged),
     "moe": ModelApi(moe.init, moe.forward_hidden, moe.logits_fn,
                     moe.init_cache, moe.prefill, moe.decode_step,
                     moe.prefill_chunk, moe.decode_step_paged,
-                    moe.prefill_chunk_paged),
+                    moe.prefill_chunk_paged, moe.verify_step_paged),
     "ssm": ModelApi(ssm.init, ssm.forward_hidden, ssm.logits_fn,
                     ssm.init_cache, ssm.prefill, ssm.decode_step,
                     ssm.prefill_chunk),

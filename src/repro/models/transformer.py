@@ -257,6 +257,48 @@ def prefill_chunk_paged(params, cfg: ModelConfig, batch, cache,
     return logits, {"k": k, "v": v, "len": start + chunk_len}
 
 
+def verify_step_paged(params, cfg: ModelConfig, batch, cache, block_tables,
+                      *, chunk_len, block_size, impl=None):
+    """Speculative-decoding verify: score T = k+1 fed tokens
+    ``[last_emitted, d_1 .. d_k]`` against the paged cache in ONE fused
+    launch and return logits for ALL T positions ``(B, T, V)`` — the same
+    chunk-attention body as ``prefill_chunk_paged`` (K/V rows scatter in
+    place through the block tables; ``chunk_len`` is a per-slot (B,)
+    vector, 0 for non-speculating rows whose writes route to the trash
+    block), but the head runs over the full chunk instead of
+    ``take_chunk_last``.  ``cache['len']`` is returned UNCHANGED: the
+    engine's verifier commits lengths only after acceptance, so rejected
+    draft rows are garbage past ``len`` that the next round overwrites."""
+    tokens = batch["tokens"]
+    window = _window(cfg)
+    x = layers.embed(params["embed"], cfg, tokens).astype(cfg.compute_dtype)
+    start = jnp.asarray(cache["len"], jnp.int32).reshape(-1)
+
+    def body(carry, xs):
+        x, k_all, v_all = carry
+        lp, i = xs
+        x = constrain_activation(x)
+        kp = tree_index_layer(k_all, i)
+        vp = tree_index_layer(v_all, i)
+        xn = layers.apply_norm(lp["ln1"], cfg, x)
+        h, kp, vp = layers.attention_chunk_paged(
+            lp["attn"], cfg, xn, kp, vp, block_tables, start, chunk_len,
+            block_size=block_size, window=window, impl=impl, verify=True)
+        x = x + h
+        x = x + layers.mlp(lp["mlp"], cfg,
+                           layers.apply_norm(lp["ln2"], cfg, x))
+        k_all = tree_update_layer(k_all, kp, i)
+        v_all = tree_update_layer(v_all, vp, i)
+        return (x, k_all, v_all), None
+
+    (x, k, v), _ = jax.lax.scan(
+        body, (x, cache["k"], cache["v"]),
+        (params["blocks"], jnp.arange(cfg.num_layers)))
+    h = layers.apply_norm(params["ln_f"], cfg, x)          # all T positions
+    logits = logits_fn(params, cfg, h)                     # (B, T, V)
+    return logits, {"k": k, "v": v, "len": start}
+
+
 def decode_step(params, cfg: ModelConfig, token, cache, impl=None):
     """token: (B,) int32.  One new token; cache['len'] counts tokens already
     in the cache (the new token is written at ring slot len % S).

@@ -53,6 +53,24 @@ Two cache data planes back the slot loop (``kvcache_impl``):
   retraces the decode step.  ``benchmarks/continuous_batching.py`` reports
   both implementations' retrace counts and admission-copy bytes.
 
+Two further **decoding modes** ride on the paged arena, gated by the
+plan's task category (``ParallelPlan.speculate`` / ``n_samples``):
+
+* **speculative** (latency services) — a small same-family draft model
+  shadows each slot in its own ``KVArena``; once the draft cache catches
+  up (chunked, off the decode path) each round runs k+1 fused draft
+  steps and ONE fused target verify launch (``api.verify_step_paged``
+  through the existing chunk-attention kernels), committing 1..k+1
+  tokens.  Greedy acceptance is bit-identical to plain decode.
+* **n>1 parallel sampling** (frequency services) — sibling slots fork
+  off a finished prefill sharing the prompt's blocks by refcount, pay
+  zero prefill compute, and diverge through copy-on-write.
+
+Both are built on per-slot COUNTER-BASED sampling streams
+(``serving/sampler.py``): each drawn token is a pure function of
+(request seed, sample index, stream, emitted offset) — never of batch
+composition, step count, or park/resume history.
+
 ``step()`` returns a ``StepStats`` telemetry record (results + queue-time
 estimate + copy/retrace counters); the launcher feeds
 ``StepStats.queue_time_s`` back into the control plane's handler state
@@ -84,7 +102,8 @@ from .admission import AdmissionController, AdmissionReject, ParkedEntry
 from .arena import KVArena
 from .batching import ComposedBatch, QueuedItem, make_composer
 from .prefix_cache import PrefixHit, RadixPrefixCache
-from .sampler import SamplerConfig, sample
+from .sampler import (STREAM_DECODE, STREAM_DRAFT, SamplerConfig,
+                      sample_per_slot, speculative_verify)
 
 DEFAULT_MAX_SEQ_LEN = 256
 DEFAULT_BLOCK_SIZE = 32
@@ -109,6 +128,14 @@ class GenerationRequest:
     deadline_s: float = 0.0          # absolute deadline in the caller's
     #                                  clock (0 = none); the admission
     #                                  controller's slack/verdict input
+    seed: Optional[int] = None       # sampling stream seed (None -> rid):
+    #                                  every token this request draws is a
+    #                                  pure function of (seed, sample_idx,
+    #                                  emitted offset), never of the batch
+    n_samples: int = 1               # n-way parallel sampling: n-1 forks
+    #                                  share the prompt's blocks and
+    #                                  diverge by copy-on-write (capped by
+    #                                  the plan's resolved_n_samples())
 
 
 @dataclasses.dataclass
@@ -121,6 +148,8 @@ class GenerationResult:
     admitted_s: float = 0.0          # logical clock at admission
     finished_s: float = 0.0          # logical clock at eviction
     decode_steps: int = 0            # fused steps this request took part in
+    sample: int = 0                  # which of the request's n parallel
+    #                                  samples this result is (0 = primary)
 
 
 @dataclasses.dataclass
@@ -177,6 +206,19 @@ class StepStats:
     resumed: int = 0                 # parked requests re-admitted this step
     parked: int = 0                  # parked requests outstanding after
     #                                  the step (KV frozen in the arena)
+    # -- speculative / parallel decoding telemetry ----------------------
+    draft_steps: int = 0             # fused DRAFT decode steps this step
+    verify_launches: int = 0         # fused verify launches this step
+    accepted_tokens: int = 0         # target tokens committed by verify
+    #                                  (acceptance rate = accepted_tokens
+    #                                  / verify_launches / (k+1))
+    spec_slots: int = 0              # live slots speculating after the step
+    forks_spawned: int = 0           # n>1 sibling slots forked this step
+    fork_shortfall: int = 0          # requested forks not spawned (slot or
+    #                                  block pressure; primary still runs)
+    spec_degraded: int = 0           # slots that fell back to plain decode
+    #                                  this step (draft alloc failure or
+    #                                  park/resume)
 
 
 class _Slot:
@@ -192,7 +234,8 @@ class _Slot:
     """
     __slots__ = ("req", "emitted", "done", "prefill_s", "admit_wall",
                  "decode_start_wall", "finish_wall", "admitted_s", "steps",
-                 "slot_id", "prefilling", "consumed")
+                 "slot_id", "prefilling", "consumed", "sample_idx", "spec",
+                 "draft_len")
 
     def __init__(self, req: GenerationRequest, first_token: Optional[int],
                  prefill_s: float, admit_wall: float, admitted_s: float,
@@ -207,6 +250,9 @@ class _Slot:
         self.slot_id = slot_id
         self.consumed = 0                   # prompt tokens prefilled so far
         #                                     (a prefix hit starts past 0)
+        self.sample_idx = 0                 # 0 = primary; >0 = n>1 fork
+        self.spec = False                   # draft slot allocated + chasing
+        self.draft_len = 0                  # draft-cache rows written so far
         if first_token is None:             # chunked prefill in progress
             self.prefilling = True
             self.emitted: List[int] = []
@@ -245,12 +291,13 @@ class _GroupState:
     """Persistent in-flight state of one DP replica group: the slot
     handles plus either a ``KVArena`` (paged) or a compacted cache pytree
     (dense)."""
-    __slots__ = ("cache", "slots", "arena", "prefix")
+    __slots__ = ("cache", "slots", "arena", "prefix", "draft")
 
     def __init__(self):
         self.cache = None            # dense impl only
         self.arena: Optional[KVArena] = None
         self.prefix: Optional[RadixPrefixCache] = None
+        self.draft: Optional[KVArena] = None   # draft model's shadow arena
         self.slots: List[_Slot] = []
 
     @property
@@ -277,7 +324,9 @@ class ServiceRuntime:
                  paged_step_builder: Optional[Callable] = None,
                  on_evict: Optional[Callable] = None,
                  admission_policy: Optional[str] = None,
-                 preempt: bool = True):
+                 preempt: bool = True,
+                 draft_params=None, draft_cfg: Optional[ModelConfig] = None,
+                 speculate: Optional[int] = None):
         if mode not in ("continuous", "sync"):
             raise ValueError(f"mode must be continuous|sync, got {mode!r}")
         if kvcache_impl not in ("paged", "dense"):
@@ -433,6 +482,74 @@ class ServiceRuntime:
                 f"chunked_prefill={self.chunked_prefill}")
         self._prefix_knob = knob
         self.prefix_cache_enabled = bool(cacheable and knob != 0)
+
+        # -- speculative decoding (draft/verify) --------------------------
+        # latency-category services trade draft FLOPs for fewer serial
+        # target launches: a small draft model proposes k tokens, the
+        # target scores all k+1 in ONE fused verify launch
+        # (api.verify_step_paged through the existing chunk-attention
+        # kernels).  Greedy acceptance keeps tokens bit-identical to the
+        # non-speculative engine; stochastic acceptance is exact
+        # leave-one-out rejection sampling (serving/sampler.py).
+        if (draft_params is None) != (draft_cfg is None):
+            raise ValueError("draft_params and draft_cfg come together")
+        have_draft = draft_params is not None
+        knob_k = (plan.resolved_speculate(have_draft) if speculate is None
+                  else int(speculate))
+        if knob_k > 0 and not have_draft:
+            raise ValueError(
+                f"speculate={knob_k} requires a draft model (draft_params "
+                "+ draft_cfg); the category default degrades to 0 without "
+                "one, an explicit ask does not")
+        if knob_k > 0:
+            draft_ring = (draft_cfg.sliding_window is not None
+                          and draft_cfg.sliding_window
+                          < self.slot_token_budget)
+            spec_ok = (mode == "continuous" and kvcache_impl == "paged"
+                       and self.paged_native and self.chunked_prefill
+                       and cfg.family in PREFIX_CACHEABLE_FAMILIES
+                       and draft_cfg.family == cfg.family
+                       and draft_cfg.vocab_size == cfg.vocab_size
+                       and self.api.verify_step_paged is not None
+                       and not draft_ring)
+            if not spec_ok:
+                raise ValueError(
+                    "speculative decoding requires mode='continuous', "
+                    "kvcache_impl='paged', paged_native, chunked_prefill, "
+                    f"a family in {PREFIX_CACHEABLE_FAMILIES} with a "
+                    "verify entry point, and a same-family same-vocab "
+                    "non-ring draft; got "
+                    f"family={cfg.family!r}/{draft_cfg.family!r}, "
+                    f"vocab={cfg.vocab_size}/{draft_cfg.vocab_size}, "
+                    f"mode={mode!r}, kvcache_impl={kvcache_impl!r}, "
+                    f"paged_native={self.paged_native}, "
+                    f"chunked_prefill={self.chunked_prefill}, "
+                    f"draft_ring={draft_ring}")
+        self.speculate_k = knob_k
+        self.draft_params = draft_params
+        self.draft_cfg = draft_cfg
+        self.draft_api: Optional[ModelApi] = (
+            model_api(draft_cfg) if have_draft else None)
+        self._draft_chunk_fns: Dict[Any, Callable] = {}
+        self._draft_decode_fn = None
+        self._verify_fn = None
+        self.draft_steps = 0         # fused draft decode invocations
+        self.verify_launches = 0     # fused verify invocations
+        self.accepted_tokens = 0     # target tokens committed by verify
+        self.spec_degraded = 0       # speculation fallbacks (alloc/park)
+        self.verify_traces = 0       # XLA (re)compilations of verify
+        self.draft_decode_traces = 0
+        self.draft_prefill_traces = 0
+        self.draft_prefill_tokens = 0
+
+        # -- n>1 parallel sampling (refcounted prompt-block forks) --------
+        self.forks_spawned = 0
+        self.fork_shortfall = 0
+        self._sibling_refs: Dict[int, int] = {}   # rid -> live siblings
+        self.n_samples_cap = (plan.resolved_n_samples()
+                              if (mode == "continuous"
+                                  and kvcache_impl == "paged"
+                                  and self.chunked_prefill) else 1)
         api = self.api
 
         if prefill_fn is None:
@@ -538,10 +655,32 @@ class ServiceRuntime:
         prefix itself)."""
         return self.cfg.prefix_len if self.cfg.family == "vlm" else 0
 
-    def _sample(self, logits, live=None, occupancy=None):
-        self._key, sub = jax.random.split(self._key)
-        return sample(logits, sub, self.sampler, live=live,
-                      occupancy=occupancy)
+    def _req_seed(self, req: GenerationRequest) -> int:
+        """The request's sampling-stream seed (``rid`` unless the caller
+        pinned one) — with the per-slot counter streams below, a request's
+        tokens are a pure function of this seed, never of which other
+        requests share its fused batch."""
+        return req.rid if req.seed is None else int(req.seed)
+
+    def _sample(self, logits, seeds, sample_ids, offsets,
+                live=None, occupancy=None, stream: int = STREAM_DECODE):
+        """Per-slot counter-based sampling (the batch-composition bugfix).
+
+        The old path split ``self._key`` once per fused step and drew the
+        whole batch from the split — so every request's tokens depended on
+        HOW MANY steps the engine had taken and WHICH slots were live:
+        admitting an unrelated request changed another request's output,
+        and park/resume shifted the stream.  Now each row's key is
+        ``fold_in(fold_in(fold_in(fold_in(base, seed), sample_idx),
+        stream), offset)`` — a pure function of the request's own
+        identity and its emitted length at the draw — so tokens are
+        bit-identical alone, in any batch mix, and across park/resume or
+        speculative on/off (greedy never touches a key at all)."""
+        return sample_per_slot(
+            logits, self._key, np.asarray(seeds, np.uint32),
+            np.asarray(sample_ids, np.uint32),
+            np.asarray(offsets, np.uint32), self.sampler, stream=stream,
+            live=live, occupancy=occupancy)
 
     def _finish_request(self, req: GenerationRequest, group: int) -> None:
         """Session-pin bookkeeping + user hook, fired whenever a request
@@ -555,6 +694,20 @@ class ServiceRuntime:
                 self._session_refs[req.stream] = left
         if self.on_evict is not None:
             self.on_evict(req, group)
+
+    def _finish_sibling(self, req: GenerationRequest, group: int) -> None:
+        """Eviction-side bookkeeping for n>1 sampling: a forked request's
+        session pins and eviction hook fire once — when its LAST sibling
+        slot leaves the data plane, not once per sample."""
+        refs = self._sibling_refs.get(req.rid)
+        if refs is None:
+            self._finish_request(req, group)
+            return
+        if refs <= 1:
+            self._sibling_refs.pop(req.rid, None)
+            self._finish_request(req, group)
+        else:
+            self._sibling_refs[req.rid] = refs - 1
 
     def _note_service_time(self, res: GenerationResult) -> None:
         t = max(1e-6, res.prefill_s + max(0.0, res.decode_s))
@@ -623,11 +776,14 @@ class ServiceRuntime:
                 prefill_s=s.prefill_s,
                 decode_s=max(0.0, s.finish_wall - s.decode_start_wall),
                 group=group, admitted_s=s.admitted_s, finished_s=now,
-                decode_steps=s.steps)
+                decode_steps=s.steps, sample=s.sample_idx)
             results.append(res)
             self._note_service_time(res)
             self.admission.observe(res)
             if state.arena is not None:
+                if s.spec and state.draft is not None:
+                    state.draft.free(s.slot_id)
+                    s.spec = False
                 if state.prefix is not None and not s.prefilling:
                     # the slot will never write again: its partial tail
                     # block's prompt content is final, so it can join the
@@ -637,7 +793,7 @@ class ServiceRuntime:
                         s.req.tokens,
                         state.arena._block_tables[s.slot_id])
                 state.arena.free(s.slot_id)
-            self._finish_request(s.req, group)
+            self._finish_sibling(s.req, group)
         state.slots = [state.slots[i] for i in keep]
         if state.arena is None:
             state.cache = (kvcache.select_slots(state.cache, keep)
@@ -766,7 +922,8 @@ class ServiceRuntime:
         toks, _ = self._pad_prompts([req])
         batch = self._build_batch([req], toks)
         logits, cache = self.prefill_fn(self.params, batch, cache_size)
-        first = int(np.asarray(self._sample(logits))[0])
+        first = int(np.asarray(self._sample(
+            logits, [self._req_seed(req)], [0], [0]))[0])
         jax.block_until_ready(logits)
         t1 = time.perf_counter()
         self.oneshot_prefills += 1
@@ -834,6 +991,16 @@ class ServiceRuntime:
         ``ParkedEntry``), free the slot, and re-queue the request — its
         later compose resumes via ``_resume_parked``."""
         arena = state.arena
+        if s.spec and state.draft is not None:
+            # the draft cache is disposable state (re-derivable from the
+            # tokens) but re-chasing it after resume isn't worth the
+            # chunks: a parked request resumes NON-speculative.  Greedy
+            # spec-on/spec-off is bit-identical, so the degradation is
+            # invisible in the tokens — only in the telemetry.
+            state.draft.free(s.slot_id)
+            s.spec = False
+            s.draft_len = 0
+            self.spec_degraded += 1
         entry = ParkedEntry(
             req=s.req, group=group,
             blocks=[], cache_len=int(arena.lens[s.slot_id]),
@@ -873,6 +1040,11 @@ class ServiceRuntime:
                 continue             # per-slot state can't survive parking
             for s in state.slots:
                 if s.done or s.prefilling or s.req.rid == head.rid:
+                    continue
+                if s.req.rid in self._sibling_refs:
+                    # n>1 siblings share one request identity: parking one
+                    # fork would re-queue the rid while other samples keep
+                    # decoding it — resume would then double-admit
                     continue
                 candidates.append((ctrl.slot_slack(s, now),
                                    ctrl.remaining_estimate(s),
@@ -949,7 +1121,11 @@ class ServiceRuntime:
         return admitted
 
     # -- chunked piggybacked prefill (paged arena only) -----------------
-    def _build_chunk_fn(self, arena: KVArena, T: int, with_emb: bool):
+    def _build_chunk_fn(self, arena: KVArena, T: int, with_emb: bool,
+                        api: Optional[ModelApi] = None,
+                        cfg: Optional[ModelConfig] = None,
+                        native: Optional[bool] = None,
+                        counter: str = "prefill_traces"):
         """One jitted chunk step per (bucket, first-chunk) shape.
 
         Paged-NATIVE (attention families): run ``prefill_chunk_paged``
@@ -958,18 +1134,28 @@ class ServiceRuntime:
         re-scattered.  Fallback (pure-SSM, ring layouts, or the forced
         oracle): gather the slot's dense view, run ``prefill_chunk``, and
         scatter the written rows back via the multi-token
-        ``append_rows``."""
-        api, cfg, impl = self.api, self.cfg, self._impl
+        ``append_rows``.
+
+        ``api``/``cfg``/``native``/``counter`` default to the TARGET
+        model; the speculative path passes the DRAFT model's to build its
+        catch-up chunk step over the draft arena (compiles counted under
+        ``draft_prefill_traces`` so the target's one-trace assertions stay
+        meaningful)."""
+        api = self.api if api is None else api
+        cfg = self.cfg if cfg is None else cfg
+        impl = self._impl
         # cache rows one call writes: the text bucket, plus the VLM image
         # prefix that rides along with the first chunk
         n_rows = T + (cfg.prefix_len
                       if with_emb and cfg.family == "vlm" else 0)
 
-        native = self.paged_native           # static: picked at trace time
+        if native is None:
+            native = self.paged_native       # static: picked at trace time
 
         def _chunk(params, tokens, emb, pages, state, lens, slot, bt_row,
                    n_valid):
-            self.prefill_traces += 1         # runs at trace time only
+            setattr(self, counter,           # runs at trace time only
+                    getattr(self, counter) + 1)
             start = lens[slot]
             # a FIRST chunk (start == 0, set by reset_len at admission)
             # must see freshly initialized per-slot state, not the slot's
@@ -1073,10 +1259,14 @@ class ServiceRuntime:
                 budget -= T
                 done_tokens += n_valid
                 if s.consumed >= len(s.req.tokens):
-                    first = int(np.asarray(self._sample(logits))[0])
+                    first = int(np.asarray(self._sample(
+                        logits, [self._req_seed(s.req)],
+                        [s.sample_idx], [0]))[0])
                     t1 = time.perf_counter()
                     s.prefill_s += t1 - t0
                     s.begin_decode(first, t1)
+                    self._enable_spec(state, s)
+                    self._spawn_forks(state, s, logits, t1)
                     if state.prefix is not None:
                         # every FULL prompt block is now written and
                         # frozen: index the chain (hits extend existing
@@ -1094,18 +1284,304 @@ class ServiceRuntime:
                     s.prefill_s += time.perf_counter() - t0
         return done_tokens
 
+    # -- speculative decoding: draft arena + fused verify ---------------
+    def _spec_goal(self, s: _Slot) -> int:
+        """Draft-cache rows a slot needs before it can run a spec round:
+        the draft always lags the known tokens by exactly TWO rows, so
+        every round's step 0 feeds ``known[-2]`` (catch-up, output
+        discarded) and step 1 feeds ``emitted[-1]`` to propose the first
+        draft — one uniform (k+1)-step round, no per-round shape
+        variation, one compile."""
+        return len(s.req.tokens) + len(s.emitted) - 2
+
+    def _ensure_draft(self, state: _GroupState) -> KVArena:
+        if state.draft is None:
+            state.draft = KVArena(
+                self.draft_cfg, self.draft_api.init_cache,
+                capacity=self.plan.max_in_flight,
+                max_seq_len=self.max_seq_len, block_size=self.block_size,
+                kv_dtype="bf16")   # draft KV stays native precision: its
+            #                        proposals are re-scored by the target
+            #                        anyway, but int8 would change WHICH
+            #                        tokens get proposed run-to-run
+        return state.draft
+
+    def _enable_spec(self, state: _GroupState, s: _Slot) -> None:
+        """Arm speculation for a slot that just finished prefill: claim
+        the MATCHING slot id in the group's draft arena (the two block
+        tables stay aligned) and start the draft's catch-up chase —
+        ``_draft_chunks`` prefill-chunks the known tokens into the draft
+        cache while the slot keeps decoding normally; rounds start once
+        the chase reaches the lag-1 goal.  Alloc failure degrades to
+        plain decode (counted, never fatal).  Forks never speculate —
+        their divergence is the point, and greedy drafts would collapse
+        them."""
+        if self.speculate_k <= 0 or s.sample_idx != 0 or s.done:
+            return
+        draft = self._ensure_draft(state)
+        # draft rows run k past the known tokens mid-round
+        total = min(len(s.req.tokens) + s.req.max_new_tokens
+                    + self.speculate_k, draft.slot_tokens)
+        if not draft.can_alloc(total):
+            self.spec_degraded += 1
+            return
+        draft.alloc(total, slot=s.slot_id)
+        draft.reset_len(s.slot_id)
+        s.spec = True
+        s.draft_len = 0
+
+    def _draft_chunks(self, state: _GroupState) -> int:
+        """Chase each speculating slot's draft cache toward its lag-1
+        goal, at most one chunk budget per group per step (the same
+        head-of-line bound as target prefill).  The goal moves +1 per
+        normal decode step while the chase runs; the smallest chunk
+        bucket is a whole block, so the chase always gains ground."""
+        if state.draft is None:
+            return 0
+        draft = state.draft
+        budget = self.prefill_chunk_tokens
+        done_tokens = 0
+        for s in state.slots:
+            if budget <= 0:
+                break
+            if not s.spec or s.prefilling or s.done:
+                continue
+            goal = self._spec_goal(s)
+            while s.draft_len < goal and budget > 0:
+                T = self._pick_bucket(goal - s.draft_len, budget)
+                if T is None:
+                    budget = 0
+                    break
+                n_valid = min(goal - s.draft_len, T)
+                known = np.concatenate(
+                    [np.asarray(s.req.tokens, np.int32),
+                     np.asarray(s.emitted, np.int32)])
+                toks = np.zeros((1, T), np.int32)
+                toks[0, :n_valid] = known[s.draft_len:s.draft_len + n_valid]
+                fn = self._draft_chunk_fns.get(T)
+                if fn is None:
+                    fn = self._build_chunk_fn(
+                        draft, T, False, api=self.draft_api,
+                        cfg=self.draft_cfg, native=True,
+                        counter="draft_prefill_traces")
+                    self._draft_chunk_fns[T] = fn
+                _, draft.pages, draft.state, draft.lens = fn(
+                    self.draft_params, jnp.asarray(toks), None,
+                    draft.pages, draft.state, draft.lens,
+                    jnp.asarray(s.slot_id, jnp.int32),
+                    jnp.asarray(draft._block_tables[s.slot_id], jnp.int32),
+                    jnp.asarray(n_valid, jnp.int32))
+                s.draft_len += n_valid
+                budget -= T
+                done_tokens += n_valid
+                self.draft_prefill_tokens += n_valid
+        return done_tokens
+
+    def _build_verify_fn(self, arena: KVArena) -> Callable:
+        """The ONE fused verify launch: score T = k+1 fed tokens per
+        speculating slot against the target's paged cache
+        (``api.verify_step_paged`` through the chunk-attention kernels
+        with per-slot chunk lengths — 0 rows for non-speculating slots),
+        then accept/reject with ``speculative_verify`` and commit each
+        slot's length by its emit count, all inside one jit.  Compiles
+        exactly once per service (``verify_traces``)."""
+        api, cfg, impl = self.api, self.cfg, self._impl
+        T = self.speculate_k + 1
+
+        def _verify(params, tokens, dlogits, dtoks, pages, state, lens,
+                    spec, seeds, sids, offs, block_tables, occ):
+            self.verify_traces += 1          # runs at trace time only
+            chunk_len = jnp.where(spec, T, 0).astype(jnp.int32)
+            cache = arena.assemble(pages, state, lens)
+            logits, new_cache = api.verify_step_paged(
+                params, cfg, {"tokens": tokens}, cache, block_tables,
+                chunk_len=chunk_len, block_size=arena.block_size,
+                impl=impl)
+            new_pages, new_state = arena.disassemble(new_cache)
+            state2 = arena.merge_state(state, new_state, spec)
+            out, n_emit = speculative_verify(
+                logits, dlogits, dtoks, self._key, seeds, sids, offs,
+                self.sampler, live=spec, occupancy=occ)
+            new_lens = jnp.where(spec, lens + n_emit, lens)
+            return out, n_emit, new_pages, state2, new_lens
+
+        return jax.jit(_verify,
+                       donate_argnums=arena._donate_argnums((4, 5, 6)))
+
+    def _spec_round(self, state: _GroupState,
+                    spec_slots: List[_Slot]) -> None:
+        """One draft/verify round for every slot whose draft cache is
+        caught up: k+1 fused DRAFT decode steps (step 0 replays
+        ``known[-2]`` to close the lag, steps 1..k propose drafts from
+        the STREAM_DRAFT counter streams), then ONE fused target verify
+        launch commits up to k+1 tokens per slot.  After the round the
+        draft rolls back to the new lag-1 goal (rejected proposals'
+        rows become garbage past ``len``, overwritten by the next
+        round)."""
+        arena, draft = state.arena, state.draft
+        cap = arena.capacity
+        k = self.speculate_k
+        live = np.zeros((cap,), bool)
+        seeds = np.zeros((cap,), np.uint32)
+        sids = np.zeros((cap,), np.uint32)
+        offs = np.zeros((cap,), np.uint32)
+        for s in spec_slots:
+            sid = s.slot_id
+            live[sid] = True
+            seeds[sid] = np.uint32(self._req_seed(s.req) & 0xFFFFFFFF)
+            sids[sid] = s.sample_idx
+            offs[sid] = len(s.emitted)
+        live_dev = jnp.asarray(live)
+        if self._draft_decode_fn is None:
+            self._draft_decode_fn = jax.jit(
+                self._paged_decode_pure(draft, api=self.draft_api,
+                                        cfg=self.draft_cfg, native=True,
+                                        counter="draft_decode_traces"),
+                donate_argnums=draft._donate_argnums((2, 3, 4)))
+        drafts_host: List[np.ndarray] = []
+        dlogit_steps: List[Any] = []
+        for j in range(k + 1):
+            tokens = np.zeros((cap,), np.int32)
+            for s in spec_slots:
+                if j == 0:
+                    # catch-up row: the second-to-last known token (its
+                    # output re-predicts a token we already have)
+                    known_tail = (s.emitted[-2] if len(s.emitted) >= 2
+                                  else s.req.tokens[-1])
+                    tokens[s.slot_id] = known_tail
+                elif j == 1:
+                    tokens[s.slot_id] = s.emitted[-1]
+                else:
+                    tokens[s.slot_id] = drafts_host[j - 2][s.slot_id]
+            logits, draft.pages, draft.state, draft.lens = \
+                self._draft_decode_fn(
+                    self.draft_params, jnp.asarray(tokens), draft.pages,
+                    draft.state, draft.lens, live_dev,
+                    draft.device_block_tables())
+            self.draft_steps += 1
+            if j >= 1:
+                dlogit_steps.append(logits)
+                d = self._sample(logits, seeds, sids, offs + (j - 1),
+                                 live=live_dev, stream=STREAM_DRAFT)
+                drafts_host.append(np.asarray(d))
+        dlogits = jnp.stack(dlogit_steps, axis=1)          # (cap, k, V)
+        dtoks = np.stack(drafts_host, axis=1).astype(np.int32)
+        vtok = np.zeros((cap, k + 1), np.int32)
+        for s in spec_slots:
+            sid = s.slot_id
+            vtok[sid, 0] = s.emitted[-1]
+            vtok[sid, 1:] = dtoks[sid]
+            # COW guard over the whole verify span (prefix-frozen tails,
+            # fork-shared prompt blocks)
+            start = len(s.req.tokens) + len(s.emitted) - 1
+            copied = arena.ensure_writable(sid, start, k + 1)
+            if copied:
+                self.admission_copy_bytes += (copied * arena.block_size
+                                              * arena.token_bytes)
+        if self._verify_fn is None:
+            self._verify_fn = self._build_verify_fn(arena)
+        out, n_emit, arena.pages, arena.state, arena.lens = \
+            self._verify_fn(
+                self.params, jnp.asarray(vtok), dlogits,
+                jnp.asarray(dtoks), arena.pages, arena.state, arena.lens,
+                live_dev, jnp.asarray(seeds), jnp.asarray(sids),
+                jnp.asarray(offs), arena.device_block_tables(),
+                arena.device_occupancy())
+        self.verify_launches += 1
+        out_h, nem = np.asarray(out), np.asarray(n_emit)
+        for s in spec_slots:
+            sid = s.slot_id
+            n = int(nem[sid])
+            s.steps += 1
+            for t in out_h[sid, :n]:
+                # count only tokens the request actually keeps: verify can
+                # commit past max_new/EOS, but those rows are garbage the
+                # eviction discards, not accepted throughput
+                self.accepted_tokens += 1
+                s.push(int(t))
+                if s.done:
+                    break
+            # roll the draft back to the NEW lag-1 goal: everything past
+            # it is a rejected proposal's row (or the accepted ones we'll
+            # re-feed), garbage past len by construction
+            dl = self._spec_goal(s)
+            draft.set_len(sid, dl)
+            s.draft_len = dl
+
+    # -- n>1 parallel sampling: refcounted prompt-block forks -----------
+    def _spawn_forks(self, state: _GroupState, s: _Slot, logits,
+                     wall: float) -> None:
+        """Fork ``n_samples - 1`` sibling slots off a primary that just
+        finished prefill: each fork allocs with ``shared=`` the primary's
+        prompt blocks (refcount bumps, ZERO prefill compute or copies),
+        draws its own first token from the same final-chunk logits on its
+        own ``sample_idx`` counter stream, and diverges from the shared
+        tail block by copy-on-write on its first append.  Slot or block
+        pressure spawns fewer than asked (counted as shortfall) — the
+        primary always runs."""
+        if s.sample_idx != 0:
+            return
+        asked = int(getattr(s.req, "n_samples", 1)) - 1
+        want = min(asked + 1, self.n_samples_cap) - 1
+        if want <= 0:
+            # shortfall counts every sibling the caller asked for but the
+            # category cap / batch budget denied, not just alloc failures
+            self.fork_shortfall += max(0, asked)
+            return
+        arena = state.arena
+        P = len(s.req.tokens) + self._extra_cache_tokens()
+        total = P + s.req.max_new_tokens
+        shared = list(arena._block_tables[s.slot_id][:arena.blocks_for(P)])
+        seed = self._req_seed(s.req)
+        first = np.asarray(self._sample(
+            jnp.broadcast_to(logits.reshape(1, -1),
+                             (want, logits.shape[-1])),
+            [seed] * want, list(range(1, want + 1)), [0] * want))
+        spawned = 0
+        for i in range(want):
+            if (state.live >= self.plan.bs
+                    or not arena.can_alloc(total, shared=shared)):
+                break
+            sid = arena.alloc(total, shared=shared)
+            arena.set_len(sid, P)
+            fork = _Slot(s.req, None, prefill_s=s.prefill_s,
+                         admit_wall=s.admit_wall,
+                         admitted_s=s.admitted_s, slot_id=sid)
+            fork.consumed = len(s.req.tokens)
+            fork.sample_idx = i + 1
+            fork.begin_decode(int(first[i]), wall)
+            state.slots.append(fork)
+            spawned += 1
+        self.forks_spawned += spawned
+        self.fork_shortfall += asked - spawned
+        if spawned:
+            self._sibling_refs[s.req.rid] = spawned + 1
+
     # -- fused decode: paged arena path ---------------------------------
-    def _paged_decode_pure(self, arena: KVArena) -> Callable:
+    def _paged_decode_pure(self, arena: KVArena,
+                           api: Optional[ModelApi] = None,
+                           cfg: Optional[ModelConfig] = None,
+                           native: Optional[bool] = None,
+                           counter: str = "decode_traces") -> Callable:
         """The fused decode step as a PURE function of
         ``(params, tokens, pages, state, lens, live, block_tables)`` ->
         ``(logits, pages, state, lens)`` — what ``_build_paged_decode_fn``
         jits locally and what a launcher's ``paged_step_builder`` wraps in
-        ``pjit`` with mesh shardings for MP-sharded paged decode."""
-        api, cfg, impl = self.api, self.cfg, self._impl
-        native = self.paged_native           # static: picked at trace time
+        ``pjit`` with mesh shardings for MP-sharded paged decode.
+
+        ``api``/``cfg``/``native``/``counter`` default to the TARGET
+        model; the speculative path passes the DRAFT model's to build the
+        fused draft step over the draft arena (compiles counted under
+        ``draft_decode_traces``)."""
+        api = self.api if api is None else api
+        cfg = self.cfg if cfg is None else cfg
+        impl = self._impl
+        if native is None:
+            native = self.paged_native       # static: picked at trace time
 
         def _step(params, tokens, pages, state, lens, live, block_tables):
-            self.decode_traces += 1          # runs at trace time only
+            setattr(self, counter,           # runs at trace time only
+                    getattr(self, counter) + 1)
             if native:
                 # paged leaves stay PAGE POOLS: the family's attention
                 # streams K/V through the block table in place and writes
@@ -1164,40 +1640,68 @@ class ServiceRuntime:
     def _decode_group_paged(self, state: _GroupState) -> None:
         arena = state.arena
         cap = arena.capacity
+        k = self.speculate_k
         tokens = np.zeros((cap,), np.int32)
         live = np.zeros((cap,), bool)
+        seeds = np.zeros((cap,), np.uint32)
+        sids = np.zeros((cap,), np.uint32)
+        offs = np.zeros((cap,), np.uint32)
+        spec_round: List[_Slot] = []
         for s in state.slots:
-            if not s.done and not s.prefilling:
-                tokens[s.slot_id] = s.emitted[-1]
-                live[s.slot_id] = True
-                if state.prefix is not None:
-                    # the append position can sit inside a block the
-                    # prefix index froze (this slot's own registered
-                    # partial tail, or a block-aligned shared prefix whose
-                    # last block the generation now extends): COW first
-                    pos = (len(s.req.tokens) + self._extra_cache_tokens()
-                           + len(s.emitted) - 1)
-                    copied = arena.ensure_writable(s.slot_id, pos, 1)
-                    if copied:
-                        self.admission_copy_bytes += (
-                            copied * arena.block_size * arena.token_bytes)
-        if not live.any():
-            return               # everything awaits eviction or prefill
-        if self._paged_decode_fn is None:
-            self._paged_decode_fn = self._build_paged_decode_fn(arena)
-        live_dev = jnp.asarray(live)
-        logits, arena.pages, arena.state, arena.lens = \
-            self._paged_decode_fn(
-                self.params, jnp.asarray(tokens), arena.pages, arena.state,
-                arena.lens, live_dev, arena.device_block_tables())
-        toks = np.asarray(self._sample(logits, live=live_dev,
-                                       occupancy=arena.device_occupancy()))
-        self.decode_steps += 1
-        for slot in state.slots:
-            if slot.done or slot.prefilling:
+            if s.done or s.prefilling:
                 continue
-            slot.steps += 1
-            slot.push(int(toks[slot.slot_id]))
+            if s.spec:
+                if (len(s.req.tokens) + len(s.emitted) + k
+                        > arena.slot_tokens):
+                    # tail of generation: a full round would write past
+                    # the slot's table width — finish with plain decode
+                    # (greedy tokens are identical either way)
+                    state.draft.free(s.slot_id)
+                    s.spec = False
+                    s.draft_len = 0
+                    self.spec_degraded += 1
+                elif s.draft_len >= self._spec_goal(s):
+                    spec_round.append(s)
+                    continue
+                # else: draft still chasing — decode normally this step
+            sid = s.slot_id
+            tokens[sid] = s.emitted[-1]
+            live[sid] = True
+            seeds[sid] = np.uint32(self._req_seed(s.req) & 0xFFFFFFFF)
+            sids[sid] = s.sample_idx
+            offs[sid] = len(s.emitted)
+            # the append position can sit inside a block the prefix index
+            # froze (this slot's own registered partial tail, a
+            # block-aligned shared prefix whose last block the generation
+            # now extends) or one an n>1 sibling still shares: COW first.
+            # The arena's cheap guard makes this free when nothing in the
+            # pool is shared, so the call is unconditional.
+            pos = (len(s.req.tokens) + self._extra_cache_tokens()
+                   + len(s.emitted) - 1)
+            copied = arena.ensure_writable(sid, pos, 1)
+            if copied:
+                self.admission_copy_bytes += (
+                    copied * arena.block_size * arena.token_bytes)
+        if live.any():
+            if self._paged_decode_fn is None:
+                self._paged_decode_fn = self._build_paged_decode_fn(arena)
+            live_dev = jnp.asarray(live)
+            logits, arena.pages, arena.state, arena.lens = \
+                self._paged_decode_fn(
+                    self.params, jnp.asarray(tokens), arena.pages,
+                    arena.state, arena.lens, live_dev,
+                    arena.device_block_tables())
+            toks = np.asarray(self._sample(
+                logits, seeds, sids, offs, live=live_dev,
+                occupancy=arena.device_occupancy()))
+            self.decode_steps += 1
+            for slot in state.slots:
+                if slot.done or slot.prefilling or not live[slot.slot_id]:
+                    continue
+                slot.steps += 1
+                slot.push(int(toks[slot.slot_id]))
+        if spec_round:
+            self._spec_round(state, spec_round)
 
     # -- fused decode: dense (merge/select) path ------------------------
     def _decode_group_dense(self, state: _GroupState) -> None:
@@ -1207,7 +1711,11 @@ class ServiceRuntime:
         cur = jnp.asarray([s.emitted[-1] if not s.done else 0
                            for s in state.slots], jnp.int32)
         logits, state.cache = self.decode_fn(self.params, cur, state.cache)
-        toks = np.asarray(self._sample(logits, live=jnp.asarray(live)))
+        toks = np.asarray(self._sample(
+            logits, [self._req_seed(s.req) for s in state.slots],
+            [s.sample_idx for s in state.slots],
+            [len(s.emitted) for s in state.slots],
+            live=jnp.asarray(live)))
         self.decode_steps += 1
         for i, slot in enumerate(state.slots):
             if slot.done:
@@ -1257,6 +1765,9 @@ class ServiceRuntime:
         copy0, whole0 = self.admission_copy_bytes, self.whole_cache_copies
         chunkw0 = self.chunk_write_bytes
         steps0, one0 = self.decode_steps, self.oneshot_prefills
+        draft0, ver0 = self.draft_steps, self.verify_launches
+        acc0, deg0 = self.accepted_tokens, self.spec_degraded
+        fk0, fs0 = self.forks_spawned, self.fork_shortfall
         pfx0 = self._prefix_totals()
         moe0 = self._moe_stats.dropped if self._moe_stats else 0.0
         results: List[GenerationResult] = []
@@ -1278,6 +1789,7 @@ class ServiceRuntime:
         chunk_tokens = 0
         for state in self.groups.values():
             chunk_tokens += self._prefill_chunks(state)
+            self._draft_chunks(state)
             self._decode_group(state)
         pfx1 = self._prefix_totals()
         verdict_count = lambda v: sum(1 for r in rejected
@@ -1306,7 +1818,15 @@ class ServiceRuntime:
             offload_verdicts=verdict_count(Outcome.OFFLOAD),
             preempted=ctrl.preemptions - preempt0,
             resumed=ctrl.resumes - resume0,
-            parked=len(ctrl.parked))
+            parked=len(ctrl.parked),
+            draft_steps=self.draft_steps - draft0,
+            verify_launches=self.verify_launches - ver0,
+            accepted_tokens=self.accepted_tokens - acc0,
+            spec_slots=sum(1 for g in self.groups.values()
+                           for s in g.slots if s.spec and not s.done),
+            forks_spawned=self.forks_spawned - fk0,
+            fork_shortfall=self.fork_shortfall - fs0,
+            spec_degraded=self.spec_degraded - deg0)
 
     # ------------------------------------------------------------------
     # sync mode: run-to-completion batches (the pre-slot baseline)
@@ -1328,11 +1848,14 @@ class ServiceRuntime:
         self.prefill_tokens_computed += sum(len(r.tokens) for r in reqs)
 
         outs = []
-        cur = self._sample(logits)
+        seeds = [self._req_seed(r) for r in reqs]
+        zeros = [0] * len(reqs)
+        cur = self._sample(logits, seeds, zeros, zeros)
         outs.append(np.asarray(cur))
-        for _ in range(max_new - 1):
+        for i in range(max_new - 1):
             logits, cache = self.decode_fn(self.params, cur, cache)
-            cur = self._sample(logits)
+            cur = self._sample(logits, seeds, zeros,
+                               [i + 1] * len(reqs))
             outs.append(np.asarray(cur))
             self.decode_steps += 1
         jax.block_until_ready(cur)
@@ -1379,11 +1902,13 @@ class ServiceRuntime:
         out: List[GenerationResult] = []
         while self.pending() or self.in_flight():
             before = (self.pending(), self.in_flight(), self.decode_steps,
-                      self.prefill_chunk_calls)
+                      self.prefill_chunk_calls, self.verify_launches,
+                      self.draft_prefill_tokens)
             stats = self.step(now=now, max_wait_s=max_wait_s)
             out.extend(stats.results)
             if (self.pending(), self.in_flight(), self.decode_steps,
-                    self.prefill_chunk_calls) == before \
+                    self.prefill_chunk_calls, self.verify_launches,
+                    self.draft_prefill_tokens) == before \
                     and not stats.results:
                 break            # no progress possible (e.g. empty compose)
         return out
@@ -1447,7 +1972,8 @@ class EparaServingEngine:
                 if on_stats is not None:
                     on_stats(name, stats)
                 if (stats.results or stats.admitted or stats.decode_steps
-                        or stats.prefill_chunk_tokens or stats.rejected):
+                        or stats.prefill_chunk_tokens or stats.rejected
+                        or stats.verify_launches or stats.draft_steps):
                     progress = True
         self._results.extend(out)
         return out

@@ -92,6 +92,17 @@ class SimConfig:
     # still occupies the server, so SSSP placement prices preemption.
     admission_policy: str = "fifo"
     preempt_overhead_s: float = 0.0005
+    # speculative decoding (live engine's draft/verify rounds): a round
+    # proposes k draft tokens and commits 1 + accept_rate*k of them per
+    # fused target launch, at ``spec_draft_cost`` target-step-fractions
+    # per draft step.  The decode term of a speculating latency service is
+    # scaled by (1 + draft_cost*(k+1)) / (1 + accept_rate*k) — the
+    # acceptance-rate-discounted serial-launch count.  Both fields default
+    # 0 => factor 1 (legacy configs unchanged); k comes from the plan's
+    # ``resolved_speculate`` knob, so only services whose category/plan
+    # actually speculates are discounted.
+    spec_accept_rate: float = 0.0
+    spec_draft_cost: float = 0.0
 
 
 @dataclasses.dataclass
@@ -114,6 +125,8 @@ class SimResult:
     #                                    values) under the "sdf" policy
     preemptions: int = 0               # queue-jump admissions (modeled
     #                                    block-table-parking preemptions)
+    spec_discounted: int = 0           # requests priced at the
+    #                                    speculative-decoding discount
 
     @property
     def mean_offloads(self) -> float:
@@ -180,6 +193,7 @@ class Simulation:
         self._cached_prefill_s = 0.0
         self._verdicts: Dict[str, int] = {}
         self._preemptions = 0
+        self._spec_discounted = 0
         self.placements: List[Tuple[str, int]] = []
 
     def _note_verdict(self, outcome: Outcome) -> None:
@@ -284,7 +298,8 @@ class Simulation:
             max_prefill_stall_s=self._max_prefill_stall,
             cached_prefill_s=self._cached_prefill_s,
             verdicts=dict(self._verdicts),
-            preemptions=self._preemptions)
+            preemptions=self._preemptions,
+            spec_discounted=self._spec_discounted)
 
     # ------------------------------------------------------------------
     def _handle(self, req: Request, sid: int, now: float, push) -> None:
@@ -399,6 +414,20 @@ class Simulation:
             base = cm.effective_latency(svc, self.servers[0].gpu,
                                         batch=plan.bs, mp=plan.mp,
                                         mt=plan.mt, mf=plan.mf) / plan.bs
+            # speculative-decoding discount: mirror the live gate (paged
+            # plane, token-pure family, plan knob speculating) and scale
+            # the decode term by the acceptance-rate-discounted launch
+            # count — k accepted drafts ride each verify, bought with
+            # (k+1) draft steps at spec_draft_cost each
+            k_spec = (plan.resolved_speculate(True)
+                      if hasattr(plan, "resolved_speculate") else 0)
+            if (k_spec > 0 and self.cfg.serving_mode == "paged"
+                    and svc.prefix_cacheable
+                    and (self.cfg.spec_accept_rate > 0
+                         or self.cfg.spec_draft_cost > 0)):
+                base *= ((1.0 + self.cfg.spec_draft_cost * (k_spec + 1))
+                         / (1.0 + self.cfg.spec_accept_rate * k_spec))
+                self._spec_discounted += 1
             tail = prefill_s - stall   # non-stalling chunks: own cost only
             if self.cfg.admission_policy == "sdf" and req.deadline_s:
                 # slack-ordered admission (live engine's AdmissionController

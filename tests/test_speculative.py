@@ -1,0 +1,388 @@
+"""Speculative + n>1 parallel decoding, and the batch-composition
+sampling bugfix they are built on.
+
+The headline regression: a request's sampled tokens must be a pure
+function of (seed, sample_idx, emitted offset) — bit-identical whether it
+decodes alone, inside a full batch, or across a park/resume cycle.  The
+old engine split one batch-wide key per fused step, so admitting an
+unrelated request changed another request's output.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from conftest import toy_config
+from repro.core.allocator import ParallelPlan
+from repro.core.categories import Sensitivity, TaskCategory
+from repro.models import transformer as T
+from repro.models.registry import model_api
+from repro.serving.arena import KVArena
+from repro.serving.engine import GenerationRequest, ServiceRuntime
+from repro.serving.sampler import (STREAM_DECODE, STREAM_DRAFT,
+                                   SamplerConfig, sample_per_slot,
+                                   slot_keys, speculative_verify)
+
+LAT = TaskCategory(Sensitivity.LATENCY, False)
+FREQ = TaskCategory(Sensitivity.FREQUENCY, False)
+STOCH = SamplerConfig(temperature=0.8, top_k=40)
+
+
+@pytest.fixture(scope="module")
+def toy():
+    cfg = toy_config()
+    return cfg, T.init(jax.random.PRNGKey(0), cfg)
+
+
+def _runtime(toy, *, sampler=STOCH, category=LAT, bs=4, **kw):
+    cfg, params = toy
+    plan = ParallelPlan(service="toy", category=category, bs=bs)
+    return ServiceRuntime(cfg, params, plan, sampler=sampler, **kw)
+
+
+def _tokens_of(rt, reqs):
+    for r in reqs:
+        rt.submit(r)
+    return {(r.rid, r.sample): list(map(int, r.tokens))
+            for r in rt.drain()}
+
+
+# ---------------------------------------------------------------------
+# headline bugfix: batch-composition-independent sampling
+# ---------------------------------------------------------------------
+def test_sampling_independent_of_batch_composition(toy):
+    """rid=1's stochastic tokens are bit-identical alone and sharing the
+    batch with unrelated traffic — the regression the per-slot counter
+    streams fix."""
+    prompt = np.arange(1, 8, dtype=np.int32)
+    alone = _tokens_of(_runtime(toy), [
+        GenerationRequest(rid=1, tokens=prompt, max_new_tokens=6)])
+    mixed = _tokens_of(_runtime(toy), [
+        GenerationRequest(rid=1, tokens=prompt.copy(), max_new_tokens=6),
+        GenerationRequest(rid=2, tokens=np.arange(3, 12, dtype=np.int32),
+                          max_new_tokens=9),
+        GenerationRequest(rid=3, tokens=np.arange(5, 9, dtype=np.int32),
+                          max_new_tokens=4)])
+    assert alone[(1, 0)] == mixed[(1, 0)]
+
+
+def test_sampling_independent_of_arrival_order(toy):
+    """Same two requests, swapped submission order: each keeps its own
+    stream (the old batch-wide split keyed on step count, so order
+    mattered)."""
+    a = GenerationRequest(rid=1, tokens=np.arange(1, 8, dtype=np.int32),
+                          max_new_tokens=5)
+    b = GenerationRequest(rid=2, tokens=np.arange(2, 9, dtype=np.int32),
+                          max_new_tokens=5)
+    ab = _tokens_of(_runtime(toy), [a, b])
+    ba = _tokens_of(_runtime(toy), [
+        GenerationRequest(rid=2, tokens=np.arange(2, 9, dtype=np.int32),
+                          max_new_tokens=5),
+        GenerationRequest(rid=1, tokens=np.arange(1, 8, dtype=np.int32),
+                          max_new_tokens=5)])
+    assert ab == ba
+
+
+def test_sampling_survives_park_resume(toy):
+    """Preempting a slot mid-decode (block-table parking) and resuming it
+    must not shift its sample stream: the counter streams key on emitted
+    offset, not on how many fused steps the engine ran in between."""
+    prompt = np.arange(1, 8, dtype=np.int32)
+    want = _tokens_of(_runtime(toy), [
+        GenerationRequest(rid=5, tokens=prompt, max_new_tokens=8)])
+
+    rt = _runtime(toy)
+    rt.submit(GenerationRequest(rid=5, tokens=prompt.copy(),
+                                max_new_tokens=8))
+    # step until mid-decode, then park the slot by hand (the admission
+    # controller's preemption path uses exactly this helper)
+    for _ in range(16):
+        rt.step()
+        state = rt.groups[0]
+        if state.slots and not state.slots[0].prefilling \
+                and len(state.slots[0].emitted) >= 3:
+            break
+    state = rt.groups[0]
+    assert state.slots and len(state.slots[0].emitted) >= 3
+    rt._park_slot(0, state, state.slots[0], now=0.0)
+    assert rt.admission.parked
+    got = {(r.rid, r.sample): list(map(int, r.tokens)) for r in rt.drain()}
+    assert got == want
+
+
+def test_explicit_seed_decouples_stream_from_rid(toy):
+    """Two different rids pinned to the same seed draw the same stream;
+    the same rid under different seeds draws different ones."""
+    prompt = np.arange(1, 8, dtype=np.int32)
+    r1 = _tokens_of(_runtime(toy), [
+        GenerationRequest(rid=1, tokens=prompt, max_new_tokens=6, seed=77)])
+    r2 = _tokens_of(_runtime(toy), [
+        GenerationRequest(rid=2, tokens=prompt.copy(), max_new_tokens=6,
+                          seed=77)])
+    r3 = _tokens_of(_runtime(toy), [
+        GenerationRequest(rid=1, tokens=prompt.copy(), max_new_tokens=6,
+                          seed=78)])
+    assert r1[(1, 0)] == r2[(2, 0)]
+    assert r1[(1, 0)] != r3[(1, 0)]
+
+
+def test_sync_and_continuous_streams_match(toy):
+    """The same counter chain drives both serving modes, so stochastic
+    tokens now agree across them too (greedy always did)."""
+    prompt = np.arange(1, 8, dtype=np.int32)
+    cont = _tokens_of(_runtime(toy), [
+        GenerationRequest(rid=3, tokens=prompt, max_new_tokens=5)])
+    sync = _tokens_of(_runtime(toy, mode="sync"), [
+        GenerationRequest(rid=3, tokens=prompt.copy(), max_new_tokens=5)])
+    assert cont[(3, 0)] == sync[(3, 0)]
+
+
+# ---------------------------------------------------------------------
+# non-greedy sampler semantics (satellite: masks, fill, ties)
+# ---------------------------------------------------------------------
+def test_sample_per_slot_masks_and_fill_token():
+    logits = jnp.asarray(np.random.default_rng(0).normal(size=(4, 16)),
+                         jnp.float32)
+    base = jax.random.PRNGKey(0)
+    cfg = SamplerConfig(temperature=0.8, top_k=8)
+    out = sample_per_slot(
+        logits, base, [1, 2, 3, 4], [0] * 4, [0] * 4, cfg,
+        live=jnp.asarray([True, False, True, True]),
+        occupancy=jnp.asarray([True, True, False, True]), fill_token=9)
+    out = np.asarray(out)
+    assert out[1] == 9 and out[2] == 9          # masked rows filled
+    assert out[0] != 9 or out[3] != 9           # real rows sampled
+    # greedy ignores keys but still masks
+    g = np.asarray(sample_per_slot(
+        logits, base, [0] * 4, [0] * 4, [0] * 4, SamplerConfig(),
+        live=jnp.asarray([False, True, True, True]), fill_token=7))
+    assert g[0] == 7
+    assert (g[1:] == np.argmax(np.asarray(logits), -1)[1:]).all()
+
+
+def test_sample_per_slot_rows_are_independent():
+    """Row i's draw depends only on its own (seed, sample, offset) chain,
+    not on what else is in the batch."""
+    rng = np.random.default_rng(1)
+    row = rng.normal(size=(16,)).astype(np.float32)
+    other = rng.normal(size=(3, 16)).astype(np.float32)
+    base = jax.random.PRNGKey(0)
+    cfg = SamplerConfig(temperature=0.8, top_k=8)
+    alone = np.asarray(sample_per_slot(
+        jnp.asarray(row[None]), base, [5], [0], [3], cfg))[0]
+    batched = np.asarray(sample_per_slot(
+        jnp.asarray(np.vstack([other, row[None]])), base,
+        [1, 2, 3, 5], [0] * 4, [9, 1, 4, 3], cfg))[3]
+    assert alone == batched
+
+
+def test_top_k_tie_at_cutoff_is_deterministic():
+    """Ties AT the top_k cutoff are kept (not arbitrarily dropped), and
+    the same key resolves them identically every run."""
+    logits = np.full((1, 8), -5.0, np.float32)
+    logits[0, [1, 4, 6]] = 2.0                   # three-way tie, top_k=2
+    cfg = SamplerConfig(temperature=1.0, top_k=2)
+    base = jax.random.PRNGKey(0)
+    draws = {int(np.asarray(sample_per_slot(
+        jnp.asarray(logits), base, [s], [0], [0], cfg))[0])
+        for s in range(40)}
+    assert draws <= {1, 4, 6}                    # never below the cutoff
+    a = sample_per_slot(jnp.asarray(logits), base, [7], [0], [0], cfg)
+    b = sample_per_slot(jnp.asarray(logits), base, [7], [0], [0], cfg)
+    assert int(np.asarray(a)[0]) == int(np.asarray(b)[0])
+
+
+def test_stream_tags_are_disjoint():
+    """The decode and draft streams of one request never collide — the
+    fourth fold_in separates consumers."""
+    base = jax.random.PRNGKey(0)
+    kd = np.asarray(slot_keys(base, [1], [0], [0], STREAM_DECODE))
+    kf = np.asarray(slot_keys(base, [1], [0], [0], STREAM_DRAFT))
+    assert (kd != kf).any()
+
+
+@settings(deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), k=st.integers(1, 4))
+def test_greedy_verify_matches_argmax_prefix(seed, k):
+    """Property: greedy speculative_verify emits exactly the target's
+    argmax sequence for as long as the drafts agree, then one more."""
+    rng = np.random.default_rng(seed)
+    tl = rng.normal(size=(2, k + 1, 13)).astype(np.float32)
+    targets = np.argmax(tl, -1)
+    drafts = targets[:, :k].copy()
+    if k >= 2:
+        drafts[0, k - 1] = (drafts[0, k - 1] + 1) % 13   # force a reject
+    out, n_emit = speculative_verify(
+        jnp.asarray(tl), jnp.zeros((2, k, 13), jnp.float32),
+        jnp.asarray(drafts, jnp.int32), jax.random.PRNGKey(0),
+        [1, 2], [0, 0], [0, 0])
+    out, n_emit = np.asarray(out), np.asarray(n_emit)
+    for b in range(2):
+        matches = int(np.cumprod(
+            drafts[b] == targets[b, :k]).sum())
+        assert n_emit[b] == matches + 1
+        assert (out[b, :n_emit[b]] == targets[b, :n_emit[b]]).all()
+
+
+# ---------------------------------------------------------------------
+# speculative decoding (draft/verify over the paged arena)
+# ---------------------------------------------------------------------
+def test_speculative_greedy_bit_identical_and_one_trace(toy):
+    """Draft = target (100%% greedy agreement): tokens match the plain
+    engine bit-for-bit, every round commits k+1 tokens per verify launch,
+    and the compile budget holds — one verify trace, at most one decode
+    trace, per service."""
+    cfg, params = toy
+    prompt = np.arange(1, 8, dtype=np.int32)
+    want = _tokens_of(_runtime(toy, sampler=SamplerConfig()), [
+        GenerationRequest(rid=0, tokens=prompt, max_new_tokens=9),
+        GenerationRequest(rid=1, tokens=np.arange(2, 7, dtype=np.int32),
+                          max_new_tokens=7)])
+
+    rt = _runtime(toy, sampler=SamplerConfig(),
+                  draft_params=params, draft_cfg=cfg, speculate=3)
+    got = _tokens_of(rt, [
+        GenerationRequest(rid=0, tokens=prompt.copy(), max_new_tokens=9),
+        GenerationRequest(rid=1, tokens=np.arange(2, 7, dtype=np.int32),
+                          max_new_tokens=7)])
+    assert got == want
+    assert rt.verify_launches > 0
+    assert rt.verify_traces == 1
+    assert rt.decode_traces <= 1
+    assert rt.draft_decode_traces <= 1
+    # self-draft accepts everything: k+1 per launch until max_new clips
+    assert rt.accepted_tokens >= 2 * rt.verify_launches
+
+
+def test_speculative_stochastic_is_deterministic(toy):
+    """Stochastic speculation reproduces bit-identically run-to-run (all
+    its randomness flows through the counter streams)."""
+    cfg, params = toy
+    prompt = np.arange(1, 8, dtype=np.int32)
+    runs = []
+    for _ in range(2):
+        rt = _runtime(toy, draft_params=params, draft_cfg=cfg, speculate=2)
+        runs.append(_tokens_of(rt, [
+            GenerationRequest(rid=4, tokens=prompt.copy(),
+                              max_new_tokens=8)]))
+    assert runs[0] == runs[1]
+
+
+def test_speculate_category_gating(toy):
+    """The -1 knob resolves by category: latency speculates when a draft
+    is present, frequency never does; an explicit ask without a draft is
+    a loud error."""
+    cfg, params = toy
+    lat = ParallelPlan(service="s", category=LAT, bs=2)
+    frq = ParallelPlan(service="s", category=FREQ, bs=2)
+    assert lat.resolved_speculate(True) > 0
+    assert lat.resolved_speculate(False) == 0
+    assert frq.resolved_speculate(True) == 0
+    assert frq.resolved_n_samples() == 2         # fan to the batch size
+    assert lat.resolved_n_samples() == 1
+    with pytest.raises(ValueError, match="draft"):
+        _runtime(toy, speculate=3)
+    rt = _runtime(toy, category=LAT, draft_params=params, draft_cfg=cfg)
+    assert rt.speculate_k > 0                    # category default armed
+
+
+def test_speculative_park_degrades_not_corrupts(toy):
+    """Parking a speculating slot drops its draft (resume is plain
+    decode) and greedy tokens stay bit-identical."""
+    cfg, params = toy
+    prompt = np.arange(1, 8, dtype=np.int32)
+    want = _tokens_of(_runtime(toy, sampler=SamplerConfig()), [
+        GenerationRequest(rid=6, tokens=prompt, max_new_tokens=8)])
+    rt = _runtime(toy, sampler=SamplerConfig(),
+                  draft_params=params, draft_cfg=cfg, speculate=3)
+    rt.submit(GenerationRequest(rid=6, tokens=prompt.copy(),
+                                max_new_tokens=8))
+    for _ in range(16):
+        rt.step()
+        state = rt.groups[0]
+        if state.slots and state.slots[0].spec \
+                and 2 <= len(state.slots[0].emitted) < 8:
+            break
+    state = rt.groups[0]
+    assert state.slots and state.slots[0].spec
+    rt._park_slot(0, state, state.slots[0], now=0.0)
+    assert rt.spec_degraded == 1
+    got = {(r.rid, r.sample): list(map(int, r.tokens)) for r in rt.drain()}
+    assert got == want
+
+
+# ---------------------------------------------------------------------
+# n>1 parallel sampling (refcounted prompt-block forks)
+# ---------------------------------------------------------------------
+def test_parallel_samples_fork_and_diverge(toy):
+    """n_samples=3 returns three results for one rid: distinct sample
+    indices, distinct stochastic streams, shared-prompt blocks paid once,
+    and clean teardown (no leaked slots, blocks, or sibling refs)."""
+    rt = _runtime(toy, category=FREQ)
+    rt.submit(GenerationRequest(rid=7, tokens=np.arange(1, 8, dtype=np.int32),
+                                max_new_tokens=6, n_samples=3))
+    res = rt.drain()
+    assert sorted(r.sample for r in res) == [0, 1, 2]
+    assert all(r.rid == 7 for r in res)
+    streams = {tuple(map(int, r.tokens)) for r in res}
+    assert len(streams) == 3                     # stochastic divergence
+    assert rt.forks_spawned == 2
+    # forks paid zero prefill compute: only the primary's prompt ran
+    assert rt.prefill_tokens_computed == 7
+    assert not rt._sibling_refs
+    arena = rt.groups[0].arena
+    assert len(arena._free_slots) == arena.capacity
+    assert len(res) == 3
+
+
+def test_parallel_samples_deterministic_and_batch_independent(toy):
+    """Each sample's stream keys on (seed, sample_idx): the full fan
+    reproduces exactly, alone or alongside other traffic."""
+    def fan(extra):
+        rt = _runtime(toy, category=FREQ)
+        reqs = [GenerationRequest(rid=7, tokens=np.arange(1, 8, dtype=np.int32),
+                                  max_new_tokens=5, n_samples=3)]
+        if extra:
+            reqs.append(GenerationRequest(
+                rid=50, tokens=np.arange(4, 10, dtype=np.int32),
+                max_new_tokens=7))
+        out = _tokens_of(rt, reqs)
+        return {k: v for k, v in out.items() if k[0] == 7}
+    assert fan(False) == fan(True)
+
+
+def test_fork_shortfall_under_slot_pressure(toy):
+    """Asking for more samples than the group has slots spawns what fits
+    and counts the rest — the primary always runs."""
+    rt = _runtime(toy, category=FREQ, bs=2)
+    rt.submit(GenerationRequest(rid=9, tokens=np.arange(1, 6, dtype=np.int32),
+                                max_new_tokens=4, n_samples=4))
+    res = rt.drain()
+    assert len(res) == 2                          # primary + one fork
+    assert rt.forks_spawned == 1
+    assert rt.fork_shortfall >= 1
+
+
+# ---------------------------------------------------------------------
+# arena parking gate (satellite audit: ring layouts must not park)
+# ---------------------------------------------------------------------
+def test_ring_arena_is_not_parkable():
+    """Sliding-window layouts store their window as per-slot state the
+    next tenant overwrites, so ``parkable`` must gate them out — parking
+    one and resuming would resurrect the wrong window."""
+    dense = toy_config()
+    a = KVArena(dense, model_api(dense).init_cache, capacity=2,
+                max_seq_len=64, block_size=16)
+    assert a.parkable
+
+    ring = toy_config(sliding_window=16)
+    r = KVArena(ring, model_api(ring).init_cache, capacity=2,
+                max_seq_len=64, block_size=16)
+    assert r._state_shapes                        # window rows are state
+    assert not r.parkable
+    s0 = r.alloc(32)
+    with pytest.raises(ValueError, match="per-slot state"):
+        r.park(s0)
