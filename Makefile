@@ -2,7 +2,7 @@ PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
 .PHONY: test smoke bench bench-paged bench-chunked bench-prefix \
-	bench-decode bench-spec bench-goodput serve quickstart
+	bench-decode bench-spec bench-goodput serve obs-smoke quickstart
 
 test:                ## tier-1 suite
 	python -m pytest -x -q
@@ -39,6 +39,19 @@ bench-goodput:       ## sdf admission + parking preemption vs fifo
 
 serve:               ## end-to-end serving driver
 	python -m repro.launch.serve
+
+obs-smoke:           ## tiny traced+metered serve; validate the artifacts
+	python -m repro.launch.serve --archs minicpm-2b --requests 6 \
+		--max-new-tokens 4 --trace-out obs_trace.json \
+		--metrics-out obs_metrics.prom \
+		--calibrate-out obs_calibration.json
+	python -c 'import json; from repro.obs import validate_chrome_trace, \
+		parse_prometheus_text; \
+		n = validate_chrome_trace(json.load(open("obs_trace.json"))); \
+		m = parse_prometheus_text(open("obs_metrics.prom").read()); \
+		c = json.load(open("obs_calibration.json")); \
+		print("obs-smoke ok:", n, "trace events,", len(m), \
+		      "series, overrides:", c["sim_config_overrides"])'
 
 quickstart:
 	python examples/quickstart.py

@@ -1,17 +1,85 @@
-"""Shared benchmark scaffolding: scenario builders + the CSV row format
-(``name,us_per_call,derived``) used by every module."""
+"""Shared benchmark scaffolding: scenario builders, the CSV row format
+(``name,us_per_call,derived``) used by every module, the ``StepStats``
+aggregator every live-engine section drives its step loop through, and
+the dated-append helper for the ``BENCH_*.json`` trajectory files."""
 from __future__ import annotations
 
+import json
 import time
-from typing import Callable, List, Tuple
+from typing import Any, Callable, Dict, List, Tuple
 
 from repro.core.categories import EDGE_P100, ServerSpec
+from repro.obs.metrics import step_stat_sums
 from repro.simulator.engine import SimConfig, Simulation, run_comparison
 from repro.simulator.workload import (WorkloadConfig,
                                       derive_prefix_hit_rates,
                                       generate_requests, table1_services)
 
 Row = Tuple[str, float, str]
+
+
+class StepStatsAggregator:
+    """Accumulate a serving run's per-step telemetry in one place.
+
+    Numeric delta fields fold through ``repro.obs.metrics.
+    step_stat_sums`` — the SAME fold the metrics registry's
+    ``observe_step`` runs — so a benchmark's summed counters and an
+    exported metrics file can never disagree about what a run did.
+    Results and admission rejects collect in submission order, and each
+    step's wall time is kept alongside its ``StepStats`` so stall
+    analyses (e.g. the chunked-prefill head-of-line bound) can filter
+    steps by what they did."""
+
+    def __init__(self):
+        self.sums: Dict[str, float] = {}
+        self.results: List[Any] = []
+        self.rejected: List[Any] = []
+        self.timed_steps: List[Tuple[float, Any]] = []   # (wall_s, stats)
+        self.steps = 0
+
+    def add(self, stats, wall_s: float = 0.0):
+        """Fold one ``StepStats`` (with its measured wall time) in."""
+        step_stat_sums(stats, into=self.sums)
+        self.results.extend(stats.results)
+        self.rejected.extend(stats.rejected)
+        self.timed_steps.append((wall_s, stats))
+        self.steps += 1
+        return stats
+
+    def drain(self, rt, **step_kw) -> "StepStatsAggregator":
+        """Step ``rt`` until queue and slots are empty, timing each
+        scheduling round."""
+        while rt.pending() or rt.in_flight():
+            t0 = time.perf_counter()
+            stats = rt.step(**step_kw)
+            self.add(stats, time.perf_counter() - t0)
+        return self
+
+    def tokens(self) -> Dict[int, tuple]:
+        """Finished requests' emitted tokens keyed by rid."""
+        return {r.rid: tuple(int(x) for x in r.tokens)
+                for r in self.results}
+
+
+def append_dated_entry(path: str, entry: Dict[str, Any]) -> Dict[str, Any]:
+    """Append one dated entry to a ``BENCH_*.json`` trajectory file:
+    the file holds ``{"entries": [...]}`` accumulated across PRs; a
+    legacy single-report dict migrates to the first entry; a missing or
+    corrupt file starts the history fresh.  Returns what was written."""
+    history: Dict[str, Any] = {"entries": []}
+    try:
+        with open(path) as f:
+            prev = json.load(f)
+        if isinstance(prev, dict) and isinstance(prev.get("entries"), list):
+            history = prev
+        elif isinstance(prev, dict) and prev:
+            history["entries"].append(prev)
+    except (FileNotFoundError, json.JSONDecodeError):
+        pass
+    history["entries"].append(entry)
+    with open(path, "w") as f:
+        json.dump(history, f, indent=2)
+    return history
 
 
 def testbed_scenario(*, servers=6, load=30.0, horizon=40.0, seed=1,

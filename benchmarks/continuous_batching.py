@@ -32,7 +32,7 @@ import os
 
 import numpy as np
 
-from .common import Row, timed
+from .common import Row, StepStatsAggregator, append_dated_entry, timed
 
 
 def _smoke() -> bool:
@@ -128,7 +128,6 @@ def _chunked_prefill_rows() -> list:
         slots) than unchunked when the long prompt arrives mid-decode.
     """
     import gc
-    import time
 
     import jax
 
@@ -184,21 +183,18 @@ def _chunked_prefill_rows() -> list:
                 rt.submit(r)
             rt.step(); rt.step()                # shorts are decoding
             rt.submit(longr)                    # long prompt mid-decode
-            busy = []
+            agg = StepStatsAggregator()
             gc.collect()                        # GC pauses masquerade as
             gc.disable()                        # multi-ms step stalls
             try:
-                while rt.pending() or rt.in_flight():
-                    t0 = time.perf_counter()
-                    stats = rt.step()
-                    dt = time.perf_counter() - t0
-                    if stats.decode_steps and (stats.prefill_chunk_tokens
-                                               or stats.admitted):
-                        busy.append(dt)
-                    for r in stats.results:
-                        tokens[r.rid % 10] = tuple(r.tokens)
+                agg.drain(rt)
             finally:
                 gc.enable()
+            busy = [dt for dt, st in agg.timed_steps
+                    if st.decode_steps and (st.prefill_chunk_tokens
+                                            or st.admitted)]
+            tokens.update({r.rid % 10: tuple(r.tokens)
+                           for r in agg.results})
             if rep > 0:                         # skip the compile rep
                 stalls.append(sorted(busy)[-2] if len(busy) > 1
                               else max(busy))
@@ -324,7 +320,6 @@ def _decode_telemetry_rows() -> list:
     overwriting, so the perf trajectory persists across PRs.
     """
     import dataclasses
-    import json
     import time
 
     import jax
@@ -362,14 +357,9 @@ def _decode_telemetry_rows() -> list:
                                            6 + 4 * i).astype(np.int32),
                 max_new_tokens=n_new))
         rt.step(); rt.step(); rt.step()     # admit + prefill + warm compile
-        lat = []
-        while rt.pending() or rt.in_flight():
-            t0 = time.perf_counter()
-            stats = rt.step()
-            if stats.decode_steps:
-                lat.append(time.perf_counter() - t0)
-            for r in stats.results:
-                tokens[r.rid] = tuple(r.tokens)
+        agg = StepStatsAggregator().drain(rt)
+        lat = [dt for dt, st in agg.timed_steps if st.decode_steps]
+        tokens.update({r.rid: tuple(r.tokens) for r in agg.results})
         cost = rt.decode_cost_analysis()
         bytes_accessed = float(cost.get("bytes accessed", 0.0))
         return {
@@ -423,19 +413,7 @@ def _decode_telemetry_rows() -> list:
     # dated append: the json accumulates one entry per run so the perf
     # trajectory survives across PRs (a legacy single-report file becomes
     # the first entry)
-    history = {"entries": []}
-    try:
-        with open("BENCH_decode.json") as f:
-            prev = json.load(f)
-        if isinstance(prev, dict) and isinstance(prev.get("entries"), list):
-            history = prev
-        elif isinstance(prev, dict) and prev:
-            history["entries"].append(prev)
-    except (FileNotFoundError, json.JSONDecodeError):
-        pass
-    history["entries"].append(entry)
-    with open("BENCH_decode.json", "w") as f:
-        json.dump(history, f, indent=2)
+    append_dated_entry("BENCH_decode.json", entry)
     return [
         ("serve_decode_native", native["decode_step_latency_s"]["mean"]
          * 1e6,
@@ -474,7 +452,6 @@ def _speculative_rows() -> list:
     Appends a dated ``speculative`` entry to ``BENCH_decode.json`` so the
     acceptance-rate trajectory persists across PRs.
     """
-    import json
     import time
 
     import jax
@@ -533,19 +510,7 @@ def _speculative_rows() -> list:
         "draft_decode_compiles": rt.draft_decode_traces,
         "drain_s": {"plain": s_plain, "speculative": s_spec},
     }
-    history = {"entries": []}
-    try:
-        with open("BENCH_decode.json") as f:
-            prev = json.load(f)
-        if isinstance(prev, dict) and isinstance(prev.get("entries"), list):
-            history = prev
-        elif isinstance(prev, dict) and prev:
-            history["entries"].append(prev)
-    except (FileNotFoundError, json.JSONDecodeError):
-        pass
-    history["entries"].append(entry)
-    with open("BENCH_decode.json", "w") as f:
-        json.dump(history, f, indent=2)
+    append_dated_entry("BENCH_decode.json", entry)
     return [
         ("serve_spec_decode", s_spec * 1e6,
          f"accepted_per_launch={per_launch:.2f};"
@@ -581,7 +546,6 @@ def _goodput_overload_rows() -> list:
     ``BENCH_goodput.json`` accumulates one dated entry per run, the same
     trajectory pattern as ``BENCH_decode.json``.
     """
-    import json
     import time
 
     import jax
@@ -605,15 +569,13 @@ def _goodput_overload_rows() -> list:
         rt = ServiceRuntime(cfg, params,
                             dataclasses.replace(plan, admission=policy))
         rng = np.random.default_rng(7)
-        results, rejects, t = [], [], 0.0
+        agg, t = StepStatsAggregator(), 0.0
         deadlines = {}                # rid -> deadline (0 = none)
 
         def drain():
             nonlocal t
             while rt.pending() or rt.in_flight():
-                st = rt.step(now=t)
-                results.extend(st.results)
-                rejects.extend(st.rejected)
+                agg.add(rt.step(now=t))
                 t += 1.0
                 assert t < 5000.0, "engine failed to drain"
 
@@ -634,7 +596,7 @@ def _goodput_overload_rows() -> list:
                 max_new_tokens=long_new), now=t)
             submitted += 1
         for _ in range(2):
-            results.extend(rt.step(now=t).results)
+            agg.add(rt.step(now=t))
             t += 1.0
         # ...then urgent shorts stream in at ~2x the slot turnover rate
         for i in range(n_urgent):
@@ -645,15 +607,13 @@ def _goodput_overload_rows() -> list:
                 max_new_tokens=4, deadline_s=t + budget), now=t)
             submitted += 1
             for _ in range(3):
-                st = rt.step(now=t)
-                results.extend(st.results)
-                rejects.extend(st.rejected)
+                agg.add(rt.step(now=t))
                 t += 1.0
         drain()
-        ontime = sum(1 for r in results
+        ontime = sum(1 for r in agg.results
                      if not deadlines.get(r.rid)
                      or r.finished_s <= deadlines[r.rid])
-        return rt, results, rejects, ontime, submitted
+        return rt, agg.results, agg.rejected, ontime, submitted
 
     def _measure(policy):
         (rt, results, rejects, ontime, submitted), us = timed(_trace, policy)
@@ -692,17 +652,7 @@ def _goodput_overload_rows() -> list:
         "goodput_ratio": ratio,
         "bit_identical_rids": len(both),
     }
-    history = {"entries": []}
-    try:
-        with open("BENCH_goodput.json") as f:
-            prev = json.load(f)
-        if isinstance(prev, dict) and isinstance(prev.get("entries"), list):
-            history = prev
-    except (FileNotFoundError, json.JSONDecodeError):
-        pass
-    history["entries"].append(entry)
-    with open("BENCH_goodput.json", "w") as f:
-        json.dump(history, f, indent=2)
+    append_dated_entry("BENCH_goodput.json", entry)
     return [
         ("serve_goodput_fifo", fifo["wall_us"],
          f"ontime={fifo['goodput_ontime']}/{fifo['submitted']};"

@@ -27,7 +27,21 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=18)
     ap.add_argument("--servers", type=int, default=3)
+    ap.add_argument("--trace-out", default="",
+                    help="write a Chrome-trace JSON of request lifecycles "
+                         "and engine phases (Perfetto-loadable)")
+    ap.add_argument("--metrics-out", default="",
+                    help="write Prometheus text exposition (or a JSONL "
+                         "snapshot when the path ends in .jsonl)")
     args = ap.parse_args()
+
+    tracer = metrics = None
+    if args.trace_out:
+        from repro.obs import Tracer
+        tracer = Tracer()
+    if args.metrics_out:
+        from repro.obs import MetricsRegistry
+        metrics = MetricsRegistry()
 
     specs, cfgs = {}, {}
     for a in ARCHS:
@@ -62,7 +76,9 @@ def main():
         cfg = cfgs[svc]
         params = model_api(cfg).init(
             jax.random.PRNGKey(abs(hash(svc)) % 2**31), cfg)
-        engines[sid].deploy(svc, ServiceRuntime(cfg, params, cp.plans[svc]))
+        engines[sid].deploy(svc, ServiceRuntime(cfg, params, cp.plans[svc],
+                                                tracer=tracer,
+                                                metrics=metrics))
 
     cp.publish_all(0.0)
     for _ in range(args.servers):
@@ -112,6 +128,15 @@ def main():
           f"chunks) in {dt:.1f}s — handler outcomes: {outcomes}")
     print(f"paged arena: {traces} decode compiles across {deployed} "
           f"deployed runtimes, {copies} whole-cache admission copies")
+    if tracer is not None:
+        tracer.export(args.trace_out)
+        print(f"trace: {tracer.emitted} events -> {args.trace_out}")
+    if metrics is not None:
+        if args.metrics_out.endswith(".jsonl"):
+            metrics.append_jsonl(args.metrics_out)
+        else:
+            metrics.write_prometheus(args.metrics_out)
+        print(f"metrics -> {args.metrics_out}")
     assert len(results) == args.requests
     assert copies == 0          # arena admissions never copy the live batch
 

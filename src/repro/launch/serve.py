@@ -115,6 +115,21 @@ def main(argv=None) -> int:
                          "diverge copy-on-write (capped by the plan's "
                          "category-derived resolved_n_samples; >1 is "
                          "only diverse with a stochastic sampler)")
+    ap.add_argument("--trace-out", default="",
+                    help="write a Chrome-trace-event JSON of every "
+                         "request's lifecycle spans and the engine's "
+                         "per-step phases to this path (load in Perfetto "
+                         "or chrome://tracing); default off — the tracer "
+                         "is byte-inert either way")
+    ap.add_argument("--metrics-out", default="",
+                    help="write the metrics registry to this path at the "
+                         "end of the run: Prometheus text exposition, or "
+                         "a JSONL snapshot when the path ends in .jsonl")
+    ap.add_argument("--calibrate-out", default="",
+                    help="fold the run's measured telemetry (speculative "
+                         "acceptance, prefix hit rates, prefill cost) "
+                         "into SimConfig overrides and write the "
+                         "calibration report JSON to this path")
     ap.add_argument("--pjit-decode", action="store_true",
                     help="build each service's fused paged decode step "
                          "under pjit on a (1, device_count) service mesh "
@@ -190,6 +205,16 @@ def main(argv=None) -> int:
 
     # data plane: one engine per server, reduced models
     engines = {s.sid: EparaServingEngine() for s in servers}
+    # observability (repro/obs): one tracer + one registry shared by every
+    # runtime — service names become trace processes / metric labels.
+    # Default off; enabled it is still byte-inert (asserted by the tests)
+    tracer = metrics = None
+    if args.trace_out:
+        from repro.obs import Tracer
+        tracer = Tracer()
+    if args.metrics_out:
+        from repro.obs import MetricsRegistry
+        metrics = MetricsRegistry()
     rng = np.random.default_rng(args.seed)
     import dataclasses as _dc
     step_builder = None
@@ -236,7 +261,8 @@ def main(argv=None) -> int:
                             paged_step_builder=step_builder,
                             preempt=not args.no_preempt,
                             draft_params=draft_params if compat else None,
-                            draft_cfg=draft_cfg if compat else None)
+                            draft_cfg=draft_cfg if compat else None,
+                            tracer=tracer, metrics=metrics)
         engines[sid].deploy(svc, rt)
 
     # drive requests through handler -> engine
@@ -370,6 +396,29 @@ def main(argv=None) -> int:
           f"{sum(rt.admission.resumes for rt in rts)} resumes, "
           f"{resubmitted} offload-verdict resubmissions, "
           f"{len(final_rejects)} final rejects")
+    if tracer is not None:
+        tracer.export(args.trace_out)
+        print(f"trace: {tracer.emitted} events "
+              f"({tracer.dropped} dropped by the ring) -> {args.trace_out}")
+    if metrics is not None:
+        if args.metrics_out.endswith(".jsonl"):
+            metrics.append_jsonl(args.metrics_out)
+        else:
+            metrics.write_prometheus(args.metrics_out)
+        print(f"metrics: {len(metrics._metrics)} series -> "
+              f"{args.metrics_out}")
+    if args.calibrate_out:
+        from repro.obs import (merge_telemetry, telemetry_from_runtime,
+                               write_calibration)
+        tel = merge_telemetry(
+            telemetry_from_runtime(name, rt)
+            for eng in engines.values()
+            for name, rt in eng.runtimes.items())
+        cal = write_calibration(args.calibrate_out, tel)
+        print(f"calibration: spec_accept_rate={cal.spec_accept_rate:.3f} "
+              f"prefix_hit_rates={cal.prefix_hit_rates or {}} "
+              f"prefill_token_s={cal.prefill_token_s:.2e} -> "
+              f"{args.calibrate_out}")
     # every request is accounted for: served, or rejected with a verdict
     return 0 if len(results) + len(final_rejects) == args.requests else 1
 

@@ -96,6 +96,7 @@ from repro.core.allocator import DPGroupRouter, ParallelPlan
 from repro.core.categories import Outcome
 from repro.models.config import ModelConfig
 from repro.models.registry import ModelApi, model_api
+from repro.obs.trace import NULL_TRACER
 
 from . import kvcache
 from .admission import AdmissionController, AdmissionReject, ParkedEntry
@@ -326,7 +327,9 @@ class ServiceRuntime:
                  admission_policy: Optional[str] = None,
                  preempt: bool = True,
                  draft_params=None, draft_cfg: Optional[ModelConfig] = None,
-                 speculate: Optional[int] = None):
+                 speculate: Optional[int] = None,
+                 tracer=None, metrics=None,
+                 obs_name: Optional[str] = None):
         if mode not in ("continuous", "sync"):
             raise ValueError(f"mode must be continuous|sync, got {mode!r}")
         if kvcache_impl not in ("paged", "dense"):
@@ -353,6 +356,19 @@ class ServiceRuntime:
         self.block_size = block_size
         self.pool_blocks = pool_blocks
         self.on_evict = on_evict
+        # -- observability (repro/obs): default-off and byte-inert --------
+        # the NULL_TRACER's ``enabled = False`` lets every call site skip
+        # building args entirely; neither layer ever touches a jax value,
+        # so enabling them cannot change tokens or compile counts
+        self.trace = NULL_TRACER if tracer is None else tracer
+        self.metrics = metrics
+        self._obs_named = obs_name is not None
+        self.obs_name = obs_name if obs_name is not None else cfg.name
+        self.prefill_seconds = 0.0   # cumulative per-request prefill wall
+        #                              time (calibration's prefill_token_s
+        #                              numerator)
+        self._submit_wall: Dict[int, float] = {}  # rid -> submit wall time
+        self._queue_wait: Dict[int, float] = {}   # rid -> measured wait
         self.api: ModelApi = model_api(cfg)
         self.router = DPGroupRouter(plan)
         self.composer = make_composer(plan)
@@ -619,6 +635,15 @@ class ServiceRuntime:
         if self.plan.sticky and req.stream:
             self._session_refs[req.stream] = \
                 self._session_refs.get(req.stream, 0) + 1
+        if self.metrics is not None or self.trace.enabled:
+            self._submit_wall[req.rid] = time.perf_counter()
+        tr = self.trace
+        if tr.enabled:
+            tid = str(req.rid)
+            tr.begin(self.obs_name, tid, "request",
+                     prompt_tokens=len(req.tokens),
+                     max_new=req.max_new_tokens, n_samples=req.n_samples)
+            tr.begin(self.obs_name, tid, "queued")
         self.composer.add(QueuedItem(payload=req, stream=req.stream,
                                      enqueued_s=now, rid=req.rid))
 
@@ -682,9 +707,39 @@ class ServiceRuntime:
             np.asarray(offsets, np.uint32), self.sampler, stream=stream,
             live=live, occupancy=occupancy)
 
+    def _obs_admitted(self, req: GenerationRequest, group: int,
+                      next_span: str, **args) -> None:
+        """Observability at an admission transition: record the measured
+        queue wait (submit -> first admission; resumes keep the
+        original), close the request's innermost open span (``queued``,
+        or ``parked`` on a resume) and open the next lifecycle span."""
+        if self._submit_wall:
+            t = self._submit_wall.pop(req.rid, None)
+            if t is not None:
+                self._queue_wait[req.rid] = max(
+                    0.0, time.perf_counter() - t)
+        tr = self.trace
+        if tr.enabled:
+            tid = str(req.rid)
+            tr.end(self.obs_name, tid, group=group)
+            tr.begin(self.obs_name, tid, next_span, **args)
+
+    def _slot_tid(self, s: _Slot) -> str:
+        """The slot's trace timeline: the request id, with n>1 sampling
+        forks on their own ``rid.sample`` lane."""
+        return (str(s.req.rid) if s.sample_idx == 0
+                else f"{s.req.rid}.{s.sample_idx}")
+
     def _finish_request(self, req: GenerationRequest, group: int) -> None:
         """Session-pin bookkeeping + user hook, fired whenever a request
         leaves the data plane (slot eviction or sync-batch completion)."""
+        self._submit_wall.pop(req.rid, None)
+        self._queue_wait.pop(req.rid, None)
+        if self.trace.enabled:
+            # balanced no matter where the request died: close() ends
+            # every still-open span (a shed request's verdict close
+            # already emptied the stack, making this a no-op)
+            self.trace.close(self.obs_name, str(req.rid), outcome="served")
         if self.plan.sticky and req.stream:
             left = self._session_refs.get(req.stream, 1) - 1
             if left <= 0:
@@ -710,6 +765,11 @@ class ServiceRuntime:
             self._sibling_refs[req.rid] = refs - 1
 
     def _note_service_time(self, res: GenerationResult) -> None:
+        if res.sample == 0:
+            # forks carry the primary's prefill_s but paid no prefill
+            # compute: count the wall time once or the calibration's
+            # prefill_token_s numerator double-counts
+            self.prefill_seconds += max(0.0, res.prefill_s)
         t = max(1e-6, res.prefill_s + max(0.0, res.decode_s))
         self._service_ewma_s = (t if self._service_ewma_s == 0.0
                                 else 0.8 * self._service_ewma_s + 0.2 * t)
@@ -780,6 +840,17 @@ class ServiceRuntime:
             results.append(res)
             self._note_service_time(res)
             self.admission.observe(res)
+            if self.trace.enabled:
+                self.trace.end(self.obs_name, self._slot_tid(s),
+                               tokens=len(s.emitted), steps=s.steps)
+            if self.metrics is not None:
+                n = len(s.emitted)
+                self.metrics.observe_request(
+                    self.obs_name,
+                    ttft_s=max(0.0, s.decode_start_wall - s.admit_wall),
+                    tpot_s=(res.decode_s / (n - 1)) if n > 1 else None,
+                    queue_wait_s=self._queue_wait.get(s.req.rid, 0.0),
+                    new_tokens=n)
             if state.arena is not None:
                 if s.spec and state.draft is not None:
                     state.draft.free(s.slot_id)
@@ -908,6 +979,8 @@ class ServiceRuntime:
                     self._prefix_hit_ewma = (0.8 * self._prefix_hit_ewma
                                              + 0.2 * frac)
                 state.slots.append(slot)
+                self._obs_admitted(req, group, "prefill",
+                                   hit_tokens=slot.consumed)
                 return True
             if not arena.can_alloc(total):
                 return False
@@ -918,6 +991,7 @@ class ServiceRuntime:
         else:
             cache_size = int(len(req.tokens) + req.max_new_tokens)
 
+        self._obs_admitted(req, group, "prefill", oneshot=True)
         t0 = time.perf_counter()
         toks, _ = self._pad_prompts([req])
         batch = self._build_batch([req], toks)
@@ -947,6 +1021,12 @@ class ServiceRuntime:
         state.slots.append(_Slot(req, first, prefill_s=t1 - t0,
                                  admit_wall=t0, admitted_s=now,
                                  slot_id=slot_id, decode_start_wall=t1))
+        tr = self.trace
+        if tr.enabled:
+            tid = str(req.rid)
+            tr.end(self.obs_name, tid, tokens_computed=len(req.tokens))
+            tr.instant(self.obs_name, tid, "first_token")
+            tr.begin(self.obs_name, tid, "decode")
         return True
 
     def _resume_parked(self, req: GenerationRequest, state: _GroupState,
@@ -982,6 +1062,7 @@ class ServiceRuntime:
             # content (prompt AND generated KV) is served from resident
             # blocks — count it so the hit telemetry reflects the reuse
             state.prefix.note_resume(entry.cache_len)
+        self._obs_admitted(req, entry.group, "decode", resumed=True)
         return True
 
     def _park_slot(self, group: int, state: _GroupState, s: _Slot,
@@ -1011,6 +1092,12 @@ class ServiceRuntime:
         entry.blocks = arena.park(s.slot_id)
         state.slots.remove(s)
         self.admission.note_park(entry)
+        tr = self.trace
+        if tr.enabled:
+            tid = str(s.req.rid)
+            tr.end(self.obs_name, tid, reason="park",
+                   tokens=len(s.emitted))
+            tr.begin(self.obs_name, tid, "parked")
         self.composer.add(QueuedItem(payload=s.req, stream=s.req.stream,
                                      enqueued_s=now, rid=s.req.rid))
 
@@ -1064,6 +1151,11 @@ class ServiceRuntime:
             entry = self.admission.pop_parked(item.rid)
             if entry is not None:
                 self.groups[entry.group].arena.release_parked(entry.blocks)
+            if self.trace.enabled:
+                # the verdict lands on the outermost ("request") span;
+                # _finish_request's defensive close then no-ops
+                self.trace.close(self.obs_name, str(req.rid),
+                                 verdict=verdict.name)
             self._finish_request(req, -1)
             rejects.append(AdmissionReject(req=req, verdict=verdict,
                                            now=now))
@@ -1243,6 +1335,7 @@ class ServiceRuntime:
         final chunk's logits seed the request's first sampled token."""
         if state.arena is None or not self.chunked_prefill:
             return 0
+        tr = self.trace
         budget = self.prefill_chunk_tokens
         done_tokens = 0
         for s in state.slots:
@@ -1255,9 +1348,14 @@ class ServiceRuntime:
                     budget = 0
                     break
                 t0 = time.perf_counter()
+                ct0 = tr.clock() if tr.enabled else 0.0
                 logits, n_valid, T = self._run_chunk(state.arena, s, T)
                 budget -= T
                 done_tokens += n_valid
+                if tr.enabled:
+                    tr.complete(self.obs_name, str(s.req.rid),
+                                "prefill_chunk", ct0, tokens=n_valid,
+                                bucket=T)
                 if s.consumed >= len(s.req.tokens):
                     first = int(np.asarray(self._sample(
                         logits, [self._req_seed(s.req)],
@@ -1267,6 +1365,12 @@ class ServiceRuntime:
                     s.begin_decode(first, t1)
                     self._enable_spec(state, s)
                     self._spawn_forks(state, s, logits, t1)
+                    if tr.enabled:
+                        tid = str(s.req.rid)
+                        tr.end(self.obs_name, tid,
+                               tokens_computed=s.consumed)
+                        tr.instant(self.obs_name, tid, "first_token")
+                        tr.begin(self.obs_name, tid, "decode")
                     if state.prefix is not None:
                         # every FULL prompt block is now written and
                         # frozen: index the chain (hits extend existing
@@ -1421,6 +1525,8 @@ class ServiceRuntime:
         arena, draft = state.arena, state.draft
         cap = arena.capacity
         k = self.speculate_k
+        tr = self.trace
+        rt0 = tr.clock() if tr.enabled else 0.0
         live = np.zeros((cap,), bool)
         seeds = np.zeros((cap,), np.uint32)
         sids = np.zeros((cap,), np.uint32)
@@ -1480,6 +1586,7 @@ class ServiceRuntime:
                                               * arena.token_bytes)
         if self._verify_fn is None:
             self._verify_fn = self._build_verify_fn(arena)
+        tv0 = tr.clock() if tr.enabled else 0.0
         out, n_emit, arena.pages, arena.state, arena.lens = \
             self._verify_fn(
                 self.params, jnp.asarray(vtok), dlogits,
@@ -1488,6 +1595,9 @@ class ServiceRuntime:
                 jnp.asarray(offs), arena.device_block_tables(),
                 arena.device_occupancy())
         self.verify_launches += 1
+        if tr.enabled:
+            tr.complete(self.obs_name, "engine", "verify", tv0,
+                        slots=len(spec_slots), k=k)
         out_h, nem = np.asarray(out), np.asarray(n_emit)
         for s in spec_slots:
             sid = s.slot_id
@@ -1507,6 +1617,9 @@ class ServiceRuntime:
             dl = self._spec_goal(s)
             draft.set_len(sid, dl)
             s.draft_len = dl
+            if tr.enabled:
+                tr.complete(self.obs_name, str(s.req.rid), "spec_round",
+                            rt0, k=k, accepted=n)
 
     # -- n>1 parallel sampling: refcounted prompt-block forks -----------
     def _spawn_forks(self, state: _GroupState, s: _Slot, logits,
@@ -1552,6 +1665,12 @@ class ServiceRuntime:
             fork.begin_decode(int(first[i]), wall)
             state.slots.append(fork)
             spawned += 1
+            if self.trace.enabled:
+                # forks live on their own "rid.sample" lane carrying only
+                # a decode span: zero prefill is the point
+                ftid = self._slot_tid(fork)
+                self.trace.begin(self.obs_name, ftid, "decode", fork=True)
+                self.trace.instant(self.obs_name, ftid, "first_token")
         self.forks_spawned += spawned
         self.fork_shortfall += asked - spawned
         if spawned:
@@ -1691,9 +1810,14 @@ class ServiceRuntime:
                     self.params, jnp.asarray(tokens), arena.pages,
                     arena.state, arena.lens, live_dev,
                     arena.device_block_tables())
+            tr = self.trace
+            ts0 = tr.clock() if tr.enabled else 0.0
             toks = np.asarray(self._sample(
                 logits, seeds, sids, offs, live=live_dev,
                 occupancy=arena.device_occupancy()))
+            if tr.enabled:
+                tr.complete(self.obs_name, "engine", "sample", ts0,
+                            live=int(live.sum()))
             self.decode_steps += 1
             for slot in state.slots:
                 if slot.done or slot.prefilling or not live[slot.slot_id]:
@@ -1761,7 +1885,17 @@ class ServiceRuntime:
     def prefix_cow_copies(self) -> int:
         return self._prefix_totals()[4]
 
+    def _phase_mark(self, name: str, start: float, **args) -> float:
+        """Emit one engine-phase complete event ending NOW and return
+        that end — the next phase's start (contiguous phase track)."""
+        end = self.trace.clock()
+        self.trace.complete(self.obs_name, "engine", name, start, end,
+                            **args)
+        return end
+
     def _step_continuous(self, now: float, max_wait_s: float) -> StepStats:
+        tr = self.trace
+        t_phase = step_t0 = tr.clock() if tr.enabled else 0.0
         copy0, whole0 = self.admission_copy_bytes, self.whole_cache_copies
         chunkw0 = self.chunk_write_bytes
         steps0, one0 = self.decode_steps, self.oneshot_prefills
@@ -1773,6 +1907,9 @@ class ServiceRuntime:
         results: List[GenerationResult] = []
         for group, state in self.groups.items():
             results.extend(self._evict(group, state, now))
+        if tr.enabled:
+            t_phase = self._phase_mark("evict", t_phase,
+                                       evicted=len(results))
         # admission control (inert under the "fifo" policy): learn the
         # caller's clock, shed with verdicts, order by slack, then park a
         # victim if the urgent head can't wait — all BEFORE compose so
@@ -1785,13 +1922,29 @@ class ServiceRuntime:
             ctrl.order(now)          # slack order FIRST: shed walks it
             rejected = self._shed_rejected(now)
             self._maybe_preempt(now)
+            if tr.enabled:
+                t_phase = self._phase_mark(
+                    "preempt", t_phase, shed=len(rejected),
+                    parked=ctrl.preemptions - preempt0)
         admitted = self._admit(now, max_wait_s)
+        if tr.enabled:
+            t_phase = self._phase_mark("admit", t_phase, admitted=admitted)
         chunk_tokens = 0
         for state in self.groups.values():
-            chunk_tokens += self._prefill_chunks(state)
+            n = self._prefill_chunks(state)
+            chunk_tokens += n
             self._draft_chunks(state)
+            if tr.enabled:
+                t_phase = self._phase_mark("chunk", t_phase, tokens=n)
             self._decode_group(state)
+            if tr.enabled:
+                t_phase = self._phase_mark("fused_decode", t_phase)
         pfx1 = self._prefix_totals()
+        if tr.enabled:
+            tr.complete(self.obs_name, "engine", "step", step_t0,
+                        admitted=admitted, evicted=len(results),
+                        in_flight=self.in_flight(),
+                        pending=self.pending())
         verdict_count = lambda v: sum(1 for r in rejected
                                       if r.verdict is v)
         return StepStats(
@@ -1892,9 +2045,11 @@ class ServiceRuntime:
         telemetry.  Continuous mode: evict / admit / one fused decode
         step.  Sync mode: compose one batch (BS or MF semantics) and run
         it to completion."""
-        if self.mode == "sync":
-            return self._step_sync(now, max_wait_s)
-        return self._step_continuous(now, max_wait_s)
+        stats = (self._step_sync(now, max_wait_s) if self.mode == "sync"
+                 else self._step_continuous(now, max_wait_s))
+        if self.metrics is not None:
+            self.metrics.observe_step(self.obs_name, stats, runtime=self)
+        return stats
 
     def drain(self, now: float = 0.0,
               max_wait_s: float = 0.0) -> List[GenerationResult]:
@@ -1927,6 +2082,10 @@ class EparaServingEngine:
         self._results: List[GenerationResult] = []
 
     def deploy(self, name: str, runtime: ServiceRuntime) -> None:
+        if not runtime._obs_named:
+            # observability labels follow the DEPLOYED name (two services
+            # can share a ModelConfig), unless the caller pinned one
+            runtime.obs_name = name
         self.runtimes[name] = runtime
 
     def submit(self, service: str, req: GenerationRequest,
