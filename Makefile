@@ -2,7 +2,8 @@ PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
 .PHONY: test smoke bench bench-paged bench-chunked bench-prefix \
-	bench-decode bench-spec bench-goodput serve obs-smoke quickstart
+	bench-decode bench-spec bench-goodput bench-chaos serve obs-smoke \
+	chaos-smoke quickstart
 
 test:                ## tier-1 suite
 	python -m pytest -x -q
@@ -37,8 +38,15 @@ bench-goodput:       ## sdf admission + parking preemption vs fifo
 	REPRO_BENCH_SMOKE=$${REPRO_BENCH_SMOKE:-0} PYTHONHASHSEED=0 \
 	REPRO_BENCH_SECTION=goodput python -m benchmarks.continuous_batching
 
+bench-chaos:         ## crash-mid-burst recovery vs failure-free oracle
+	REPRO_BENCH_SMOKE=$${REPRO_BENCH_SMOKE:-0} PYTHONHASHSEED=0 \
+	REPRO_BENCH_SECTION=chaos python -m benchmarks.continuous_batching
+
 serve:               ## end-to-end serving driver
 	python -m repro.launch.serve
+
+chaos-smoke:         ## crash one server mid-burst; all rids must account
+	python examples/serve_cluster.py --requests 9 --chaos
 
 obs-smoke:           ## tiny traced+metered serve; validate the artifacts
 	python -m repro.launch.serve --archs minicpm-2b --requests 6 \

@@ -667,6 +667,127 @@ def _goodput_overload_rows() -> list:
     ]
 
 
+def _chaos_rows() -> list:
+    """Fault-tolerant serving under a deterministic crash (§5.3.3): a
+    3-server toy cluster serves a bursty deadline-carrying trace while
+    server 0 is crashed mid-burst and restarted a few rounds later.  The
+    supervisor evacuates the corpse's queued/in-flight/parked requests
+    and resubmits them to survivors with timeout/backoff; the restarted
+    server rejoins cold via ``repair()`` + re-publish.
+
+    Acceptance (asserted):
+      * on-time goodput under the crash >= 0.6x the failure-free run;
+      * zero silently lost requests: served + verdicted == submitted;
+      * every retried request's greedy tokens are bit-identical to the
+        failure-free oracle's (counter-stream sampling replays exactly);
+      * decode compiles exactly once per surviving service runtime;
+      * the crashed server is repaired by the end (cluster healed).
+
+    Appends a dated ``chaos`` entry to ``BENCH_goodput.json``.
+    """
+    import time
+
+    import jax
+
+    from repro.core import EdgeCloudControlPlane, ServerSpec, ServiceSpec
+    from repro.core.faults import FaultEvent, FaultInjector, FaultSpec
+    from repro.models import transformer as T
+    from repro.serving.engine import (EparaServingEngine, GenerationRequest,
+                                      ServiceRuntime)
+    from repro.serving.failover import ClusterSupervisor, RetryPolicy
+
+    cfg = _toy_cfg()
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    n_requests = 9 if _smoke() else 18
+    budget = 40.0                    # deadline: submit + budget ticks
+    spec = FaultSpec(events=(
+        FaultEvent(at_s=2.0, kind="crash", sid=0),
+        FaultEvent(at_s=8.0, kind="restart", sid=0)))
+
+    def _cluster():
+        specs = {"chat": ServiceSpec("chat", flops_per_request=1e10,
+                                     weights_bytes=2e8, vram_bytes=5e8,
+                                     slo_latency_s=100.0)}
+        servers = [ServerSpec(sid=i, num_gpus=2) for i in range(3)]
+        cp = EdgeCloudControlPlane(servers, specs)
+        cp.run_placement({("chat", i): 10.0 for i in range(3)})
+        engines = {s.sid: EparaServingEngine() for s in servers}
+        for sid in engines:
+            engines[sid].deploy("chat", ServiceRuntime(cfg, params,
+                                                       cp.plans["chat"]))
+        cp.publish_all(0.0)
+        for _ in range(3):
+            cp.sync_step(0.0)
+        return cp, engines
+
+    def _serve(chaos):
+        cp, engines = _cluster()
+        injector = FaultInjector(spec) if chaos else None
+        sup = ClusterSupervisor(cp, engines,
+                                retry=RetryPolicy(base_timeout_s=4.0),
+                                injector=injector)
+        rng = np.random.default_rng(11)
+        for i in range(n_requests):
+            sup.submit("chat", GenerationRequest(
+                rid=i, tokens=rng.integers(1, cfg.vocab_size,
+                                           6).astype(np.int32),
+                max_new_tokens=4, deadline_s=budget, stream=i),
+                at_server=i % 3, now=0.0)
+        report = sup.run_until_idle()
+        assert report.accounted == n_requests, \
+            ("silently lost requests", chaos, report.accounted)
+        ontime = sum(1 for r in report.results
+                     if r.sample == 0 and r.finished_s <= budget)
+        for sid, eng in engines.items():
+            for rt in eng.runtimes.values():
+                assert rt.decode_traces <= 1, (sid, rt.decode_traces)
+                if chaos and sid != 0:
+                    assert rt.decode_traces == 1, ("survivor idle", sid)
+        if chaos:
+            assert not sup.down, "crashed server was never repaired"
+            assert report.evacuated > 0 and report.failovers > 0
+        toks = {r.rid: tuple(int(x) for x in r.tokens)
+                for r in report.results if r.sample == 0}
+        return report, ontime, toks
+
+    (base, ontime_base, toks_base), us_base = timed(_serve, False)
+    (chaos, ontime_chaos, toks_chaos), us_chaos = timed(_serve, True)
+    ratio = ontime_chaos / max(1, ontime_base)
+    assert ratio >= 0.6, (ontime_chaos, ontime_base)
+    both = set(toks_base) & set(toks_chaos)
+    bad = sorted(r for r in both if toks_base[r] != toks_chaos[r])
+    assert both and not bad, bad
+    entry = {
+        "date": time.strftime("%Y-%m-%d %H:%M:%S"),
+        "section": "chaos",
+        "workload": {"servers": 3, "requests": n_requests,
+                     "deadline_budget_ticks": budget, "smoke": _smoke(),
+                     "fault_spec": spec.to_json()},
+        "failure_free": {"ontime": ontime_base, "rounds": base.rounds,
+                         "wall_us": us_base},
+        "chaos": {"ontime": ontime_chaos, "rounds": chaos.rounds,
+                  "evacuated": chaos.evacuated,
+                  "failovers": chaos.failovers,
+                  "duplicates": chaos.duplicates,
+                  "verdicted": len(chaos.rejects),
+                  "wall_us": us_chaos},
+        "goodput_ratio": ratio,
+        "bit_identical_rids": len(both),
+    }
+    append_dated_entry("BENCH_goodput.json", entry)
+    return [
+        ("serve_chaos_free", us_base,
+         f"ontime={ontime_base}/{n_requests};rounds={base.rounds}"),
+        ("serve_chaos_crash", us_chaos,
+         f"ontime={ontime_chaos}/{n_requests};"
+         f"evacuated={chaos.evacuated};failovers={chaos.failovers};"
+         f"verdicted={len(chaos.rejects)}"),
+        ("serve_chaos_ratio", 0.0,
+         f"chaos_over_free={ratio:.2f}x;bit_identical_rids={len(both)};"
+         f"json=BENCH_goodput.json"),
+    ]
+
+
 def _simulator_rows() -> list:
     import dataclasses
 
@@ -699,14 +820,16 @@ def _simulator_rows() -> list:
 
 def run() -> list:
     """REPRO_BENCH_SECTION selects sections (comma list of
-    live|chunked|prefix|decode|spec|goodput|sim); unset runs them all.
+    live|chunked|prefix|decode|spec|goodput|chaos|sim); unset runs them
+    all.
     ``make bench-paged`` pins ``live,sim``, ``make bench-chunked`` pins
     ``chunked``, ``make bench-prefix`` pins ``prefix``, ``make
     bench-decode`` pins ``decode`` (which also writes
     ``BENCH_decode.json``), ``make bench-spec`` pins ``spec`` (appending
-    a speculative entry to the same json) and ``make bench-goodput`` pins
-    ``goodput`` (``BENCH_goodput.json``) so the targets do not re-run
-    each other's workloads."""
+    a speculative entry to the same json), ``make bench-goodput`` pins
+    ``goodput`` (``BENCH_goodput.json``) and ``make bench-chaos`` pins
+    ``chaos`` (appending a crash-recovery entry to the same json) so the
+    targets do not re-run each other's workloads."""
     sections = [s for s in os.environ.get("REPRO_BENCH_SECTION",
                                           "").split(",") if s]
     rows: list = []
@@ -722,6 +845,8 @@ def run() -> list:
         rows.extend(_speculative_rows())
     if not sections or "goodput" in sections:
         rows.extend(_goodput_overload_rows())
+    if not sections or "chaos" in sections:
+        rows.extend(_chaos_rows())
     if not sections or "sim" in sections:
         rows.extend(_simulator_rows())
     return rows

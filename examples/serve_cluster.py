@@ -16,9 +16,11 @@ import numpy as np
 from repro.configs import get_config, reduced
 from repro.core import (EdgeCloudControlPlane, Outcome, Request, ServerSpec,
                         ServiceSpec, Sensitivity)
+from repro.core.faults import FaultEvent, FaultInjector, FaultSpec
 from repro.models.registry import model_api
 from repro.serving.engine import (EparaServingEngine, GenerationRequest,
                                   ServiceRuntime)
+from repro.serving.failover import ClusterSupervisor, RetryPolicy
 
 ARCHS = ["codeqwen1.5-7b", "mamba2-2.7b", "paligemma-3b"]
 
@@ -27,6 +29,11 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=18)
     ap.add_argument("--servers", type=int, default=3)
+    ap.add_argument("--chaos", action="store_true",
+                    help="crash one server mid-burst (then restart it): "
+                         "its queued/in-flight/parked requests evacuate "
+                         "to survivors and every rid must still end "
+                         "served-or-verdicted")
     ap.add_argument("--trace-out", default="",
                     help="write a Chrome-trace JSON of request lifecycles "
                          "and engine phases (Perfetto-loadable)")
@@ -85,33 +92,40 @@ def main():
         cp.sync_step(0.0)
 
     t0 = time.time()
-    outcomes = {}
+    injector = None
+    if args.chaos:
+        # deterministic mid-burst crash of one service host, restarted a
+        # few rounds later (rejoins via repair + re-publish); the first
+        # logical round is t=1.0, so at_s=2.0 lands while requests are
+        # still queued or decoding
+        victim = next(sid for sid, e in engines.items() if e.runtimes)
+        injector = FaultInjector(FaultSpec(events=(
+            FaultEvent(at_s=2.0, kind="crash", sid=victim),
+            FaultEvent(at_s=6.0, kind="restart", sid=victim))))
+        print(f"chaos: crash server {victim} at t=2, restart at t=6")
+    supervisor = ClusterSupervisor(cp, engines,
+                                   retry=RetryPolicy(base_timeout_s=4.0),
+                                   injector=injector, metrics=metrics,
+                                   tracer=tracer)
     for i in range(args.requests):
         svc = ARCHS[i % len(ARCHS)]
         cfg = cfgs[svc]
         at = int(rng.integers(0, args.servers))
-        d = cp.handle(Request(rid=i, service=svc, arrival_s=0.0,
-                              deadline_s=1e9), now=0.0, at_server=at)
-        outcomes[d.outcome.value] = outcomes.get(d.outcome.value, 0) + 1
-        target = d.destination if d.outcome == Outcome.OFFLOAD else at
-        if svc not in engines[target].runtimes:
-            target = next(s for s, e in engines.items()
-                          if svc in e.runtimes)
         extras = None
         if cfg.family == "vlm":
             extras = {"embeddings": np.zeros((cfg.prefix_len, cfg.d_model),
                                              np.float32)}
-        engines[target].submit(svc, GenerationRequest(
+        supervisor.submit(svc, GenerationRequest(
             rid=i, tokens=rng.integers(0, cfg.vocab_size, 8,
                                        dtype=np.int64).astype(np.int32),
-            max_new_tokens=6, stream=i % 4, extras=extras))
-    # step every runtime to completion, feeding each round's queue-time
-    # estimate back into the handler's view (StepStats telemetry)
-    results = []
-    for sid, eng in engines.items():
-        results.extend(eng.serve_until_idle(
-            on_stats=lambda svc, st, sid=sid:
-                cp.set_queue_time(sid, svc, st.queue_time_s)))
+            max_new_tokens=6, stream=i % 4, extras=extras),
+            at_server=at, now=0.0)
+    # the supervisor steps every runtime until each rid is served or
+    # verdicted, feeding queue-time estimates back to the handler state
+    # and recovering from any injected faults along the way
+    report = supervisor.run_until_idle()
+    results = report.results
+    outcomes = report.outcomes
     dt = time.time() - t0
     toks = sum(len(r.tokens) for r in results)
     steps = sum(rt.decode_steps for eng in engines.values()
@@ -128,6 +142,11 @@ def main():
           f"chunks) in {dt:.1f}s — handler outcomes: {outcomes}")
     print(f"paged arena: {traces} decode compiles across {deployed} "
           f"deployed runtimes, {copies} whole-cache admission copies")
+    if args.chaos:
+        print(f"chaos: {report.evacuated} evacuated, {report.failovers} "
+              f"failovers, {report.duplicates} duplicates deduplicated, "
+              f"{len(report.rejects)} verdicted, "
+              f"accounted {report.accounted}/{args.requests}")
     if tracer is not None:
         tracer.export(args.trace_out)
         print(f"trace: {tracer.emitted} events -> {args.trace_out}")
@@ -137,7 +156,13 @@ def main():
         else:
             metrics.write_prometheus(args.metrics_out)
         print(f"metrics -> {args.metrics_out}")
-    assert len(results) == args.requests
+    # served-or-verdicted: every rid is accounted for even when a server
+    # crashed mid-burst (chaos mode); without faults nothing may be
+    # verdicted at all
+    assert report.accounted == args.requests, \
+        (report.accounted, args.requests)
+    if not args.chaos:
+        assert len({r.rid for r in results}) == args.requests
     assert copies == 0          # arena admissions never copy the live batch
 
 

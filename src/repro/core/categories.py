@@ -51,6 +51,15 @@ class Outcome(str, enum.Enum):
     * ``CONGESTION`` — hard local backpressure (queue beyond the
       congestion bound); the request itself may still be feasible on an
       idle peer, so the handler treats this like a saturated-local signal.
+
+    Fault-tolerance verdict (§5.3.3 recovery, ``core/faults.py``):
+
+    * ``FAILED`` — the request was lost to an injected or real fault
+      (crashed server, dropped offload) and could not be replayed on any
+      survivor within its retry budget.  The TERMINAL verdict of the
+      recovery path: every rid must end served-or-verdicted, so a request
+      that exhausts its failover attempts carries this instead of
+      silently vanishing with its dead arena.
     """
     LOCAL = "local"                       # solve on this server's GPUs
     LOCAL_CROSS = "local_cross_server"    # cross-server-parallel group
@@ -62,12 +71,13 @@ class Outcome(str, enum.Enum):
     ADMIT = "admit"
     DEADLINE_MISSED = "deadline_missed"
     CONGESTION = "congestion"
+    FAILED = "failed"
 
 
 # Admission verdicts a rejected request can carry (every non-admitted
 # request MUST carry exactly one of these — no verdict-less drops).
 REJECT_VERDICTS = (Outcome.DEADLINE_MISSED, Outcome.CONGESTION,
-                   Outcome.OFFLOAD)
+                   Outcome.OFFLOAD, Outcome.FAILED)
 
 
 class Operator(str, enum.Enum):

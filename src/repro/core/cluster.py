@@ -44,6 +44,7 @@ class EdgeCloudControlPlane:
                  placement_interval_s: float = 60.0,
                  sync_bandwidth_gbps: float = 1.0,
                  max_offload_count: int = 5,
+                 peer_staleness_s: Optional[float] = None,
                  seed: int = 0):
         self.servers = list(servers)
         self.services = dict(services)
@@ -55,15 +56,26 @@ class EdgeCloudControlPlane:
         self.messager: Dict[int, ServerSpec] = {s.sid: s for s in servers}
         self.plans: Dict[str, ParallelPlan] = {
             name: allocate(svc, gpu) for name, svc in self.services.items()}
-        self.handlers: Dict[int, RequestHandler] = {
-            s.sid: RequestHandler(s.sid,
-                                  max_offload_count=max_offload_count,
-                                  seed=seed)
-            for s in servers}
         self.sync = RingSynchronizer(
             [s.sid for s in servers], interval_s=sync_interval_s,
             bandwidth_gbps=sync_bandwidth_gbps,
             num_services=max(1, len(services)))
+        # degraded-mode guard (§5.3.3): a peer whose digest is older than
+        # this bound is treated as DOWN by every handler — a silently
+        # crashed server stops refreshing, and its frozen view would
+        # otherwise advertise pre-crash idle goodput.  The default gives
+        # every publish a full ring traversal plus one spare interval of
+        # slack before a peer is written off.
+        if peer_staleness_s is None:
+            peer_staleness_s = ((len(self.servers) + 1) * sync_interval_s
+                                + self.sync.round_cost_s)
+        self.peer_staleness_s = peer_staleness_s
+        self.handlers: Dict[int, RequestHandler] = {
+            s.sid: RequestHandler(s.sid,
+                                  max_offload_count=max_offload_count,
+                                  staleness_bound_s=peer_staleness_s,
+                                  seed=seed)
+            for s in servers}
         self.meter = GoodputMeter()
         self.placements: List[Placement] = []
         self.devices: Dict[int, EdgeDevice] = {}
@@ -152,9 +164,35 @@ class EdgeCloudControlPlane:
     def set_queue_time(self, sid: int, service: str, seconds: float) -> None:
         self._queue_time[(sid, service)] = seconds
 
+    # -- failure handling (§5.3.3) ----------------------------------------
+    def fail_server(self, sid: int, now: float) -> None:
+        """Mark a server crashed: the ring heals around it (exchange
+        rounds bypass it) and every peer view flags it unavailable.  The
+        sid's queued-time feedback is dropped so a later restart starts
+        from a clean signal instead of pre-crash backpressure."""
+        self.sync.fail(sid)
+        for key in [k for k in self._queue_time if k[0] == sid]:
+            del self._queue_time[key]
+
+    def repair_server(self, sid: int, now: float) -> None:
+        """Restart rejoin: lift the failure flag (the restarted process
+        comes back with an empty sync cache) and re-publish its local
+        digest so ring rounds re-propagate a FRESH view — peers stop
+        excluding it once the new stamp reaches them."""
+        self.sync.repair(sid)
+        self.sync.publish_local(sid, self.local_view(sid, now), now)
+
+    @property
+    def failed_servers(self) -> frozenset:
+        return self.sync.failed
+
     # -- request handling (fine granularity) ---------------------------------
     def handle(self, req: Request, now: float, at_server: int) -> Decision:
         svc = self.services[req.service]
         local = self.local_view(at_server, now)
         peers = self.sync.views_for(at_server, now)
+        if at_server in self.sync.failed:
+            # degraded mode: a request can't originate AT a dead server —
+            # its local state is gone, so only the offload ladder applies
+            local = ServerView(sid=at_server, services={}, available=False)
         return self.handlers[at_server].handle(req, now, svc, local, peers)

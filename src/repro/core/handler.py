@@ -14,7 +14,11 @@ Key paper semantics implemented here:
   (Eq. 1);
 * destination exclusion when queued compute time exceeds t_n + SLO_r;
 * loop-free paths (servers already on the request's path are excluded) and
-  a bounded offload count (default 5, §4.1).
+  a bounded offload count (default 5, §4.1);
+* staleness-bound exclusion (§5.3.3 degraded mode): a peer whose view is
+  older than ``staleness_bound_s`` is treated as DOWN, not scored on its
+  last-known (possibly pre-crash) idle goodput — a silently dead server's
+  frozen digest would otherwise look idle, hence maximally attractive.
 """
 from __future__ import annotations
 
@@ -67,9 +71,14 @@ class RequestHandler:
     """One per edge server; stateless across requests except for the RNG."""
 
     def __init__(self, sid: int, *, max_offload_count: int = 5,
-                 seed: int = 0):
+                 seed: int = 0,
+                 staleness_bound_s: float = float("inf")):
+        if staleness_bound_s <= 0:
+            raise ValueError(f"staleness_bound_s must be positive, got "
+                             f"{staleness_bound_s}")
         self.sid = sid
         self.max_offload_count = max_offload_count
+        self.staleness_bound_s = staleness_bound_s
         self._rng = random.Random((seed << 16) ^ sid)
 
     # -- Fig. 6 ----------------------------------------------------------
@@ -113,6 +122,11 @@ class RequestHandler:
     def _feasible(self, req: Request, svc: ServiceSpec,
                   view: ServerView) -> bool:
         if not view.available or view.sid == self.sid:
+            return False
+        if view.sync_age_s > self.staleness_bound_s:
+            # silent peer: its digest stopped refreshing.  The frozen view
+            # still advertises pre-crash idle goodput, so scoring it would
+            # ATTRACT traffic to a likely-dead server — exclude instead
             return False
         if req.on_path(view.sid):          # loop prevention
             return False

@@ -131,7 +131,14 @@ class RingSynchronizer:
         self._failed.add(sid)
 
     def repair(self, sid: int) -> None:
-        self._failed.discard(sid)
+        """Rejoin after a restart.  The process lost its in-memory table,
+        so its cache comes back EMPTY: the restarted server re-publishes
+        its own digest and re-learns peers one ring hop per round — the
+        transient where the §5.3.3 staleness bound (not availability
+        flags) is what protects the handler."""
+        if sid in self._failed:
+            self._failed.discard(sid)
+            self.cache[sid] = {}
 
     @property
     def failed(self) -> frozenset:
@@ -178,4 +185,9 @@ class ParameterServerSync:
         self._failed.add(sid)
 
     def repair(self, sid: int) -> None:
+        # the central table survives a member restart; only the flag lifts
         self._failed.discard(sid)
+
+    @property
+    def failed(self) -> frozenset:
+        return frozenset(self._failed)

@@ -21,10 +21,12 @@ import numpy as np
 from repro.configs import ARCH_IDS, get_config, reduced
 from repro.core import (EdgeCloudControlPlane, GPUSpec, Outcome, Request,
                         ServerSpec, ServiceSpec, Sensitivity, allocate)
+from repro.core.faults import FaultInjector, FaultSpec, random_fault_spec
 from repro.models.registry import model_api
 from repro.serving.engine import (PREFIX_CACHEABLE_FAMILIES,
                                   EparaServingEngine, GenerationRequest,
                                   ServiceRuntime)
+from repro.serving.failover import ClusterSupervisor, RetryPolicy
 
 
 def service_spec_for(cfg) -> ServiceSpec:
@@ -130,6 +132,26 @@ def main(argv=None) -> int:
                          "acceptance, prefix hit rates, prefill cost) "
                          "into SimConfig overrides and write the "
                          "calibration report JSON to this path")
+    ap.add_argument("--fault-spec", default="",
+                    help="replay a deterministic fault schedule from this "
+                         "JSON file (core/faults.py FaultSpec) against "
+                         "the run: crashes/restarts, stragglers, digest "
+                         "corruption, dropped offload handoffs")
+    ap.add_argument("--chaos-seed", type=int, default=-1,
+                    help="generate a random (but seed-deterministic) "
+                         "fault schedule instead of --fault-spec; -1 = "
+                         "no injected faults (default)")
+    ap.add_argument("--chaos-horizon-s", type=float, default=20.0,
+                    help="time horizon the generated --chaos-seed "
+                         "schedule spreads its events over (logical "
+                         "rounds unless --admission-policy=sdf)")
+    ap.add_argument("--retry-timeout-s", type=float, default=8.0,
+                    help="base offload/handoff timeout before a request "
+                         "retries on the next-best peer (exponential "
+                         "backoff per attempt)")
+    ap.add_argument("--retry-max-attempts", type=int, default=4,
+                    help="placement attempts per request before a dead "
+                         "avenue draws an explicit FAILED verdict")
     ap.add_argument("--pjit-decode", action="store_true",
                     help="build each service's fused paged decode step "
                          "under pjit on a (1, device_count) service mesh "
@@ -179,6 +201,15 @@ def main(argv=None) -> int:
                  "cache is chased through the paged chunk path)")
     if args.n_samples < 1:
         ap.error(f"--n-samples must be >= 1, got {args.n_samples}")
+    if args.fault_spec and args.chaos_seed >= 0:
+        ap.error("--fault-spec and --chaos-seed are mutually exclusive "
+                 "(a replayed schedule IS the seed's output)")
+    if args.retry_timeout_s <= 0:
+        ap.error(f"--retry-timeout-s must be positive, got "
+                 f"{args.retry_timeout_s}")
+    if args.retry_max_attempts < 1:
+        ap.error(f"--retry-max-attempts must be >= 1, got "
+                 f"{args.retry_max_attempts}")
     kv_dtype = -1 if args.kv_dtype == "auto" else args.kv_dtype
 
     arch_ids = [a.strip() for a in args.archs.split(",")]
@@ -265,83 +296,56 @@ def main(argv=None) -> int:
                             tracer=tracer, metrics=metrics)
         engines[sid].deploy(svc, rt)
 
-    # drive requests through handler -> engine
+    # drive requests through handler -> engine, supervised: the
+    # ClusterSupervisor owns the ledger (every rid ends served or
+    # verdicted), the deadline-derived offload retry timeouts, and —
+    # when a fault schedule is given — crash evacuation + failover
     cp.publish_all(0.0)
     for _ in range(len(servers)):
         cp.sync_step(0.0)
-    outcomes = {}
     # monotonic, not wall-clock: deadlines and throughput math must not
     # jump when NTP slews the system clock mid-run
     t0 = time.monotonic()
-    done = 0
     # the data-plane clock: seconds since t0 — GenerationRequest deadlines
     # and the admission controller's slack estimates live in this frame
     deadline = args.deadline_s
+    fault_spec = None
+    if args.fault_spec:
+        with open(args.fault_spec) as f:
+            fault_spec = FaultSpec.from_json(f.read())
+    elif args.chaos_seed >= 0:
+        fault_spec = random_fault_spec(
+            [s.sid for s in servers], args.chaos_horizon_s,
+            seed=args.chaos_seed)
+    if fault_spec is not None:
+        print(f"fault schedule ({len(fault_spec.events)} events): "
+              + ", ".join(f"{e.kind}@{e.at_s:.1f}s->s{e.sid}"
+                          for e in fault_spec.events))
+    supervisor = ClusterSupervisor(
+        cp, engines,
+        retry=RetryPolicy(base_timeout_s=args.retry_timeout_s,
+                          max_attempts=args.retry_max_attempts),
+        injector=FaultInjector(fault_spec) if fault_spec else None,
+        metrics=metrics, tracer=tracer)
     for i in range(args.requests):
         svc = arch_ids[i % len(arch_ids)]
         at = int(rng.integers(0, len(servers)))
-        req = Request(rid=i, service=svc, arrival_s=0.0,
-                      deadline_s=deadline if deadline else 1e9)
-        decision = cp.handle(req, now=0.0, at_server=at)
-        outcomes[decision.outcome.value] = \
-            outcomes.get(decision.outcome.value, 0) + 1
-        target = at if decision.outcome != Outcome.OFFLOAD \
-            else decision.destination
-        if svc not in engines[target].runtimes:
-            # placement put it elsewhere; find a host (handler fallback)
-            target = next(s for s, e in engines.items()
-                          if svc in e.runtimes)
         cfg = cfgs[svc]
         prompt = rng.integers(0, cfg.vocab_size, size=6).astype(np.int32)
         extras = None
         if cfg.family in ("audio", "vlm"):
             dim = cfg.encoder_len if cfg.family == "audio" else cfg.prefix_len
             extras = {"embeddings": np.zeros((dim, cfg.d_model), np.float32)}
-        engines[target].submit(svc, GenerationRequest(
+        supervisor.submit(svc, GenerationRequest(
             rid=i, tokens=prompt, max_new_tokens=args.max_new_tokens,
             stream=i, extras=extras, n_samples=args.n_samples,
-            deadline_s=deadline if deadline else 0.0))
-    # step every engine to completion, feeding each round's queue-time
-    # estimate back into the control plane (StepStats -> handler state, so
-    # offload decisions see live data-plane backpressure) and collecting
-    # the admission controller's explicit reject verdicts
-    rejects = []                                 # (sid, svc, AdmissionReject)
-    results = []
+            deadline_s=deadline if deadline else 0.0), at_server=at,
+            now=0.0)
     clock = ((lambda: time.monotonic() - t0)
              if args.admission_policy == "sdf" else None)
-
-    def _drain():
-        for sid, eng in engines.items():
-            def hook(svc, st, sid=sid):
-                cp.set_queue_time(sid, svc, st.queue_time_s)
-                rejects.extend((sid, svc, r) for r in st.rejected)
-            results.extend(eng.serve_until_idle(on_stats=hook, clock=clock))
-
-    _drain()
-    # OFFLOAD verdicts are routable, not dead: ask the handler for a new
-    # destination at the verdict's timestamp and resubmit once — the
-    # explicit local-reject -> offload loop the control plane closes
-    final_rejects, resubmitted = [], 0
-    for sid, svc, rj in rejects:
-        expired = (rj.req.deadline_s and clock is not None
-                   and clock() > rj.req.deadline_s)
-        if rj.verdict is not Outcome.OFFLOAD or expired:
-            final_rejects.append((sid, svc, rj))
-            continue
-        decision = cp.handle(Request(rid=rj.req.rid, service=svc,
-                                     arrival_s=rj.now,
-                                     deadline_s=rj.req.deadline_s or 1e9),
-                             now=rj.now, at_server=sid)
-        dest = decision.destination \
-            if decision.outcome == Outcome.OFFLOAD else sid
-        if svc not in engines[dest].runtimes:
-            dest = next(s for s, e in engines.items() if svc in e.runtimes)
-        engines[dest].submit(svc, rj.req)
-        resubmitted += 1
-    if resubmitted:
-        rejects = []
-        _drain()
-        final_rejects.extend(rejects)    # second verdict is final
+    report = supervisor.run_until_idle(clock=clock)
+    results = report.results
+    outcomes = report.outcomes
     dt = time.monotonic() - t0
     toks = sum(len(r.tokens) for r in results)
     steps = sum(rt.decode_steps for eng in engines.values()
@@ -394,8 +398,15 @@ def main(argv=None) -> int:
     print(f"admission ({args.admission_policy}): {verdicts or 'no verdicts'}"
           f", {sum(rt.admission.preemptions for rt in rts)} preemptions, "
           f"{sum(rt.admission.resumes for rt in rts)} resumes, "
-          f"{resubmitted} offload-verdict resubmissions, "
-          f"{len(final_rejects)} final rejects")
+          f"{report.offload_retries} offload/timeout retries, "
+          f"{len(report.rejects)} final rejects")
+    if fault_spec is not None or report.failovers or report.duplicates:
+        print(f"fault tolerance: {report.failovers} crash failovers, "
+              f"{report.evacuated} requests evacuated, "
+              f"{report.duplicates} duplicate completions deduplicated, "
+              f"{report.dropped_offloads} handoffs dropped, "
+              f"{report.heartbeat_misses} straggler rounds skipped, "
+              f"{sum(rt.evacuations for rt in rts)} runtime evacuations")
     if tracer is not None:
         tracer.export(args.trace_out)
         print(f"trace: {tracer.emitted} events "
@@ -420,7 +431,7 @@ def main(argv=None) -> int:
               f"prefill_token_s={cal.prefill_token_s:.2e} -> "
               f"{args.calibrate_out}")
     # every request is accounted for: served, or rejected with a verdict
-    return 0 if len(results) + len(final_rejects) == args.requests else 1
+    return 0 if report.accounted == args.requests else 1
 
 
 if __name__ == "__main__":

@@ -27,7 +27,12 @@ clock in benchmarks; every estimate below is learned from observed
     ``Outcome``/``Decision`` machinery;
   - ``CONGESTION``: hard local backpressure — the queue is beyond the
     congestion bound, shed from the laziest tail (this is the only
-    verdict deadline-less requests can draw).
+    verdict deadline-less requests can draw);
+  - ``FAILED`` (issued by ``serving/failover.py``, never by this
+    controller): the request was lost to a fault and every recovery
+    avenue — timeout retries, peer re-routes, the bounded attempt
+    budget — was exhausted.  Listed here because it shares the same
+    ``AdmissionReject`` envelope and verdict accounting.
 
   Rejects surface per step through ``StepStats.rejected`` /
   ``StepStats.deadline_missed``/``congestion_rejects``/
@@ -67,6 +72,8 @@ class AdmissionReject:
     verdict: Outcome
     now: float
     reason: str = ""
+    attempts: int = 0                # placement attempts consumed before
+    #                                  the verdict (failover retries)
 
 
 @dataclasses.dataclass

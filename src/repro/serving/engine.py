@@ -203,6 +203,13 @@ class StepStats:
     deadline_missed: int = 0         # DEADLINE_MISSED verdicts this step
     congestion_rejects: int = 0      # CONGESTION verdicts this step
     offload_verdicts: int = 0        # OFFLOAD verdicts this step
+    failed_rejects: int = 0          # FAILED verdicts this step (fault-
+    #                                  tolerance terminal verdict: lost to
+    #                                  a crash/drop and out of retries)
+    evacuated: int = 0               # requests stripped out by crash
+    #                                  evacuation since the last step
+    #                                  (returned to the supervisor for
+    #                                  resubmission on survivors)
     preempted: int = 0               # live slots parked this step
     resumed: int = 0                 # parked requests re-admitted this step
     parked: int = 0                  # parked requests outstanding after
@@ -557,6 +564,11 @@ class ServiceRuntime:
         self.draft_decode_traces = 0
         self.draft_prefill_traces = 0
         self.draft_prefill_tokens = 0
+
+        # -- fault tolerance (crash evacuation, core/faults.py) -----------
+        self.evacuations = 0         # crash evacuations of this runtime
+        self.evacuated_requests = 0  # requests stripped out across them
+        self._evacuated_pending = 0  # delta reported by the next StepStats
 
         # -- n>1 parallel sampling (refcounted prompt-block forks) --------
         self.forks_spawned = 0
@@ -1160,6 +1172,72 @@ class ServiceRuntime:
             rejects.append(AdmissionReject(req=req, verdict=verdict,
                                            now=now))
         return rejects
+
+    def _take_evacuated(self) -> int:
+        """Evacuations since the last step, folded into ``StepStats``."""
+        n = self._evacuated_pending
+        self._evacuated_pending = 0
+        return n
+
+    def evacuate(self, now: float = 0.0) -> List[GenerationRequest]:
+        """Crash this runtime's data plane (``core/faults.py`` adversary):
+        strip every queued, in-flight and parked request out and return
+        them rid-deduplicated for resubmission elsewhere.  In-flight KV
+        state is lost with the process — survivors must re-prefill (the
+        radix prefix cache makes that cheap when they land back here after
+        a restart, so the warm prefix index is deliberately NOT torn
+        down).  PR 8's counter-stream sampling makes the resubmitted
+        request's tokens bit-identical on any replica, which is what lets
+        recovery re-run prefill without corrupting the output."""
+        out: Dict[int, GenerationRequest] = {}
+        # (1) queued work — includes rids _park_slot re-queued
+        for item, _ in self.composer.shed(lambda item: True):
+            req = item.payload
+            out.setdefault(req.rid, req)
+        # (2) live slots: free draft/paged state per slot, then drop the
+        # whole batch.  No prefix insert — the slot died mid-flight and
+        # resubmission re-prefills from the index as it stands.  Slot rids
+        # are finished HERE (via the sibling refcount, once per rid) and
+        # skipped in the final pass; queued/parked rids never overlap
+        # live slots, so no rid is finished twice.
+        slot_rids: set = set()
+        for group, state in self.groups.items():
+            for s in state.slots:
+                if s.spec and state.draft is not None:
+                    state.draft.free(s.slot_id)
+                    s.spec = False
+                if state.arena is not None:
+                    state.arena.free(s.slot_id)
+                if self.trace.enabled:
+                    self.trace.close(self.obs_name, self._slot_tid(s),
+                                     outcome="evacuated")
+                out.setdefault(s.req.rid, s.req)
+                slot_rids.add(s.req.rid)
+                self._finish_sibling(s.req, group)
+            state.slots = []
+            if state.arena is None:
+                state.cache = None
+        # (3) parked entries: their frozen blocks go back to the arena
+        # (the rid itself is already in ``out`` via the composer drain)
+        for rid in list(self.admission.parked):
+            entry = self.admission.pop_parked(rid)
+            if entry is None:
+                continue
+            arena = self.groups[entry.group].arena
+            if arena is not None:
+                arena.release_parked(entry.blocks)
+            out.setdefault(entry.req.rid, entry.req)
+        for req in out.values():
+            if req.rid in slot_rids:
+                continue
+            if self.trace.enabled:
+                self.trace.close(self.obs_name, str(req.rid),
+                                 outcome="evacuated")
+            self._finish_request(req, -1)
+        self.evacuations += 1
+        self.evacuated_requests += len(out)
+        self._evacuated_pending += len(out)
+        return list(out.values())
 
     def _route_admission(self, item: QueuedItem) -> Optional[int]:
         """Pick a DP group with a free slot; sticky sessions must land on
@@ -1969,6 +2047,8 @@ class ServiceRuntime:
             deadline_missed=verdict_count(Outcome.DEADLINE_MISSED),
             congestion_rejects=verdict_count(Outcome.CONGESTION),
             offload_verdicts=verdict_count(Outcome.OFFLOAD),
+            failed_rejects=verdict_count(Outcome.FAILED),
+            evacuated=self._take_evacuated(),
             preempted=ctrl.preemptions - preempt0,
             resumed=ctrl.resumes - resume0,
             parked=len(ctrl.parked),

@@ -103,6 +103,21 @@ class SimConfig:
     # actually speculates are discounted.
     spec_accept_rate: float = 0.0
     spec_draft_cost: float = 0.0
+    # deterministic failure processes (core/faults.py FaultSpec): the
+    # same replayable schedule the live ClusterSupervisor consumes, run
+    # through the event heap.  A crash zeroes the server's capacity and
+    # flags it in the control plane (the ring heals around it; peers
+    # stop scoring its frozen digest past the staleness bound); work
+    # admitted before the crash but unfinished at it is LOST and
+    # resubmits through the handler after ``failover_retry_s`` — or
+    # draws a FAILED verdict when its deadline already passed.  A
+    # restart lifts the flag immediately (ring rejoin + re-publish) but
+    # capacity only returns after ``restart_reload_s`` (weight reload).
+    # ``drop_offload`` swallows handoffs TO the named server; the origin
+    # retries them after the same delay.  None = fault-free (legacy).
+    fault_spec: Optional[object] = None
+    restart_reload_s: float = 2.0
+    failover_retry_s: float = 0.5
 
 
 @dataclasses.dataclass
@@ -127,6 +142,11 @@ class SimResult:
     #                                    block-table-parking preemptions)
     spec_discounted: int = 0           # requests priced at the
     #                                    speculative-decoding discount
+    crashes: int = 0                   # injected server crashes
+    failover_resubmits: int = 0        # requests whose in-flight compute
+    #                                    a crash (or dropped handoff)
+    #                                    destroyed, rerouted to survivors
+    dropped_offloads: int = 0          # handoffs the adversary swallowed
 
     @property
     def mean_offloads(self) -> float:
@@ -195,6 +215,15 @@ class Simulation:
         self._preemptions = 0
         self._spec_discounted = 0
         self.placements: List[Tuple[str, int]] = []
+        # failure-process state: crash times per sid (a done event whose
+        # host crashed inside its (admit, finish) window lost its compute)
+        self._down: set = set()
+        self._crash_times: Dict[int, List[float]] = {}
+        self._saved_capacity: Dict[int, Dict[str, float]] = {}
+        self._drop_budget: Dict[int, int] = {}
+        self._crashes = 0
+        self._failover_resubmits = 0
+        self._dropped_offloads = 0
 
     def _note_verdict(self, outcome: Outcome) -> None:
         key = outcome.value
@@ -260,6 +289,9 @@ class Simulation:
         while t < cfg.horizon_s:
             push(t, "sync", ())
             t += cfg.sync_interval_s
+        if cfg.fault_spec is not None:
+            for ev in cfg.fault_spec.events:
+                push(ev.at_s, "fault", (ev,))
 
         while self._heap:
             now, _, kind, payload = heapq.heappop(self._heap)
@@ -270,8 +302,27 @@ class Simulation:
                 sid, req = payload
                 self._handle(req, sid, now, push)
             elif kind == "done":
-                req, finish = payload
-                self.meter.complete_latency(req, finish)
+                req, finish, sid, admit_t = payload
+                if self._crashed_during(sid, admit_t, finish):
+                    # the host died under it: the virtual queue's compute
+                    # never happened — reroute to a survivor (or FAILED)
+                    self._resubmit(req, sid, now, push)
+                else:
+                    self.meter.complete_latency(req, finish)
+            elif kind == "fault":
+                self._apply_fault(payload[0], now, push)
+            elif kind == "reload":
+                sid = payload[0]
+                saved = self._saved_capacity.pop(sid, None)
+                if saved is not None and sid not in self._down:
+                    self.state[sid].capacity = saved
+            elif kind == "fault_restore":
+                sid, factor = payload
+                for table in (self.state[sid].capacity,
+                              self._saved_capacity.get(sid)):
+                    if table:
+                        for k in table:
+                            table[k] *= factor
             elif kind == "batch_flush":
                 sid, service, gen = payload
                 st = self.state[sid]
@@ -284,6 +335,14 @@ class Simulation:
                 st = self.state[sid]
                 st.stream_load[req.service] = max(
                     0.0, st.stream_load.get(req.service, 0.0) - achieved)
+                start = now - req.duration_s
+                for t_c in self._crash_times.get(sid, ()):
+                    if start <= t_c <= now:
+                        # partial credit: frames delivered before the host
+                        # crashed; the rest of the stream died with it
+                        achieved *= max(0.0, (t_c - start)
+                                        / max(1e-9, req.duration_s))
+                        break
                 self.meter.complete_frequency(req, now, achieved,
                                               svc.slo_fps)
         horizon = cfg.horizon_s
@@ -299,7 +358,77 @@ class Simulation:
             cached_prefill_s=self._cached_prefill_s,
             verdicts=dict(self._verdicts),
             preemptions=self._preemptions,
-            spec_discounted=self._spec_discounted)
+            spec_discounted=self._spec_discounted,
+            crashes=self._crashes,
+            failover_resubmits=self._failover_resubmits,
+            dropped_offloads=self._dropped_offloads)
+
+    # ------------------------------------------------------------------
+    # failure processes (core/faults.py schedules on the event heap)
+    # ------------------------------------------------------------------
+    def _crashed_during(self, sid: int, start: float, end: float) -> bool:
+        return any(start <= t <= end
+                   for t in self._crash_times.get(sid, ()))
+
+    def _resubmit(self, req: Request, dead_sid: int, now: float,
+                  push) -> None:
+        """Recover a request whose compute a fault destroyed: reroute it
+        through the handler from a surviving server after the retry
+        delay — or issue the explicit FAILED verdict when its deadline
+        (or the cluster) is already gone."""
+        retry_at = now + self.cfg.failover_retry_s
+        alive = [s for s in self.server_ids if s not in self._down]
+        if not alive or deadline_expired(req.deadline_s, retry_at):
+            self._note_verdict(Outcome.FAILED)
+            self.meter.drop(req, now)
+            return
+        from repro.core.handler import RequestHandler
+        fwd = RequestHandler.apply_offload(req, dead_sid)
+        self._failover_resubmits += 1
+        push(retry_at, "arrival", (alive[0], fwd))
+
+    def _apply_fault(self, ev, now: float, push) -> None:
+        st = self.state.get(ev.sid)
+        if st is None:
+            return
+        if ev.kind == "crash":
+            if ev.sid in self._down:
+                return
+            self._down.add(ev.sid)
+            self._crashes += 1
+            self._crash_times.setdefault(ev.sid, []).append(now)
+            self.control_plane.fail_server(ev.sid, now)
+            self._saved_capacity[ev.sid] = dict(st.capacity)
+            st.capacity = {}
+            st.vf.clear()
+            st.stream_load.clear()
+            # sync-mode batch barriers on the corpse: members resubmit
+            for service, forming in list(st.forming.items()):
+                st.forming_gen[service] = \
+                    st.forming_gen.get(service, 0) + 1
+                for req in forming:
+                    self._resubmit(req, ev.sid, now, push)
+                st.forming[service] = []
+        elif ev.kind == "restart":
+            if ev.sid not in self._down:
+                return
+            self._down.discard(ev.sid)
+            # ring rejoin is immediate; serving capacity only returns
+            # after the weight reload
+            self.control_plane.repair_server(ev.sid, now)
+            push(now + self.cfg.restart_reload_s, "reload", (ev.sid,))
+        elif ev.kind == "straggle":
+            factor = max(1.0, ev.factor)
+            for table in (st.capacity, self._saved_capacity.get(ev.sid)):
+                if table:
+                    for k in table:
+                        table[k] /= factor
+            push(now + ev.duration_s, "fault_restore", (ev.sid, factor))
+        elif ev.kind == "corrupt":
+            self.control_plane.sync.corrupt(ev.sid, factor=ev.factor)
+        elif ev.kind == "drop_offload":
+            self._drop_budget[ev.sid] = \
+                self._drop_budget.get(ev.sid, 0) + ev.count
 
     # ------------------------------------------------------------------
     def _handle(self, req: Request, sid: int, now: float, push) -> None:
@@ -317,6 +446,16 @@ class Simulation:
             return
         if route.outcome in (Outcome.OFFLOAD,):
             dest = route.destination
+            budget = self._drop_budget.get(dest, 0)
+            if budget > 0:
+                # the adversary swallows this handoff in flight; the
+                # origin notices the missing ack and retries its routing
+                self._drop_budget[dest] = budget - 1
+                self._dropped_offloads += 1
+                self._failover_resubmits += 1
+                push(now + self.cfg.failover_retry_s, "arrival",
+                     (sid, req))
+                return
             hop = cm.transfer_time(svc.request_bytes,
                                    self.cfg.inter_server_bw_gbs)
             from repro.core.handler import RequestHandler
@@ -451,13 +590,13 @@ class Simulation:
                     st.vf[req.service] = vf0 + own
                     finish = (now + own + base + tail
                               + self.cfg.preempt_overhead_s)
-                    push(finish, "done", (req, finish))
+                    push(finish, "done", (req, finish, sid, now))
                     return
                 self._note_verdict(Outcome.ADMIT)
             vf = vf0 + own
             st.vf[req.service] = vf
             finish = vf + base + tail
-            push(finish, "done", (req, finish))
+            push(finish, "done", (req, finish, sid, now))
 
     def _dispatch_batch(self, sid: int, service: str, now: float,
                         push) -> None:
@@ -479,7 +618,7 @@ class Simulation:
         vf = max(now, st.vf.get(service, now)) + batch_lat
         st.vf[service] = vf
         for req in batch:
-            push(vf, "done", (req, vf))
+            push(vf, "done", (req, vf, sid, now))
 
     def _peer_stream_share(self, req: Request, sid: int,
                            needed_fps: float) -> float:

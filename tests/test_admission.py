@@ -83,7 +83,8 @@ def test_policy_knob_validated():
 
 def test_reject_verdicts_enum():
     assert set(REJECT_VERDICTS) == {Outcome.DEADLINE_MISSED,
-                                    Outcome.CONGESTION, Outcome.OFFLOAD}
+                                    Outcome.CONGESTION, Outcome.OFFLOAD,
+                                    Outcome.FAILED}
     assert Outcome.ADMIT not in REJECT_VERDICTS
     assert Outcome("deadline_missed") is Outcome.DEADLINE_MISSED
 

@@ -1,0 +1,422 @@
+"""Fault tolerance (core/faults.py + serving/failover.py): deterministic
+replayable fault schedules, crash evacuation invariants on the slot
+engine, supervisor recovery (crash mid-burst, dropped handoffs, retry
+budget exhaustion), degraded-mode routing, the simulator's failure
+processes, and the property that random fault schedules never corrupt a
+surviving request's greedy tokens or leave a rid unaccounted.
+
+``FAULTS_EXAMPLES`` scales the hypothesis example budget in CI.
+"""
+import functools
+import os
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (EdgeCloudControlPlane, Outcome, ServerSpec,
+                        ServiceSpec)
+from repro.core.categories import REJECT_VERDICTS
+from repro.core.faults import (FAULT_KINDS, FaultEvent, FaultInjector,
+                               FaultSpec, random_fault_spec)
+from repro.core.handler import RequestHandler, ServerView, ServiceState
+from repro.models import transformer as T
+from repro.serving.engine import (EparaServingEngine, GenerationRequest,
+                                  ServiceRuntime)
+from repro.serving.failover import ClusterSupervisor, RetryPolicy
+
+from conftest import toy_config
+
+_EXAMPLES = int(os.environ.get("FAULTS_EXAMPLES", "3"))
+
+
+@functools.lru_cache(maxsize=1)
+def _toy():
+    cfg = toy_config()
+    return cfg, T.init(jax.random.PRNGKey(0), cfg)
+
+
+@pytest.fixture(scope="module")
+def toy():
+    return _toy()
+
+
+def _req(rid, prompt=6, max_new=4, stream=None, deadline=0.0):
+    return GenerationRequest(
+        rid=rid, tokens=np.arange(1, 1 + prompt, dtype=np.int32),
+        max_new_tokens=max_new, deadline_s=deadline,
+        stream=rid if stream is None else stream)
+
+
+def _cluster(cfg, params, n_servers=3, **cp_kw):
+    """Toy control plane + one 'chat' service deployed on every server."""
+    specs = {"chat": ServiceSpec("chat", flops_per_request=1e10,
+                                 weights_bytes=2e8, vram_bytes=5e8,
+                                 slo_latency_s=100.0)}
+    servers = [ServerSpec(sid=i, num_gpus=2) for i in range(n_servers)]
+    cp = EdgeCloudControlPlane(servers, specs, **cp_kw)
+    cp.run_placement({("chat", i): 10.0 for i in range(n_servers)})
+    engines = {s.sid: EparaServingEngine() for s in servers}
+    for svc, sid in cp.placements:
+        if sid >= 0 and svc not in engines[sid].runtimes:
+            engines[sid].deploy(svc, ServiceRuntime(cfg, params,
+                                                    cp.plans[svc]))
+    # make sure every server hosts the service (crash tests need
+    # survivors with capacity)
+    for sid in engines:
+        if "chat" not in engines[sid].runtimes:
+            engines[sid].deploy("chat", ServiceRuntime(cfg, params,
+                                                       cp.plans["chat"]))
+    cp.publish_all(0.0)
+    for _ in range(n_servers):
+        cp.sync_step(0.0)
+    return cp, engines
+
+
+# ---------------------------------------------------------------------------
+# FaultSpec / FaultInjector: pure-data determinism
+# ---------------------------------------------------------------------------
+
+def test_fault_event_kind_validated():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultEvent(at_s=1.0, kind="meteor", sid=0)
+    for kind in FAULT_KINDS:
+        FaultEvent(at_s=1.0, kind=kind, sid=0)
+
+
+def test_fault_spec_sorted_and_json_roundtrip():
+    spec = FaultSpec(events=(
+        FaultEvent(at_s=9.0, kind="restart", sid=1),
+        FaultEvent(at_s=2.0, kind="crash", sid=1),
+        FaultEvent(at_s=5.0, kind="corrupt", sid=0, factor=3.0)), seed=7)
+    assert [e.at_s for e in spec.events] == [2.0, 5.0, 9.0]
+    again = FaultSpec.from_json(spec.to_json())
+    assert again == spec
+    assert again.crashed_servers() == (1,)
+    assert [e.kind for e in again.for_server(1)] == ["crash", "restart"]
+
+
+def test_random_fault_spec_deterministic_and_bounded():
+    a = random_fault_spec([0, 1, 2], 20.0, seed=3, crashes=2)
+    b = random_fault_spec([0, 1, 2], 20.0, seed=3, crashes=2)
+    c = random_fault_spec([0, 1, 2], 20.0, seed=4, crashes=2)
+    assert a == b
+    assert a != c
+    # min_alive: never more than len(ids) - 1 distinct crash victims,
+    # and every crash has a paired restart inside the horizon
+    assert len(a.crashed_servers()) <= 2
+    crashes = [e for e in a.events if e.kind == "crash"]
+    restarts = [e for e in a.events if e.kind == "restart"]
+    assert len(crashes) == len(restarts)
+    assert all(e.at_s <= 20.0 for e in a.events)
+    with pytest.raises(ValueError, match="min_alive"):
+        random_fault_spec([0, 1], 10.0, min_alive=0)
+
+
+def test_injector_replays_in_schedule_order():
+    spec = random_fault_spec([0, 1, 2], 10.0, seed=1, crashes=1,
+                             stragglers=2, corruptions=1,
+                             dropped_offloads=1)
+
+    class Recorder:
+        def __init__(self):
+            self.calls = []
+
+        def __getattr__(self, kind):
+            return lambda ev, now: self.calls.append((ev.kind, ev.sid))
+
+    runs = []
+    for _ in range(2):
+        inj, rec = FaultInjector(spec), Recorder()
+        assert inj.next_at() == spec.events[0].at_s
+        t = 0.0
+        while inj.pending:
+            t = inj.next_at()
+            inj.drive(t, rec)
+        runs.append(rec.calls)
+    assert runs[0] == runs[1]
+    assert len(runs[0]) == len(spec.events)
+    assert [k for k, _ in runs[0]] == [e.kind for e in spec.events]
+
+
+# ---------------------------------------------------------------------------
+# handler: staleness-bound exclusion (degraded mode)
+# ---------------------------------------------------------------------------
+
+def test_stale_peer_excluded_not_attractive():
+    """A silently dead peer's frozen digest advertises pre-crash idle
+    goodput; past the staleness bound the handler must exclude it rather
+    than score it (the stale-peer-attraction bug)."""
+    h = RequestHandler(0, staleness_bound_s=5.0)
+    svc = ServiceSpec("chat", flops_per_request=1e9, weights_bytes=1e8,
+                      vram_bytes=1e8, slo_latency_s=1000.0)
+    from repro.core.categories import Request
+    req = Request(rid=1, service="chat", arrival_s=0.0, deadline_s=1e9)
+    fresh = ServerView(sid=1, sync_age_s=1.0, services={
+        "chat": ServiceState(theoretical_goodput=1.0)})
+    stale = ServerView(sid=2, sync_age_s=50.0, services={
+        "chat": ServiceState(theoretical_goodput=1000.0)})
+    local = ServerView(sid=0, services={})      # nothing local -> offload
+    for _ in range(20):
+        d = h.handle(req, 0.0, svc, local, {1: fresh, 2: stale})
+        assert d.outcome == Outcome.OFFLOAD
+        assert d.destination == 1, "stale peer attracted traffic"
+    # with no bound the stale giant wins almost always — the bug existed
+    h2 = RequestHandler(0)
+    got2 = {h2.handle(req, 0.0, svc, local, {1: fresh, 2: stale})
+            .destination for _ in range(20)}
+    assert 2 in got2
+
+
+def test_handler_staleness_bound_validated():
+    with pytest.raises(ValueError, match="staleness_bound_s"):
+        RequestHandler(0, staleness_bound_s=0.0)
+
+
+def test_control_plane_degrades_failed_server(toy):
+    cfg, params = toy
+    cp, engines = _cluster(cfg, params)
+    from repro.core.categories import Request
+    req = Request(rid=1, service="chat", arrival_s=0.0, deadline_s=1e9)
+    assert cp.handle(req, now=1.0, at_server=0).outcome in (
+        Outcome.LOCAL, Outcome.LOCAL_CROSS)
+    cp.fail_server(0, 1.0)
+    assert 0 in cp.failed_servers
+    # a request originating AT the corpse can only offload
+    d = cp.handle(req, now=1.5, at_server=0)
+    assert d.outcome == Outcome.OFFLOAD
+    assert d.destination != 0
+    # peers stop seeing it as available
+    views = cp.sync.views_for(1, 1.5)
+    assert not views[0].available
+    cp.repair_server(0, 2.0)
+    assert 0 not in cp.failed_servers
+
+
+# ---------------------------------------------------------------------------
+# engine: crash evacuation invariants
+# ---------------------------------------------------------------------------
+
+def test_evacuate_strips_queued_and_inflight(toy):
+    cfg, params = toy
+    from repro.core.allocator import ParallelPlan
+    from repro.core.categories import Sensitivity, TaskCategory
+    plan = ParallelPlan(service="t",
+                        category=TaskCategory(Sensitivity.LATENCY, False),
+                        bs=2)
+    rt = ServiceRuntime(cfg, params, plan)
+    for i in range(5):
+        rt.submit(_req(i, max_new=6), now=0.0)
+    rt.step(now=1.0)                 # two in flight, three queued
+    assert rt.in_flight() and rt.pending()
+    reqs = rt.evacuate(now=2.0)
+    assert sorted(r.rid for r in reqs) == [0, 1, 2, 3, 4]
+    assert rt.pending() == 0 and rt.in_flight() == 0
+    assert rt.evacuations == 1 and rt.evacuated_requests == 5
+    for g in rt.groups.values():
+        if g.arena is not None:
+            assert g.arena.live == 0 and g.arena.parked_blocks == 0
+    # the delta surfaces once through StepStats
+    stats = rt.step(now=3.0)
+    assert stats.evacuated == 5
+    assert rt.step(now=4.0).evacuated == 0
+    # the runtime still serves after evacuation (resubmission target)
+    rt.submit(_req(100), now=5.0)
+    out = rt.drain(now=5.0)
+    assert [r.rid for r in out] == [100]
+
+
+def test_evacuate_releases_parked_blocks(toy):
+    cfg, params = toy
+    from repro.core.allocator import ParallelPlan
+    from repro.core.categories import Sensitivity, TaskCategory
+    plan = ParallelPlan(service="t",
+                        category=TaskCategory(Sensitivity.LATENCY, False),
+                        bs=2, admission="sdf")
+    rt = ServiceRuntime(cfg, params, plan)
+    # seed EWMAs so the controller preempts
+    rt.submit(_req(999), now=0.0)
+    t = 0.0
+    while rt.pending() or rt.in_flight():
+        rt.step(now=t)
+        t += 1.0
+    for i in range(2):
+        rt.submit(_req(i, max_new=8), now=t)
+    rt.step(now=t)
+    rt.submit(_req(7, max_new=2, deadline=t + 3.0), now=t)
+    for _ in range(3):               # give the preemption a chance
+        rt.step(now=t)
+        t += 0.5
+    reqs = rt.evacuate(now=t)
+    rids = {r.rid for r in reqs}
+    assert rids and rids <= {0, 1, 7}
+    assert not rt.admission.parked
+    for g in rt.groups.values():
+        if g.arena is not None:
+            assert g.arena.live == 0 and g.arena.parked_blocks == 0
+
+
+# ---------------------------------------------------------------------------
+# supervisor: recovery end to end
+# ---------------------------------------------------------------------------
+
+def _run_supervised(cfg, params, n_requests, injector=None,
+                    retry=None, n_servers=3):
+    cp, engines = _cluster(cfg, params, n_servers=n_servers)
+    sup = ClusterSupervisor(cp, engines, injector=injector,
+                            retry=retry or RetryPolicy(base_timeout_s=4.0))
+    for i in range(n_requests):
+        sup.submit("chat", _req(i), at_server=i % n_servers, now=0.0)
+    return sup, sup.run_until_idle()
+
+
+def test_crash_midburst_served_or_verdicted_bit_identical(toy):
+    cfg, params = toy
+    inj = FaultInjector(FaultSpec(events=(
+        FaultEvent(at_s=2.0, kind="crash", sid=0),
+        FaultEvent(at_s=8.0, kind="restart", sid=0))))
+    n = 12
+    sup, rep = _run_supervised(cfg, params, n, injector=inj)
+    assert rep.accounted == n, "silently lost requests"
+    assert rep.evacuated > 0 and rep.failovers > 0
+    assert 0 not in sup.down       # restarted and rejoined
+    # bit-identity vs the failure-free oracle on served intersection
+    _, oracle = _run_supervised(cfg, params, n)
+    assert oracle.accounted == n and not oracle.rejects
+    want = {r.rid: list(map(int, r.tokens))
+            for r in oracle.results if r.sample == 0}
+    got = {r.rid: list(map(int, r.tokens))
+           for r in rep.results if r.sample == 0}
+    for rid in set(want) & set(got):
+        assert got[rid] == want[rid], f"rid {rid} corrupted by failover"
+
+
+def test_dropped_offload_recovered_by_timeout_retry(toy):
+    cfg, params = toy
+    inj = FaultInjector(FaultSpec(events=(
+        FaultEvent(at_s=0.5, kind="drop_offload", sid=1, count=2),)))
+    cp, engines = _cluster(cfg, params)
+    sup = ClusterSupervisor(cp, engines, injector=inj,
+                            retry=RetryPolicy(base_timeout_s=2.0))
+    sup.step(1.0)                    # arm the drop budget first
+    for i in range(4):
+        sup.submit("chat", _req(i), at_server=1, now=1.0)
+    rep = sup.run_until_idle(now=1.0)
+    assert rep.accounted == 4
+    assert rep.dropped_offloads == 2
+    assert rep.offload_retries >= 2  # the timeouts recovered them
+    assert not rep.rejects
+
+
+def test_failed_verdict_when_no_host_left(toy):
+    cfg, params = toy
+    inj = FaultInjector(FaultSpec(events=tuple(
+        FaultEvent(at_s=1.5, kind="crash", sid=s) for s in range(3))))
+    sup, rep = _run_supervised(cfg, params, 6, injector=inj)
+    assert rep.accounted == 6
+    assert rep.rejects, "total cluster loss must verdict, not hang"
+    assert all(r.verdict is Outcome.FAILED for r in rep.rejects)
+    assert all(r.attempts >= 1 for r in rep.rejects)
+    assert Outcome.FAILED in REJECT_VERDICTS
+
+
+def test_retry_policy_backoff_and_deadline_cap():
+    p = RetryPolicy(base_timeout_s=2.0, backoff=3.0, max_attempts=5,
+                    deadline_fraction=0.5)
+    assert p.timeout_s(0, 0.0, 0.0) == pytest.approx(2.0)
+    assert p.timeout_s(2, 0.0, 0.0) == pytest.approx(18.0)
+    # deadline caps the wait at half the remaining slack...
+    assert p.timeout_s(3, 20.0, 10.0) == pytest.approx(5.0)
+    # ...but never below one base timeout
+    assert p.timeout_s(3, 10.5, 10.0) == pytest.approx(2.0)
+    with pytest.raises(ValueError):
+        RetryPolicy(max_attempts=0)
+    with pytest.raises(ValueError):
+        RetryPolicy(backoff=0.5)
+
+
+def test_straggler_skips_rounds_but_serves(toy):
+    cfg, params = toy
+    inj = FaultInjector(FaultSpec(events=(
+        FaultEvent(at_s=0.5, kind="straggle", sid=0, duration_s=6.0,
+                   factor=3.0),)))
+    sup, rep = _run_supervised(cfg, params, 9, injector=inj)
+    assert rep.accounted == 9
+    assert rep.heartbeat_misses > 0
+
+
+# ---------------------------------------------------------------------------
+# simulator failure processes
+# ---------------------------------------------------------------------------
+
+def test_simulator_faults_deterministic_and_accounted():
+    from repro.core.categories import EDGE_P100
+    from repro.simulator.baselines import make_scheduler
+    from repro.simulator.engine import SimConfig, Simulation
+    from repro.simulator.workload import (WorkloadConfig, generate_requests,
+                                          table1_services)
+    services = table1_services()
+    servers = [ServerSpec(sid=i, num_gpus=1, gpu=EDGE_P100)
+               for i in range(4)]
+    wl = WorkloadConfig(horizon_s=30.0, load_scale=20.0, seed=3)
+    events = generate_requests(services, len(servers), wl)
+    spec = FaultSpec(events=(
+        FaultEvent(at_s=8.0, kind="crash", sid=1),
+        FaultEvent(at_s=16.0, kind="restart", sid=1),
+        FaultEvent(at_s=5.0, kind="drop_offload", sid=2, count=3),
+        FaultEvent(at_s=10.0, kind="straggle", sid=3, duration_s=5.0,
+                   factor=4.0)))
+
+    def run(fault_spec):
+        return Simulation(
+            servers, services,
+            make_scheduler("EPARA", services, EDGE_P100, seed=1),
+            events, SimConfig(horizon_s=30.0, fault_spec=fault_spec)).run()
+
+    base = run(None)
+    a, b = run(spec), run(spec)
+    assert a.goodput == pytest.approx(b.goodput)
+    assert a.verdicts == b.verdicts
+    assert a.crashes == 1
+    assert a.dropped_offloads == 3
+    assert a.failover_resubmits >= a.dropped_offloads
+    assert a.goodput < base.goodput          # faults cost goodput
+    assert a.goodput > 0.5 * base.goodput    # but recovery keeps most
+
+
+# ---------------------------------------------------------------------------
+# property: random fault schedules never corrupt survivors or lose rids
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=_EXAMPLES, deadline=None, derandomize=True)
+@given(chaos_seed=st.integers(min_value=0, max_value=10**6),
+       n_requests=st.integers(min_value=4, max_value=10),
+       crashes=st.integers(min_value=0, max_value=2),
+       drops=st.integers(min_value=0, max_value=2))
+def test_random_fault_schedules_preserve_survivors(chaos_seed, n_requests,
+                                                   crashes, drops):
+    """For ANY seed-generated fault schedule against a bursty toy
+    cluster: (a) every rid ends served-or-verdicted; (b) each served
+    request's greedy tokens are bit-identical to the failure-free
+    oracle's (the intersection check — crashes must never corrupt
+    survivors)."""
+    cfg, params = _toy()
+    spec = random_fault_spec([0, 1, 2], 12.0, seed=chaos_seed,
+                             crashes=crashes, stragglers=1, corruptions=1,
+                             dropped_offloads=drops, min_alive=1)
+    sup, rep = _run_supervised(cfg, params, n_requests,
+                               injector=FaultInjector(spec),
+                               retry=RetryPolicy(base_timeout_s=3.0))
+    assert rep.accounted == n_requests, \
+        f"unaccounted rids under {spec.to_json()}"
+    assert all(r.verdict in REJECT_VERDICTS for r in rep.rejects)
+    _, oracle = _run_supervised(cfg, params, n_requests)
+    want = {r.rid: list(map(int, r.tokens))
+            for r in oracle.results if r.sample == 0}
+    got = {r.rid: list(map(int, r.tokens))
+           for r in rep.results if r.sample == 0}
+    for rid in set(want) & set(got):
+        assert got[rid] == want[rid], \
+            f"rid {rid} corrupted under {spec.to_json()}"

@@ -82,6 +82,95 @@ def test_corruption_corrected_next_publish():
     assert good == pytest.approx(10.0)
 
 
+def test_corruption_heals_by_propagation_through_ring():
+    """Fig. 19a: a corrupted digest is passively corrected — every holder
+    of the bad entry gets overwritten once the NEXT genuine publish has
+    propagated the full ring, with no explicit invalidation."""
+    n = 6
+    ring = _ring(n)
+    for sid in range(n):
+        ring.publish_local(sid, _view(sid, goodput=10.0), now=0.0)
+    for r in range(n // 2):
+        ring.step(float(r))
+    ring.corrupt(3, factor=5.0)
+    # every server currently believes the inflated figure
+    holders = [s for s in range(n) if s != 3
+               and ring.views_for(s, 1.0)[3]
+               .services["svc"].theoretical_goodput > 10.0]
+    assert len(holders) == n - 1
+    ring.publish_local(3, _view(3, goodput=10.0), now=2.0)
+    for r in range(n // 2):
+        ring.step(2.0 + r)
+    for s in range(n):
+        if s == 3:
+            continue
+        g = ring.views_for(s, 5.0)[3].services["svc"].theoretical_goodput
+        assert g == pytest.approx(10.0), f"server {s} still corrupted"
+
+
+def test_ring_heals_and_staleness_grows_around_failed_server():
+    """§5.3.3: a failed server is bypassed — the alive ring closes around
+    it, so the analytic staleness bound between its ex-neighbours DROPS
+    (they became adjacent) while the bound THROUGH the dead server is
+    infinite.  Fresh digests keep flowing between survivors."""
+    n = 6
+    ring = _ring(n, interval_s=1.0)
+    before = ring.staleness_bound(1, 3)          # distance 2 via server 2
+    ring.fail(2)
+    assert ring.staleness_bound(1, 2) == float("inf")
+    assert ring.staleness_bound(2, 4) == float("inf")
+    after = ring.staleness_bound(1, 3)           # now adjacent on the ring
+    assert after < before
+    # survivors still exchange: a post-failure publish reaches everyone
+    for sid in range(n):
+        if sid != 2:
+            ring.publish_local(sid, _view(sid), now=10.0)
+    for r in range(n // 2):
+        ring.step(10.0 + r)
+    for sid in range(n):
+        if sid == 2:
+            continue
+        views = ring.views_for(sid, 12.0)
+        assert set(range(n)) - {sid, 2} <= set(views)
+
+
+def test_repair_rejoins_cold_and_relearns():
+    """A restarted server lost its in-memory table: ``repair`` lifts the
+    flag but clears its cache, so it rejoins COLD and re-learns peers one
+    ring hop per round — while its own re-published digest propagates
+    back out to them."""
+    n = 5
+    ring = _ring(n)
+    for sid in range(n):
+        ring.publish_local(sid, _view(sid), now=0.0)
+    for r in range(n // 2):
+        ring.step(float(r))
+    assert len(ring.views_for(2, 1.0)) == n - 1
+    ring.fail(2)
+    ring.repair(2)
+    assert 2 not in ring.failed
+    assert ring.views_for(2, 5.0) == {}          # cold: table wiped
+    ring.publish_local(2, _view(2, goodput=7.0), now=5.0)
+    for r in range(n // 2):
+        ring.step(5.0 + r)
+    # re-learned its peers, and its fresh digest reached them
+    assert set(ring.views_for(2, 8.0)) == {0, 1, 3, 4}
+    g = ring.views_for(0, 8.0)[2].services["svc"].theoretical_goodput
+    assert g == pytest.approx(7.0)
+
+
+def test_repair_without_fail_keeps_cache():
+    """Defensive: repairing a server that never failed must not wipe its
+    table (restart bookkeeping only applies to actual corpses)."""
+    ring = _ring(3)
+    for sid in range(3):
+        ring.publish_local(sid, _view(sid), now=0.0)
+    ring.step(0.0)
+    had = set(ring.views_for(0, 1.0))
+    ring.repair(0)
+    assert set(ring.views_for(0, 1.0)) == had
+
+
 def test_round_cost_scales_with_servers_and_bandwidth():
     slow = sync_round_seconds(1000, 8, bandwidth_gbps=0.5)
     fast = sync_round_seconds(1000, 8, bandwidth_gbps=5.0)
